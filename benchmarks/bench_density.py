@@ -1,0 +1,34 @@
+"""Paper Fig. 21 — tile-density improvement from global/local reordering."""
+import time
+
+import numpy as np
+
+from repro.core import reorder
+from .common import BENCH_DATASETS, emit, load_dataset
+
+BM, BK = 128, 64
+
+
+def run():
+    out = []
+    for name in BENCH_DATASETS:
+        rows, cols, vals, shape = load_dataset(name, max_dim=2048)
+        rho0 = reorder.density_improvement(rows, cols, shape, BM, BK)
+        t0 = time.perf_counter()
+        g = reorder.reorder(rows, cols, shape, BM, BK, enable_local=False,
+                            reorder_cols=True)
+        t_g = (time.perf_counter() - t0) * 1e6
+        rho_g = reorder.density_improvement(
+            rows, cols, shape, BM, BK, row_order=g.row_order,
+            col_order=g.col_order)
+        t0 = time.perf_counter()
+        gl = reorder.reorder(rows, cols, shape, BM, BK, reorder_cols=True)
+        t_gl = (time.perf_counter() - t0) * 1e6
+        rho_gl = reorder.density_improvement(
+            rows, cols, shape, BM, BK, row_order=gl.row_order,
+            col_order=gl.col_order)
+        out.append(emit(f"fig21_density/{name}/GR", t_g,
+                        f"density_improvement={rho_g / max(rho0, 1e-12):.2f}"))
+        out.append(emit(f"fig21_density/{name}/GR_LR", t_gl,
+                        f"density_improvement={rho_gl / max(rho0, 1e-12):.2f}"))
+    return out

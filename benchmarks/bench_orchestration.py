@@ -1,0 +1,38 @@
+"""Paper Fig. 20 — tile orchestrating ablation:
+baseline / +reorder / +reorder+reuse."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spmm
+from .common import emit, load_dataset, time_fn
+
+DATASETS = ["ogbn-arxiv", "pattern1", "F1", "reddit"]
+
+
+def run():
+    rng = np.random.RandomState(4)
+    out = []
+    for name in DATASETS:
+        rows, cols, vals, shape = load_dataset(name, max_dim=2048)
+        b = jnp.asarray(rng.randn(shape[1], 128).astype(np.float32))
+        variants = {
+            "baseline": spmm.SpmmConfig(
+                impl="xla", enable_global_reorder=False,
+                enable_local_reorder=False, enable_reuse_order=False),
+            "reorder": spmm.SpmmConfig(
+                impl="xla", enable_reuse_order=False, reorder_cols=True),
+            "reorder_reuse": spmm.SpmmConfig(impl="xla", reorder_cols=True),
+        }
+        base_us = None
+        for vname, cfg in variants.items():
+            plan = spmm.prepare(rows, cols, vals, shape, cfg)
+            us = time_fn(lambda p=plan: spmm.execute(p, b))
+            if vname == "baseline":
+                base_us = us
+            sd = plan.stats_dict
+            out.append(emit(
+                f"fig20_orchestration/{name}/{vname}", us,
+                f"speedup={base_us / us:.2f};"
+                f"tile_density={sd['tile_density']:.4f};"
+                f"steps={sd['num_steps']};reuse={sd['reuse_factor']:.2f}"))
+    return out

@@ -1,0 +1,36 @@
+"""Roofline report — reads the dry-run artifacts (launch/dryrun.py output)
+and emits one row per (arch x shape) single-pod cell."""
+import glob
+import json
+import os
+
+from .common import emit
+
+ART = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
+
+
+def run():
+    out = []
+    files = sorted(glob.glob(os.path.join(ART, "*pod16x16.json")))
+    if not files:
+        out.append(emit("roofline/missing", 0.0,
+                        f"no_artifacts_in={ART};run=python -m repro.launch.dryrun"))
+        return out
+    for f in files:
+        rec = json.load(open(f))
+        name = f"roofline/{rec['arch']}/{rec['shape']}"
+        if rec["status"] == "skip":
+            out.append(emit(name, 0.0, f"skip={rec['reason']}"))
+            continue
+        if rec["status"] != "ok" or "roofline" not in rec:
+            out.append(emit(name, 0.0, f"status={rec['status']}"))
+            continue
+        r = rec["roofline"]
+        out.append(emit(
+            name, r["bound_s"] * 1e6,
+            f"dominant={r['dominant']};compute_s={r['compute_s']:.4f};"
+            f"memory_s={r['memory_s']:.4f};collective_s={r['collective_s']:.4f};"
+            f"roofline_fraction={r['roofline_fraction']:.3f};"
+            f"useful_flops_ratio={rec.get('useful_flops_ratio', 0):.3f};"
+            f"mem_gb={rec['memory']['total_per_device_gb']}"))
+    return out

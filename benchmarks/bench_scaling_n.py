@@ -1,0 +1,27 @@
+"""Paper Fig. 23 — GFLOPs scaling with the dense-operand width N."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spmm
+from .common import emit, load_dataset, spmm_gflops, time_fn
+
+NS = [32, 64, 128, 256, 512]
+
+
+def run():
+    rng = np.random.RandomState(7)
+    out = []
+    for name in ("pattern1", "F1", "reddit"):
+        rows, cols, vals, shape = load_dataset(name, max_dim=2048)
+        plan = spmm.prepare(rows, cols, vals, shape, spmm.SpmmConfig(impl="xla"))
+        gf32 = None
+        for n in NS:
+            b = jnp.asarray(rng.randn(shape[1], n).astype(np.float32))
+            us = time_fn(lambda p=plan, bb=b: spmm.execute(p, bb))
+            gf = spmm_gflops(len(rows), n, us)
+            if n == 32:
+                gf32 = gf
+            out.append(emit(
+                f"fig23_scaling/{name}/N{n}", us,
+                f"gflops={gf:.2f};improvement_vs_n32={gf / gf32:.2f}"))
+    return out

@@ -1,0 +1,29 @@
+"""Paper Fig. 19 — sensitivity to the initial sparsity threshold alpha."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spmm
+from .common import emit, load_dataset, time_fn
+
+ALPHAS = [1e-3, 2e-3, 3e-3, 5e-3, 1e-2]
+
+
+def run():
+    rng = np.random.RandomState(3)
+    out = []
+    for name in ("ogbn-arxiv", "reddit"):
+        rows, cols, vals, shape = load_dataset(name, max_dim=2048)
+        b = jnp.asarray(rng.randn(shape[1], 128).astype(np.float32))
+        best = float("inf")
+        results = []
+        for a in ALPHAS:
+            plan = spmm.prepare(rows, cols, vals, shape,
+                                spmm.SpmmConfig(impl="xla", alpha=a))
+            us = time_fn(lambda p=plan: spmm.execute(p, b))
+            best = min(best, us)
+            results.append((a, us, plan.stats_dict["fringe_fraction"]))
+        for a, us, ff in results:
+            out.append(emit(
+                f"fig19_threshold/{name}/alpha_{a:g}", us,
+                f"rel_to_best={us / best:.3f};fringe_frac={ff:.3f}"))
+    return out

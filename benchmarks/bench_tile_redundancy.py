@@ -1,0 +1,22 @@
+"""Paper Table 1 — fraction of redundant zeros in active tiles vs tile size."""
+import time
+
+from repro.core.formats import active_tile_zero_fraction
+from .common import emit, load_dataset
+
+DATASETS = ["cora", "reddit", "wiki-RfA", "mouse_gene", "F1"]
+TILES = [4, 16, 32, 64, 128]
+
+
+def run():
+    out = []
+    for name in DATASETS:
+        rows, cols, _, shape = load_dataset(name, max_dim=2048)
+        fracs = []
+        t0 = time.perf_counter()
+        for t in TILES:
+            fracs.append(active_tile_zero_fraction(rows, cols, shape, t))
+        us = (time.perf_counter() - t0) * 1e6
+        derived = ";".join(f"t{t}={f:.3f}" for t, f in zip(TILES, fracs))
+        out.append(emit(f"table1_redundancy/{name}", us, derived))
+    return out

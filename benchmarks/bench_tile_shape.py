@@ -1,0 +1,47 @@
+"""Paper Fig. 22 — tile-shape comparison on TPU constraints.
+
+On Ascend the paper derives (128, 256, 64) from L0A/L0B/L0C budgets; here
+the same trade is re-derived under VMEM + MXU/lane alignment
+(core/reuse.select_tile_shape) and each candidate is scored by the paper's
+three criteria: double-buffered residency, MXU-aligned tile volume
+(throughput), and input traffic per unit volume.  Wall-clock is the
+interpret-mode kernel on a fixed workload (relative only; the objective
+column is the TPU-side score).
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.reuse import TileShape, select_tile_shape
+from repro.core import spmm
+from .common import emit, load_dataset, time_fn
+
+CANDIDATES = [
+    (16, 16, 16), (32, 32, 32), (64, 64, 64), (128, 128, 128),
+    (128, 256, 64), (256, 256, 64), (128, 512, 32),
+]
+
+
+def run():
+    out = []
+    chosen = select_tile_shape(n_cols=256)
+    rows, cols, vals, shape = load_dataset("reddit", max_dim=1024)
+    rng = np.random.RandomState(5)
+    b = jnp.asarray(rng.randn(shape[1], 512).astype(np.float32))
+    for bm, bn, bk in CANDIDATES:
+        t = TileShape(bm, bn, bk)
+        vmem_ok = t.vmem_bytes() <= 8 * 1024 * 1024
+        mxu_eff = min(bm, 128) * min(bn, 128) * min(bk, 128) / (128 ** 3)
+        traffic_per_vol = t.input_traffic() / t.volume
+        # executable proxy: XLA path with this packing granularity
+        cfg = spmm.SpmmConfig(impl="xla", bm=bm, bk=bk, bn=min(bn, 512))
+        plan = spmm.prepare(rows, cols, vals, shape, cfg)
+        us = time_fn(lambda p=plan: spmm.execute(p, b[:, :min(bn, 512)]))
+        out.append(emit(
+            f"fig22_tile_shape/{bm}x{bn}x{bk}", us,
+            f"vmem_ok={vmem_ok};mxu_eff={mxu_eff:.2f};"
+            f"traffic_per_volume={traffic_per_vol:.3f};"
+            f"selected={(bm, bn, bk) == (chosen.bm, chosen.bn, chosen.bk)}"))
+    out.append(emit(
+        "fig22_tile_shape/selected", 0.0,
+        f"choice={chosen.bm}x{chosen.bn}x{chosen.bk}"))
+    return out

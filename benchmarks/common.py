@@ -1,0 +1,55 @@
+"""Shared benchmark utilities: timing, datasets, CSV emission.
+
+Every bench prints ``name,us_per_call,derived`` rows (one per paper
+table/figure cell).  Wall-clock numbers are CPU-host timings of the XLA
+paths — meaningful as *relative* comparisons that exercise the framework's
+coordination logic; kernel-level TPU projections live in the roofline
+artifacts (benchmarks/bench_roofline.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.data import graphs
+
+# scaled-down dataset panel (paper Table 2 character, CPU-friendly sizes)
+BENCH_DATASETS = [
+    "cora", "wiki-RfA", "ogbn-arxiv", "pattern1", "human_gene1", "F1",
+    "mouse_gene", "reddit",
+]
+
+
+def load_dataset(name: str, max_dim: int = 4096):
+    spec = graphs.PAPER_DATASETS[name]
+    spec = dataclasses.replace(spec, m=min(spec.m, max_dim),
+                               k=min(spec.k, max_dim))
+    rows, cols, vals = graphs.generate(spec)
+    return rows, cols, vals, (spec.m, spec.k)
+
+
+def time_fn(fn: Callable[[], jax.Array], repeats: int = 3,
+            warmup: int = 1) -> float:
+    """Best-of wall time in microseconds (compile excluded)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str) -> str:
+    line = f"{name},{us_per_call:.1f},{derived}"
+    print(line, flush=True)
+    return line
+
+
+def spmm_gflops(nnz: int, n: int, us: float) -> float:
+    return 2.0 * nnz * n / (us * 1e-6) / 1e9

@@ -1,0 +1,91 @@
+"""End-to-end driver (the paper's own workload): GCN training where every
+aggregation is a NeutronSparse coordinated SpMM, with the adaptive
+coordinator re-balancing the engine split across epochs.
+
+    PYTHONPATH=src python examples/gcn_training.py [--epochs 200]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SpmmConfig
+from repro.core.spmm import SpMMOperator
+from repro.data import graphs
+
+
+def make_graph(n=2048, avg_deg=12, n_classes=16, seed=0, homophily=0.85):
+    """Stochastic block model with power-law degrees: labels follow the
+    community structure, so aggregation carries the class signal."""
+    rng = np.random.RandomState(seed)
+    labels = (np.arange(n) * n_classes // n).astype(np.int32)
+    block = n // n_classes
+    deg = np.minimum((rng.pareto(1.3, n) + 1) * avg_deg / 2, n // 4).astype(int)
+    deg = np.maximum(deg, 2)
+    rows = np.repeat(np.arange(n), deg)
+    same = rng.rand(rows.size) < homophily
+    intra = (labels[rows] * block + rng.randint(0, block, rows.size))
+    inter = rng.randint(0, n, rows.size)
+    cols = np.where(same, intra, inter)
+    # symmetric normalize: A_hat = D^-1/2 (A + I) D^-1/2
+    rows = np.concatenate([rows, np.arange(n)])
+    cols = np.concatenate([cols, np.arange(n)])
+    key = np.unique(rows * n + cols)
+    rows, cols = key // n, key % n
+    d = np.bincount(rows, minlength=n).astype(np.float32)
+    vals = (d[rows] ** -0.5) * (d[cols] ** -0.5)
+    feats = rng.randn(n, 64).astype(np.float32)
+    feats[:, :n_classes] += 0.4 * np.eye(n_classes, dtype=np.float32)[labels]
+    return rows, cols, vals, feats, labels, n_classes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--epochs", type=int, default=200)
+    ap.add_argument("--hidden", type=int, default=64)
+    args = ap.parse_args()
+
+    rows, cols, vals, feats, labels, n_classes = make_graph()
+    n = feats.shape[0]
+    agg = SpMMOperator(rows, cols, vals, (n, n), SpmmConfig(impl="xla"))
+    print(f"graph: {n} nodes, {len(rows)} edges; "
+          f"alpha={agg.plan.stats_dict['alpha']:.4f}, "
+          f"fringe={agg.plan.stats_dict['fringe_fraction']:.1%}")
+
+    rng = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(rng)
+    params = {
+        "w1": jax.random.normal(k1, (64, args.hidden)) * 0.1,
+        "w2": jax.random.normal(k2, (args.hidden, n_classes)) * 0.1,
+    }
+    x = jnp.asarray(feats)
+    y = jnp.asarray(labels)
+
+    def loss_fn(p):
+        h = jax.nn.relu(agg(x @ p["w1"]))          # SpMM layer 1
+        logits = agg(h @ p["w2"])                  # SpMM layer 2
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], 1))
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    lr = 2.0
+    t0 = time.perf_counter()
+    for epoch in range(args.epochs):
+        loss, grads = grad_fn(params)
+        params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        if epoch % max(args.epochs // 10, 1) == 0:
+            print(f"epoch {epoch:4d}  loss {float(loss):.4f}")
+    dt = time.perf_counter() - t0
+
+    h = jax.nn.relu(agg(x @ params["w1"]))
+    acc = float(jnp.mean(jnp.argmax(agg(h @ params["w2"]), -1) == y))
+    print(f"final loss {float(loss):.4f}, train acc {acc:.3f}, "
+          f"{args.epochs} epochs in {dt:.1f}s "
+          f"({1e3 * dt / args.epochs:.1f} ms/epoch)")
+    assert acc > 0.9, "GCN failed to fit planted communities"
+
+
+if __name__ == "__main__":
+    main()

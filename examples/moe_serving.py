@@ -1,0 +1,50 @@
+"""Batched MoE serving: the token->expert dispatch is the block-sparse SpMM
+the paper targets (dense core = capacity-packed expert GEMMs on the matrix
+path; overflow = fringe).  Serves a llama4-family reduced model with
+batched requests through the prefill/decode engine.
+
+    PYTHONPATH=src python examples/moe_serving.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import model as model_lib
+from repro.serve import ServeConfig, ServeEngine
+
+
+def main():
+    arch = get_arch("llama4-scout-17b-a16e")
+    cfg = arch.smoke  # same family: MoE top-1 + shared expert
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+
+    scfg = ServeConfig(batch_size=4, max_len=96)
+    eng = ServeEngine(cfg, params, scfg)
+
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                                 cfg.vocab_size)
+    t0 = time.perf_counter()
+    tokens, meta = eng.generate(prompts, 24)
+    dt = time.perf_counter() - t0
+    print(f"served batch of {scfg.batch_size}: prompt {meta['prompt_len']} "
+          f"tokens, generated {meta['generated']} each")
+    print(f"wall {dt:.2f}s -> "
+          f"{scfg.batch_size * meta['generated'] / dt:.1f} tok/s (batch)")
+    print("sample continuation token ids:", np.asarray(tokens[0])[:10])
+
+    # expert load: route the prompt batch through the router to show the
+    # dispatch sparsity pattern the SpMM scheduler consumes
+    x = params["embed"]["table"][prompts.reshape(-1)]
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        params["stack"]["groups"]["slot0"]["moe"]["router"][0]
+                        .astype(jnp.float32))
+    top1 = jnp.argmax(logits, -1)
+    load = np.bincount(np.asarray(top1), minlength=cfg.moe_num_experts)
+    print("expert load histogram (top-1 routing):", load.tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Quickstart: coordinated SpMM on a power-law graph in ~20 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SpmmConfig, neutron_spmm, prepare, execute
+from repro.data import graphs
+
+
+def main():
+    # 1) a skewed sparse matrix (reddit-like character, scaled down)
+    spec = graphs.PAPER_DATASETS["ogbn-arxiv"]
+    rows, cols, vals, shape = *graphs.generate(spec), (spec.m, spec.k)
+    stats = graphs.dataset_stats(rows, cols, shape)
+    print(f"A: {shape}, nnz={int(stats['nnz'])}, "
+          f"density={stats['density']:.2e}, skew={stats['skew_top10']:.2f}")
+
+    # 2) prepare once (cost-model split -> reorder -> tile stream -> fringe)
+    plan = prepare(rows, cols, vals, shape, SpmmConfig(impl="xla"))
+    sd = plan.stats_dict
+    print(f"alpha={sd['alpha']:.4f}  fringe={sd['fringe_fraction']:.1%} of nnz"
+          f"  tile_density={sd['tile_density']:.3f}"
+          f"  reuse_factor={sd['reuse_factor']:.2f}")
+
+    # 3) execute against any dense operand
+    b = jnp.asarray(np.random.RandomState(0).randn(shape[1], 128),
+                    jnp.float32)
+    out = execute(plan, b)
+
+    # 4) verify vs dense reference
+    dense = np.zeros(shape, np.float32)
+    dense[rows, cols] = vals
+    err = float(jnp.abs(out - dense @ np.asarray(b)).max())
+    print(f"C = A @ B -> {out.shape}, max abs err vs dense: {err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

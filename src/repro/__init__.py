@@ -1,0 +1,2 @@
+"""repro — NeutronSparse (coordination-first SpMM) on TPU in JAX/Pallas."""
+__version__ = "0.1.0"

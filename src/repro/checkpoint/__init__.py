@@ -1,0 +1,5 @@
+"""Sharded numpy checkpointing with elastic restore."""
+from . import checkpoint
+from .checkpoint import latest_step, restore, restore_resharded, save
+
+__all__ = ["checkpoint", "save", "restore", "restore_resharded", "latest_step"]

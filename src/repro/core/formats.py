@@ -1,0 +1,304 @@
+"""Sparse matrix containers used by NeutronSparse.
+
+Three formats mirror the paper's data organization (§5.2.2, §6):
+
+- ``COOMatrix``      — irregular fringes routed to the vector ("AIV") path.
+                       Stored row-sorted so the gather kernel can revisit a
+                       resident output row across consecutive nonzeros.
+- ``BlockELL``       — the dense core routed to the matrix ("AIC") path.
+                       Rows are grouped into ``bm``-row windows; within each
+                       window only *active* ``bk``-wide column blocks are
+                       stored (block-granular column compaction — the paper's
+                       BitMap + per-tile column gather, adapted to MXU/VMEM
+                       block granularity).
+- ``CSRMatrix``      — host-side scratch for preprocessing scans.
+
+Host-side preprocessing (partitioning / reordering) operates on numpy; the
+packed execution formats carry ``jnp`` arrays and are registered pytrees so
+they can cross ``jax.jit`` boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# COO
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class COOMatrix:
+    """Row-sorted COO. ``shape`` is static metadata."""
+
+    rows: Array  # (nnz_padded,) int32, row-sorted; padding repeats last row
+    cols: Array  # (nnz_padded,) int32; padding = 0
+    vals: Array  # (nnz_padded,) float;  padding = 0.0
+    shape: Tuple[int, int]
+    nnz: int  # true (unpadded) nonzero count
+
+    def tree_flatten(self):
+        return (self.rows, self.cols, self.vals), (self.shape, self.nnz)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        rows, cols, vals = children
+        shape, nnz = aux
+        return cls(rows, cols, vals, shape, nnz)
+
+    @property
+    def density(self) -> float:
+        m, k = self.shape
+        return self.nnz / float(max(m * k, 1))
+
+
+def coo_from_dense(a: np.ndarray, pad_to: int = 8) -> COOMatrix:
+    """Build a row-sorted, padded COOMatrix from a dense numpy array."""
+    rows, cols = np.nonzero(a)
+    vals = a[rows, cols]
+    return coo_from_arrays(rows, cols, vals, a.shape, pad_to=pad_to)
+
+
+def coo_from_arrays(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+    shape: Tuple[int, int],
+    pad_to: int = 8,
+) -> COOMatrix:
+    """Row-sort and pad raw COO triplets."""
+    rows = np.asarray(rows, np.int32)
+    cols = np.asarray(cols, np.int32)
+    vals = np.asarray(vals)
+    order = np.lexsort((cols, rows))
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    nnz = int(rows.shape[0])
+    padded = max(pad_to, ((nnz + pad_to - 1) // pad_to) * pad_to) if nnz else pad_to
+    pad = padded - nnz
+    if pad:
+        last_row = rows[-1] if nnz else np.int32(0)
+        rows = np.concatenate([rows, np.full(pad, last_row, np.int32)])
+        cols = np.concatenate([cols, np.zeros(pad, np.int32)])
+        vals = np.concatenate([vals, np.zeros(pad, vals.dtype if nnz else np.float32)])
+    return COOMatrix(
+        rows=jnp.asarray(rows),
+        cols=jnp.asarray(cols),
+        vals=jnp.asarray(vals),
+        shape=tuple(shape),
+        nnz=nnz,
+    )
+
+
+def dense_from_coo(coo: COOMatrix) -> np.ndarray:
+    out = np.zeros(coo.shape, dtype=np.asarray(coo.vals).dtype)
+    rows = np.asarray(coo.rows)[: coo.nnz]
+    cols = np.asarray(coo.cols)[: coo.nnz]
+    vals = np.asarray(coo.vals)[: coo.nnz]
+    np.add.at(out, (rows, cols), vals)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# CSR (host-side scratch)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class CSRMatrix:
+    indptr: np.ndarray  # (m+1,)
+    indices: np.ndarray  # (nnz,)
+    data: np.ndarray  # (nnz,)
+    shape: Tuple[int, int]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    def row_lengths(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+
+def csr_from_coo_np(
+    rows: np.ndarray, cols: np.ndarray, vals: np.ndarray, shape: Tuple[int, int]
+) -> CSRMatrix:
+    order = np.lexsort((cols, rows))
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    indptr = np.zeros(shape[0] + 1, np.int64)
+    np.add.at(indptr, rows + 1, 1)
+    np.cumsum(indptr, out=indptr)
+    return CSRMatrix(indptr=indptr, indices=cols.astype(np.int32), data=vals, shape=tuple(shape))
+
+
+def csr_from_dense(a: np.ndarray) -> CSRMatrix:
+    rows, cols = np.nonzero(a)
+    return csr_from_coo_np(rows.astype(np.int32), cols.astype(np.int32), a[rows, cols], a.shape)
+
+
+# ---------------------------------------------------------------------------
+# BlockELL — the matrix-engine ("AIC") execution format
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BlockELL:
+    """Windowed, block-compacted sparse format for the MXU path.
+
+    Rows are grouped into ``num_windows`` windows of ``bm`` rows.  Each window
+    stores up to ``max_blocks`` *active* ``bk``-wide column blocks.  Inactive
+    slots point at block 0 with all-zero values (safe, branch-free in the
+    kernel).  ``window_rows[w]`` maps a window back to its first original row
+    (windows may be permutations of the original rows after reordering).
+    """
+
+    block_cols: Array  # (num_windows, max_blocks) int32 — column-block ids
+    num_blocks: Array  # (num_windows,) int32 — active block count per window
+    values: Array      # (num_windows, max_blocks, bm, bk)
+    row_map: Array     # (num_windows * bm,) int32 — packed row -> original row
+    shape: Tuple[int, int]
+    bm: int
+    bk: int
+    nnz: int
+
+    def tree_flatten(self):
+        return (
+            (self.block_cols, self.num_blocks, self.values, self.row_map),
+            (self.shape, self.bm, self.bk, self.nnz),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        block_cols, num_blocks, values, row_map = children
+        shape, bm, bk, nnz = aux
+        return cls(block_cols, num_blocks, values, row_map, shape, bm, bk, nnz)
+
+    @property
+    def num_windows(self) -> int:
+        return int(self.block_cols.shape[0])
+
+    @property
+    def max_blocks(self) -> int:
+        return int(self.block_cols.shape[1])
+
+    @property
+    def tile_density(self) -> float:
+        """Mean nonzero fraction inside stored (active) tiles."""
+        total = float(np.sum(np.asarray(self.num_blocks))) * self.bm * self.bk
+        return self.nnz / total if total else 0.0
+
+
+def block_ell_from_coo(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+    shape: Tuple[int, int],
+    bm: int,
+    bk: int,
+    row_order: np.ndarray | None = None,
+    max_blocks: int | None = None,
+    dtype=np.float32,
+) -> BlockELL:
+    """Pack COO triplets into BlockELL, optionally under a row permutation.
+
+    ``row_order`` gives the packed order of original rows (reordering output);
+    identity if None.  Windows are consecutive ``bm``-row groups of that order.
+    """
+    m, k = shape
+    rows = np.asarray(rows, np.int64)
+    cols = np.asarray(cols, np.int64)
+    vals = np.asarray(vals)
+    if row_order is None:
+        row_order = np.arange(m, dtype=np.int64)
+    else:
+        row_order = np.asarray(row_order, np.int64)
+    assert row_order.shape[0] == m, "row_order must cover every row"
+
+    inv = np.empty(m, np.int64)
+    inv[row_order] = np.arange(m)
+    prow = inv[rows]  # packed row index of each nnz
+
+    num_windows = (m + bm - 1) // bm
+    m_pad = num_windows * bm
+    wids = prow // bm
+    kblk = cols // bk
+    num_kblocks = (k + bk - 1) // bk
+
+    # Active (window, kblock) pairs
+    keys = wids * num_kblocks + kblk
+    uniq, inv_idx = np.unique(keys, return_inverse=True)
+    uw = (uniq // num_kblocks).astype(np.int64)
+    ub = (uniq % num_kblocks).astype(np.int64)
+
+    counts = np.zeros(num_windows, np.int64)
+    np.add.at(counts, uw, 1)
+    needed = int(counts.max()) if counts.size else 1
+    if max_blocks is None:
+        max_blocks = max(1, needed)
+    elif needed > max_blocks:
+        raise ValueError(f"max_blocks={max_blocks} < needed {needed}")
+
+    # slot of each active pair within its window (stable: uniq is sorted)
+    slot = np.zeros(uniq.shape[0], np.int64)
+    if uniq.size:
+        first = np.concatenate([[True], uw[1:] != uw[:-1]])
+        run_start = np.maximum.accumulate(np.where(first, np.arange(uniq.size), 0))
+        slot = np.arange(uniq.size) - run_start
+
+    block_cols = np.zeros((num_windows, max_blocks), np.int32)
+    block_cols[uw, slot] = ub.astype(np.int32)
+    num_blocks = counts.astype(np.int32)
+
+    values = np.zeros((num_windows, max_blocks, bm, bk), dtype)
+    nz_slot = slot[inv_idx]
+    np.add.at(values, (wids, nz_slot, prow % bm, cols % bk), vals.astype(dtype))
+
+    row_map = np.full(m_pad, -1, np.int64)
+    row_map[: m] = row_order
+    return BlockELL(
+        block_cols=jnp.asarray(block_cols),
+        num_blocks=jnp.asarray(num_blocks),
+        values=jnp.asarray(values),
+        row_map=jnp.asarray(row_map.astype(np.int32)),
+        shape=tuple(shape),
+        bm=bm,
+        bk=bk,
+        nnz=int(vals.shape[0]),
+    )
+
+
+def dense_from_block_ell(be: BlockELL) -> np.ndarray:
+    """Reconstruct the dense matrix (oracle / tests)."""
+    m, k = be.shape
+    out = np.zeros((m, k), np.asarray(be.values).dtype)
+    bc = np.asarray(be.block_cols)
+    nb = np.asarray(be.num_blocks)
+    vv = np.asarray(be.values)
+    rm = np.asarray(be.row_map)
+    for w in range(be.num_windows):
+        for s in range(int(nb[w])):
+            c0 = int(bc[w, s]) * be.bk
+            for i in range(be.bm):
+                orig = rm[w * be.bm + i]
+                if orig < 0:
+                    continue
+                seg = vv[w, s, i]
+                klen = min(be.bk, k - c0)
+                out[orig, c0 : c0 + klen] += seg[:klen]
+    return out
+
+
+def active_tile_zero_fraction(
+    rows: np.ndarray, cols: np.ndarray, shape: Tuple[int, int], t: int
+) -> float:
+    """Fraction of zeros inside active t×t tiles (paper Table 1 metric)."""
+    m, k = shape
+    tr = np.asarray(rows) // t
+    tc = np.asarray(cols) // t
+    keys = tr.astype(np.int64) * ((k + t - 1) // t) + tc
+    active = np.unique(keys).size
+    if active == 0:
+        return 0.0
+    total_cells = active * t * t
+    return 1.0 - len(rows) / total_cells

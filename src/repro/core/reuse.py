@@ -1,0 +1,173 @@
+"""Hierarchical tile reuse (paper §6.2), adapted to the TPU memory hierarchy.
+
+Intra-core (§6.2.2) — tile-shape selection.  The paper derives
+(M, N, K) = (128, 256, 64) on Ascend from double-buffered L0A/L0B/L0C
+capacities, MXU utilization, input traffic, and 512-byte write-back
+alignment.  We re-derive the same trade on TPU constants:
+
+  - operands and output live in VMEM (~16 MB/core, shared, double-buffered
+    by the Pallas pipeline, so a tile set may claim <= VMEM_BUDGET/2);
+  - MXU is a 128x128 systolic array: bm, bn want to be multiples of 128,
+    bk a multiple of 8 (sublane) with diminishing returns past 128;
+  - write-back prefers bn a multiple of the 128-lane register width
+    (TPU's analogue of the 512 B FixPipe transaction).
+
+Inter-core (§6.2.1) — schedule-induced residency.  Ascend pins hot B rows
+in shared L2; TPU has no software-pinnable shared cache, but the Pallas
+grid pipeline *elides the HBM->VMEM copy when consecutive grid steps map to
+the same block*.  Ordering windows cluster-major therefore keeps each hot
+B block resident across all windows of a cluster — the same reuse objective
+expressed through schedule order instead of cache control.  The planner
+also enforces the paper's working-set bound (<= 80% of a capacity budget)
+by splitting oversized clusters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .cost_model import MXU_DIM, SUBLANES, VMEM_BYTES, VPU_LANES
+
+
+@dataclasses.dataclass(frozen=True)
+class TileShape:
+    bm: int
+    bn: int
+    bk: int
+
+    @property
+    def volume(self) -> int:
+        return self.bm * self.bn * self.bk
+
+    def vmem_bytes(self, in_dtype_bytes: int = 2, acc_dtype_bytes: int = 4) -> int:
+        a = self.bm * self.bk * in_dtype_bytes
+        b = self.bk * self.bn * in_dtype_bytes
+        c = self.bm * self.bn * acc_dtype_bytes
+        return a + b + c
+
+    def input_traffic(self, in_dtype_bytes: int = 2) -> int:
+        """Per-tile HBM->VMEM bytes (the paper's 2(MK+NK) criterion)."""
+        return (self.bm * self.bk + self.bk * self.bn) * in_dtype_bytes
+
+
+def select_tile_shape(
+    n_cols: int,
+    vmem_budget: int = VMEM_BYTES // 2,  # double buffering halves the claim
+    in_dtype_bytes: int = 2,
+    acc_dtype_bytes: int = 4,
+    bm_candidates: Tuple[int, ...] = (128, 256, 512),
+    bn_candidates: Tuple[int, ...] = (128, 256, 512, 1024),
+    bk_candidates: Tuple[int, ...] = (32, 64, 128, 256),
+) -> TileShape:
+    """Re-derive the paper's (M,N,K) trade for TPU.
+
+    Objective ordering mirrors §6.2.2: (1) respect capacity, (2) maximize
+    MXU-aligned tile volume (throughput), (3) among ties minimize input
+    traffic per unit volume, (4) prefer lane-aligned bn.
+    """
+    best: Optional[TileShape] = None
+    best_key = None
+    for bm in bm_candidates:
+        if bm % MXU_DIM:
+            continue
+        for bn in bn_candidates:
+            if bn % VPU_LANES or bn > max(n_cols, VPU_LANES):
+                continue
+            for bk in bk_candidates:
+                if bk % SUBLANES:
+                    continue
+                t = TileShape(bm, bn, bk)
+                if t.vmem_bytes(in_dtype_bytes, acc_dtype_bytes) > vmem_budget:
+                    continue
+                # effective MXU throughput saturates once bk >= 128
+                eff = min(bk, MXU_DIM) / MXU_DIM
+                key = (
+                    t.volume * eff,                      # maximize
+                    -t.input_traffic(in_dtype_bytes) / t.volume,  # then minimize traffic/vol
+                    bn % 128 == 0,
+                )
+                if best_key is None or key > best_key:
+                    best, best_key = t, key
+    assert best is not None, "no feasible tile shape"
+    return best
+
+
+@dataclasses.dataclass
+class ReusePlan:
+    """Grid-order plan for the matrix path."""
+
+    window_order: np.ndarray       # permutation of window ids (cluster-major)
+    est_b_blocks_loaded: int       # B-block loads after copy elision
+    est_b_blocks_naive: int        # B-block loads with no reuse ordering
+    working_set_blocks: int        # max distinct B blocks touched by a cluster
+
+    @property
+    def reuse_factor(self) -> float:
+        return self.est_b_blocks_naive / max(self.est_b_blocks_loaded, 1)
+
+
+def plan_window_order(
+    block_cols: np.ndarray,
+    num_blocks: np.ndarray,
+    cluster_of_window: np.ndarray,
+    capacity_blocks: Optional[int] = None,
+    capacity_frac: float = 0.8,
+) -> ReusePlan:
+    """Order windows cluster-major, then by leading block id, to maximize
+    consecutive same-B-block grid steps (copy elision).
+
+    ``capacity_blocks`` bounds the distinct-B working set per cluster
+    (paper: <=80% of L2); clusters exceeding it are split into chunks.
+    """
+    nw = block_cols.shape[0]
+    if nw == 0:
+        return ReusePlan(np.zeros(0, np.int64), 0, 0, 0)
+    lead = np.where(num_blocks > 0, block_cols[:, 0], -1)
+    order = np.lexsort((lead, cluster_of_window))
+
+    # segment the scan order: cluster boundaries, plus capacity splits
+    boundaries = {0}
+    if capacity_blocks is not None:
+        cap = max(1, int(capacity_blocks * capacity_frac))
+        seen: set = set()
+        prev_cluster = cluster_of_window[order[0]]
+        for i, w in enumerate(order):
+            blocks = set(block_cols[w, : num_blocks[w]].tolist())
+            if cluster_of_window[w] != prev_cluster or len(seen | blocks) > cap:
+                boundaries.add(i)
+                seen = set()
+                prev_cluster = cluster_of_window[w]
+            seen |= blocks
+    else:
+        for i in range(1, nw):
+            if cluster_of_window[order[i]] != cluster_of_window[order[i - 1]]:
+                boundaries.add(i)
+
+    # estimate copy-elision efficiency: a B block is loaded when the slot-0
+    # block id changes between consecutive grid steps of the scan order;
+    # residency (and elision) resets at every segment boundary
+    naive = int(num_blocks.sum())
+    loaded = 0
+    ws = 0
+    cur_ws: set = set()
+    prev_lead = -1
+    for i, w in enumerate(order):
+        if i in boundaries:
+            ws = max(ws, len(cur_ws))
+            cur_ws = set()
+            prev_lead = -1
+        blocks = block_cols[w, : num_blocks[w]].tolist()
+        cur_ws.update(blocks)
+        for j, b in enumerate(blocks):
+            if not (j == 0 and b == prev_lead):
+                loaded += 1
+        prev_lead = blocks[0] if blocks else -1
+    ws = max(ws, len(cur_ws))
+    return ReusePlan(
+        window_order=order.astype(np.int64),
+        est_b_blocks_loaded=loaded,
+        est_b_blocks_naive=naive,
+        working_set_blocks=ws,
+    )

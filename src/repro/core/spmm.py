@@ -1,0 +1,385 @@
+"""NeutronSparse public API: plan preparation + coordinated dual-path SpMM.
+
+``prepare`` runs the full preprocessing pipeline from the paper's workflow
+(Fig. 7): cost-model split -> two-stage extraction -> global-local reorder
+-> BlockELL packing + flat tile stream -> reuse-ordered grid -> fringe COO.
+``execute`` runs both engine paths and merges their contributions.
+``NeutronSpMM`` wraps an adaptive epoch loop with runtime migration.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from . import formats, partition, reorder, reuse
+from .coordinator import AdaptiveCoordinator
+from .cost_model import EngineCostModel, default_cost_model
+
+
+@dataclasses.dataclass(frozen=True)
+class SpmmConfig:
+    bm: int = 128
+    bk: int = 64
+    bn: int = 256
+    alpha: Optional[float] = None          # override Eq. 3 threshold
+    enable_global_reorder: bool = True
+    enable_local_reorder: bool = True
+    reorder_cols: bool = False             # requires caller to pre-permute B
+    enable_col_stage: bool = True          # stage-2 column extraction
+    enable_reuse_order: bool = True
+    max_clusters: int = 64
+    impl: ops.Impl = "xla"
+    seed: int = 0
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class NeutronPlan:
+    """Prepared execution plan (jax pytree; shapes static per plan)."""
+
+    # matrix path: flat active-tile stream (window-major under reuse order)
+    step_window: jax.Array   # (T,) int32
+    step_col: jax.Array      # (T,) int32
+    flat_values: jax.Array   # (T, bm, bk)
+    core_row_map: jax.Array  # (num_windows*bm,) int32 -> original row (-1 pad)
+    # vector path: packed row-sorted fringe COO
+    fringe_rows: jax.Array   # (nnz_f,) int32 packed ids
+    fringe_cols: jax.Array   # (nnz_f,) int32
+    fringe_vals: jax.Array   # (nnz_f,)
+    fringe_row_ids: jax.Array  # (n_fringe_rows,) int32 original ids
+    col_perm: jax.Array      # (K,) int32 — B row permutation (identity unless reorder_cols)
+
+    shape: Tuple[int, int]
+    config: SpmmConfig
+    stats: Tuple  # immutable (key, value) pairs
+
+    def tree_flatten(self):
+        leaves = (
+            self.step_window, self.step_col, self.flat_values, self.core_row_map,
+            self.fringe_rows, self.fringe_cols, self.fringe_vals,
+            self.fringe_row_ids, self.col_perm,
+        )
+        return leaves, (self.shape, self.config, self.stats)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, *aux)
+
+    @property
+    def num_windows(self) -> int:
+        return self.core_row_map.shape[0] // self.config.bm
+
+    @property
+    def stats_dict(self) -> Dict:
+        return dict(self.stats)
+
+
+def prepare(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+    shape: Tuple[int, int],
+    config: SpmmConfig = SpmmConfig(),
+    cost_model: Optional[EngineCostModel] = None,
+) -> NeutronPlan:
+    """Host-side preprocessing (one-time; amortized across epochs)."""
+    m, k = shape
+    cm = cost_model or default_cost_model(n_cols=config.bn)
+    t0 = time.perf_counter()
+
+    # 1) heterogeneous workload partitioning (§5.2)
+    part = partition.partition_rows_cols(
+        rows, cols, vals, shape, cm, alpha=config.alpha,
+        col_stage=config.enable_col_stage,
+    )
+    t_part = time.perf_counter() - t0
+
+    # 2) global-local reordering of the dense core (§6.1)
+    t0 = time.perf_counter()
+    n_core = int(part.core_row_ids.shape[0])
+    if n_core:
+        local_of_row = np.full(m, -1, np.int64)
+        local_of_row[part.core_row_ids] = np.arange(n_core)
+        lrows = local_of_row[part.core_rows]
+        ro = reorder.reorder(
+            lrows, part.core_cols, (n_core, k), config.bm, config.bk,
+            enable_global=config.enable_global_reorder,
+            enable_local=config.enable_local_reorder,
+            reorder_cols=config.reorder_cols,
+            max_clusters=config.max_clusters,
+            seed=config.seed,
+        )
+        inv_col = np.empty(k, np.int64)
+        inv_col[ro.col_order] = np.arange(k)
+        be = formats.block_ell_from_coo(
+            lrows, inv_col[part.core_cols], part.core_vals, (n_core, k),
+            config.bm, config.bk, row_order=ro.row_order,
+        )
+        cluster_of_window = ro.cluster_of_row[:: config.bm][: be.num_windows]
+        col_perm = ro.col_order
+    else:
+        be = formats.block_ell_from_coo(
+            np.zeros(0, np.int64), np.zeros(0, np.int64),
+            np.zeros(0, np.float32), (0, k), config.bm, config.bk,
+        )
+        cluster_of_window = np.zeros(be.num_windows, np.int64)
+        col_perm = np.arange(k, dtype=np.int64)
+    t_reorder = time.perf_counter() - t0
+
+    # 3) reuse-ordered flat tile stream (§6.2)
+    t0 = time.perf_counter()
+    bc = np.asarray(be.block_cols)
+    nb = np.asarray(be.num_blocks)
+    vv = np.asarray(be.values)
+    if config.enable_reuse_order and be.num_windows:
+        plan_r = reuse.plan_window_order(bc, nb, np.asarray(cluster_of_window))
+        worder = plan_r.window_order
+        reuse_factor = plan_r.reuse_factor
+    else:
+        worder = np.arange(be.num_windows, dtype=np.int64)
+        reuse_factor = 1.0
+    steps_w, steps_c, steps_v = [], [], []
+    for w in worder:
+        cnt = int(nb[w])
+        if cnt:
+            steps_w.append(np.full(cnt, w, np.int32))
+            steps_c.append(bc[w, :cnt].astype(np.int32))
+            steps_v.append(vv[w, :cnt])
+    if steps_w:
+        step_window = np.concatenate(steps_w)
+        step_col = np.concatenate(steps_c)
+        flat_values = np.concatenate(steps_v, axis=0)
+    else:  # degenerate all-fringe matrix: one zero tile keeps shapes static
+        step_window = np.zeros(1, np.int32)
+        step_col = np.zeros(1, np.int32)
+        flat_values = np.zeros((1, config.bm, config.bk), np.float32)
+
+    # map packed core rows -> original ids
+    rm_local = np.asarray(be.row_map)  # local core row per packed slot (-1 pad)
+    core_row_map = np.where(
+        rm_local >= 0,
+        part.core_row_ids[np.clip(rm_local, 0, max(n_core - 1, 0))] if n_core else -1,
+        -1,
+    ).astype(np.int32)
+
+    # 4) fringe packing (row-sorted; packed row ids)
+    f_rows, f_cols, f_vals = part.fringe_rows, part.fringe_cols, part.fringe_vals
+    fringe_row_ids = np.unique(f_rows) if f_rows.size else np.zeros(1, np.int64)
+    packed_of_row = np.zeros(m, np.int64)
+    packed_of_row[fringe_row_ids] = np.arange(fringe_row_ids.size)
+    if f_rows.size:
+        order = np.lexsort((f_cols, f_rows))
+        pr = packed_of_row[f_rows[order]].astype(np.int32)
+        pc = f_cols[order].astype(np.int32)
+        pv = f_vals[order]
+    else:
+        pr = np.zeros(1, np.int32)
+        pc = np.zeros(1, np.int32)
+        pv = np.zeros(1, np.float32)
+    t_pack = time.perf_counter() - t0
+
+    k_pad = ((k + config.bk - 1) // config.bk) * config.bk
+    stats = (
+        ("alpha", float(part.alpha)),
+        ("nnz", int(part.nnz)),
+        ("fringe_nnz", int(part.fringe_nnz)),
+        ("core_nnz", int(part.core_nnz)),
+        ("fringe_fraction", float(part.fringe_fraction())),
+        ("tile_density", float(be.tile_density)),
+        ("reuse_factor", float(reuse_factor)),
+        ("num_windows", int(be.num_windows)),
+        ("num_steps", int(step_window.shape[0])),
+        ("t_partition_s", t_part),
+        ("t_reorder_s", t_reorder),
+        ("t_pack_s", t_pack),
+        ("k_pad", k_pad),
+    )
+    return NeutronPlan(
+        step_window=jnp.asarray(step_window),
+        step_col=jnp.asarray(step_col),
+        flat_values=jnp.asarray(flat_values),
+        core_row_map=jnp.asarray(core_row_map),
+        fringe_rows=jnp.asarray(pr),
+        fringe_cols=jnp.asarray(pc),
+        fringe_vals=jnp.asarray(pv),
+        fringe_row_ids=jnp.asarray(fringe_row_ids.astype(np.int32)),
+        col_perm=jnp.asarray(col_perm.astype(np.int32)),
+        shape=tuple(shape),
+        config=config,
+        stats=stats,
+    )
+
+
+def _pad_b(plan: NeutronPlan, b: jax.Array) -> jax.Array:
+    """Apply the column permutation to B rows and pad K/N to block multiples."""
+    cfg = plan.config
+    k, n = b.shape
+    if cfg.reorder_cols:
+        b = b[plan.col_perm]
+    k_pad = ((k + cfg.bk - 1) // cfg.bk) * cfg.bk
+    n_pad = ((n + cfg.bn - 1) // cfg.bn) * cfg.bn
+    if k_pad != k or n_pad != n:
+        b = jnp.pad(b, ((0, k_pad - k), (0, n_pad - n)))
+    return b
+
+
+def execute_matrix_path(plan: NeutronPlan, b: jax.Array) -> jax.Array:
+    """Dense-core path only; returns (M, N) contribution."""
+    cfg = plan.config
+    m, _ = plan.shape
+    n = b.shape[1]
+    bp = _pad_b(plan, b)
+    packed = ops.block_stream_spmm(
+        plan.step_window, plan.step_col, plan.flat_values, bp,
+        num_windows=plan.num_windows, bm=cfg.bm, bk=cfg.bk, bn=cfg.bn,
+        impl=cfg.impl,
+    )[:, :n]
+    valid = (plan.core_row_map >= 0)[:, None]
+    idx = jnp.clip(plan.core_row_map, 0, m - 1)
+    out = jnp.zeros((m, n), jnp.float32)
+    return out.at[idx].add(jnp.where(valid, packed, 0.0))
+
+
+def execute_vector_path(plan: NeutronPlan, b: jax.Array) -> jax.Array:
+    """Fringe path only; returns (M, N) contribution."""
+    cfg = plan.config
+    m, _ = plan.shape
+    n = b.shape[1]
+    bp = _pad_b(plan, b)
+    packed = ops.fringe_spmm(
+        plan.fringe_rows, plan.fringe_cols, plan.fringe_vals, bp,
+        num_rows=int(plan.fringe_row_ids.shape[0]), bn=cfg.bn, impl=cfg.impl,
+    )[:, :n]
+    out = jnp.zeros((m, n), jnp.float32)
+    return out.at[plan.fringe_row_ids].add(packed)
+
+
+def execute(plan: NeutronPlan, b: jax.Array) -> jax.Array:
+    """Full coordinated SpMM: C = A @ B, original row order, fp32."""
+    return execute_matrix_path(plan, b) + execute_vector_path(plan, b)
+
+
+def neutron_spmm(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+    shape: Tuple[int, int],
+    b: jax.Array,
+    config: SpmmConfig = SpmmConfig(),
+) -> jax.Array:
+    """One-shot convenience: prepare + execute."""
+    plan = prepare(rows, cols, vals, shape, config)
+    return execute(plan, b)
+
+
+class SpMMOperator:
+    """Differentiable fixed-structure SpMM: C = A @ B with dC/dB = A^T @ g.
+
+    Both directions run the coordinated dual-path executor (the transpose
+    gets its own plan — partition/reorder of A^T).  Used by GNN training
+    (examples/gcn_training.py) where A is the normalized adjacency.
+    """
+
+    def __init__(
+        self,
+        rows: np.ndarray,
+        cols: np.ndarray,
+        vals: np.ndarray,
+        shape: Tuple[int, int],
+        config: SpmmConfig = SpmmConfig(),
+    ):
+        self.plan = prepare(rows, cols, vals, shape, config)
+        self.plan_t = prepare(
+            np.asarray(cols), np.asarray(rows), np.asarray(vals),
+            (shape[1], shape[0]), config,
+        )
+
+        @jax.custom_vjp
+        def _f(b):
+            return execute(self.plan, b)
+
+        def _fwd(b):
+            return _f(b), None
+
+        def _bwd(_, g):
+            return (execute(self.plan_t, g),)
+
+        _f.defvjp(_fwd, _bwd)
+        self._f = _f
+
+    def __call__(self, b: jax.Array) -> jax.Array:
+        return self._f(b)
+
+
+class NeutronSpMM:
+    """Epoch-loop operator with adaptive AIV-AIC coordination (§5.3).
+
+    Re-prepares the plan when the coordinator migrates windows; per-epoch
+    path timings come from host wall-clock around the jitted paths (the
+    Ascend on-device timers' analogue).
+    """
+
+    def __init__(
+        self,
+        rows: np.ndarray,
+        cols: np.ndarray,
+        vals: np.ndarray,
+        shape: Tuple[int, int],
+        config: SpmmConfig = SpmmConfig(),
+        cost_model: Optional[EngineCostModel] = None,
+        epsilon: float = 0.05,
+    ):
+        self.rows, self.cols, self.vals = (
+            np.asarray(rows), np.asarray(cols), np.asarray(vals)
+        )
+        self.shape = tuple(shape)
+        self.config = config
+        self.cost_model = cost_model or default_cost_model(n_cols=config.bn)
+        self.plan = prepare(rows, cols, vals, shape, config, self.cost_model)
+        self.epsilon = epsilon
+        self._alpha = self.plan.stats_dict["alpha"]
+        self._needs_warmup = True
+        self.epoch_log: list = []
+
+    def run_epoch(self, b: jax.Array) -> jax.Array:
+        if self._needs_warmup:  # exclude (re)compile from epoch timings
+            execute_matrix_path(self.plan, b).block_until_ready()
+            execute_vector_path(self.plan, b).block_until_ready()
+            self._needs_warmup = False
+        t0 = time.perf_counter()
+        cm = execute_matrix_path(self.plan, b)
+        cm.block_until_ready()
+        t_matrix = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        cv = execute_vector_path(self.plan, b)
+        cv.block_until_ready()
+        t_vector = time.perf_counter() - t0
+
+        skew = AdaptiveCoordinator.skew(t_matrix, t_vector)
+        self.epoch_log.append(
+            {"t_matrix": t_matrix, "t_vector": t_vector, "skew": skew,
+             "alpha": self._alpha}
+        )
+        if skew > 1.0 + self.epsilon and len(self.epoch_log) >= 2:
+            self._rebalance(t_matrix, t_vector)
+        return cm + cv
+
+    def _rebalance(self, t_matrix: float, t_vector: float) -> None:
+        """Nudge alpha toward balanced finish time and re-prepare (Eq. 7)."""
+        ratio = t_matrix / max(t_vector, 1e-12)
+        # matrix slower -> raise alpha (send more to vector path); bisection step
+        new_alpha = float(np.clip(self._alpha * ratio ** 0.5, 1e-6, 1.0))
+        if abs(new_alpha - self._alpha) / max(self._alpha, 1e-12) < 1e-3:
+            return
+        self._alpha = new_alpha
+        cfg = dataclasses.replace(self.config, alpha=new_alpha)
+        self.plan = prepare(
+            self.rows, self.cols, self.vals, self.shape, cfg, self.cost_model
+        )
+        self._needs_warmup = True

@@ -1,0 +1,4 @@
+"""Data: deterministic synthetic pipeline + sparse-matrix generators."""
+from . import graphs, pipeline
+
+__all__ = ["graphs", "pipeline"]

@@ -1,0 +1,4 @@
+"""Distribution: named sharding rules and collective helpers."""
+from . import sharding
+
+__all__ = ["sharding"]

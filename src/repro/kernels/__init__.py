@@ -1,0 +1,6 @@
+"""TPU Pallas kernels for the NeutronSparse dual-path SpMM."""
+from . import ops, ref
+from .dense_tile_spmm import dense_tile_spmm
+from .gather_spmm import gather_spmm
+
+__all__ = ["ops", "ref", "dense_tile_spmm", "gather_spmm"]

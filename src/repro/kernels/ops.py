@@ -1,0 +1,70 @@
+"""Jitted wrappers for the NeutronSparse kernels + XLA fallbacks.
+
+``impl`` selection:
+- ``pallas``           — Mosaic-lowered TPU kernels (target hardware)
+- ``pallas_interpret`` — same kernel bodies executed in interpret mode
+                         (CPU-validatable; used by tests/benchmarks here)
+- ``xla``              — pure-jnp formulations (identical math; used by the
+                         512-device dry-run where Mosaic cannot lower)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .dense_tile_spmm import dense_tile_spmm
+from .gather_spmm import gather_spmm
+
+Impl = Literal["pallas", "pallas_interpret", "xla"]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_windows", "bm", "bk", "bn", "impl")
+)
+def block_stream_spmm(
+    step_window: jax.Array,
+    step_col: jax.Array,
+    flat_values: jax.Array,
+    b: jax.Array,
+    *,
+    num_windows: int,
+    bm: int,
+    bk: int,
+    bn: int = 256,
+    impl: Impl = "xla",
+) -> jax.Array:
+    """Matrix-engine path; returns packed (num_windows*bm, N) fp32."""
+    if impl == "xla":
+        return ref.ref_block_stream_spmm(
+            step_window, step_col, flat_values, b, num_windows
+        )
+    return dense_tile_spmm(
+        step_window, step_col, flat_values, b,
+        num_windows=num_windows, bm=bm, bk=bk, bn=bn,
+        interpret=(impl == "pallas_interpret"),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("num_rows", "bn", "impl"))
+def fringe_spmm(
+    rows: jax.Array,
+    cols: jax.Array,
+    vals: jax.Array,
+    b: jax.Array,
+    *,
+    num_rows: int,
+    bn: int = 256,
+    impl: Impl = "xla",
+) -> jax.Array:
+    """Vector-engine path; returns packed (num_rows, N) fp32."""
+    if impl == "xla":
+        return ref.ref_gather_spmm(rows, cols, vals, b, num_rows)
+    return gather_spmm(
+        rows, cols, vals, b,
+        num_rows=num_rows, bn=bn,
+        interpret=(impl == "pallas_interpret"),
+    )

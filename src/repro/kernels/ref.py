@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the NeutronSparse kernels.
+
+Every Pallas kernel in this package has an oracle here; tests sweep shapes
+and dtypes asserting allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_spmm_dense(a_dense: jax.Array, b: jax.Array) -> jax.Array:
+    """C = A @ B with fp32 accumulation."""
+    return jnp.dot(
+        a_dense.astype(jnp.float32), b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def ref_block_stream_spmm(
+    step_window: jax.Array,  # (T,) int32 — destination window of each block step
+    step_col: jax.Array,     # (T,) int32 — B column-block id of each step
+    flat_values: jax.Array,  # (T, bm, bk)
+    b: jax.Array,            # (K, N)
+    num_windows: int,
+) -> jax.Array:
+    """Oracle for the matrix-path flat block stream: for each step t,
+    out[step_window[t]] += values[t] @ B[step_col[t]*bk : +bk].
+    Returns packed (num_windows*bm, N) fp32."""
+    t, bm, bk = flat_values.shape
+    n = b.shape[1]
+    b_blocks = b.reshape(-1, bk, n)  # (K//bk, bk, N)
+    gathered = b_blocks[step_col]    # (T, bk, N)
+    partial = jnp.einsum(
+        "tmk,tkn->tmn",
+        flat_values.astype(jnp.float32),
+        gathered.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    out = jnp.zeros((num_windows, bm, n), jnp.float32)
+    out = out.at[step_window].add(partial)
+    return out.reshape(num_windows * bm, n)
+
+
+def ref_gather_spmm(
+    rows: jax.Array,  # (nnz,) int32, values scatter-add into packed row ids
+    cols: jax.Array,  # (nnz,) int32
+    vals: jax.Array,  # (nnz,)
+    b: jax.Array,     # (K, N)
+    num_rows: int,
+) -> jax.Array:
+    """Oracle for the vector path: out[rows[i]] += vals[i] * B[cols[i]]."""
+    gathered = b[cols].astype(jnp.float32) * vals.astype(jnp.float32)[:, None]
+    return jax.ops.segment_sum(gathered, rows, num_segments=num_rows)

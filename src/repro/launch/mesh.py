@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A function (not a module constant) so importing never touches jax device
+state.  Single pod: 16x16 = 256 chips (data, model).  Multi-pod: 2 pods x
+256 = 512 chips (pod, data, model) — the "pod" axis is pure DP across the
+inter-pod DCN/ICI boundary.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def mesh_axis_sizes(mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 4):
+    """Small mesh for CPU tests (requires forced host device count)."""
+    return jax.make_mesh(
+        (n_data, n_model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

@@ -1,0 +1,109 @@
+"""Generate EXPERIMENTS.md §Dry-run / §Roofline tables from artifacts.
+
+    PYTHONPATH=src python -m repro.launch.report [--dir artifacts/dryrun]
+
+Prints markdown to stdout; EXPERIMENTS.md embeds the output.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load(dirname: str) -> List[Dict]:
+    return [json.load(open(f)) for f in sorted(glob.glob(os.path.join(dirname, "*.json")))]
+
+
+def fmt_bytes(b: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def dryrun_table(recs: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | status | per-device mem | fits 16GB | compile | collectives (scanned HLO) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] == "skip":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP | — | — | — | {r['reason']} |")
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | **ERROR** | — | — | — | {r.get('error', '')[:60]} |")
+            continue
+        m = r["memory"]
+        c = r.get("collective_schedule_scanned_hlo", {})
+        csum = ", ".join(f"{k}:{v}" for k, v in c.items()
+                         if k != "count" and v) or "none"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{m['total_per_device_gb']} GB | "
+            f"{'yes' if m['fits_16gb_hbm'] else 'NO'} | "
+            f"{r['t_compile_s']}s | count={c.get('count', 0)} ({csum[:80]}) |")
+    return "\n".join(lines)
+
+
+PEAK = 197e12
+
+
+def mfu_at_bound(rec: Dict) -> float:
+    """Useful-model-FLOPs time / roofline bound — the honest perf score.
+    (roofline_fraction = HLO-compute/bound rewards *inflated* compute.)"""
+    n_chips = 512 if "2x16x16" in rec.get("mesh", "") else 256
+    useful_s = rec.get("model_flops_total", 0) / n_chips / PEAK
+    bound = rec.get("roofline", {}).get("bound_s", 0)
+    return useful_s / bound if bound else 0.0
+
+
+def roofline_table(recs: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "MFU@bound | MODEL/HLO flops | mem GB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    rows = [r for r in recs
+            if r.get("mesh") == "pod16x16" and r.get("status") == "ok"
+            and "roofline" in r]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        rl = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.4f} | "
+            f"{rl['memory_s']:.4f} | {rl['collective_s']:.4f} | "
+            f"**{rl['dominant']}** | {mfu_at_bound(r):.3f} | "
+            f"{r.get('useful_flops_ratio', 0):.2f} | "
+            f"{r['memory']['total_per_device_gb']} |")
+    return "\n".join(lines)
+
+
+def summary(recs: List[Dict]) -> str:
+    ok = sum(1 for r in recs if r["status"] == "ok")
+    skip = sum(1 for r in recs if r["status"] == "skip")
+    err = sum(1 for r in recs if r["status"] == "error")
+    fits = sum(1 for r in recs if r["status"] == "ok"
+               and r["memory"]["fits_16gb_hbm"])
+    return (f"**{ok} cells compiled OK** ({fits} fit 16 GB HBM/device), "
+            f"{skip} spec'd skips, {err} errors.")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print("### Dry-run summary\n")
+    print(summary(recs) + "\n")
+    print(dryrun_table(recs) + "\n")
+    print("### Roofline (single-pod 16x16, per device)\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Roofline term extraction via bilinear probe extrapolation.
+
+XLA's ``cost_analysis`` counts a ``while`` body once, so the scanned
+production build under-reports FLOPs/bytes/collectives by the trip counts.
+Fully unrolling the real depth compiles in O(minutes) per cell on this
+container, so instead we compile *probe* builds — unrolled, at depth L
+groups and M microbatches for (L, M) in {1,2}x{1,2} — and solve
+
+    metric(L, M) = a + b*L + c*M + d*L*M
+
+exactly.  Every per-iteration metric of the unrolled graph (HLO FLOPs,
+bytes accessed, collective payload bytes) is bilinear in (L, M) by
+construction: each extra group adds identical layer math + its optimizer
+update; each extra microbatch re-runs the per-group fwd/bwd.  The full-cell
+value is the polynomial evaluated at (num_layers/pattern_len,
+num_microbatches).  Fractional L handles pattern tails (zamba2: 38 = 6x6+2).
+
+The production (scanned) build is compiled separately by dryrun.py for the
+compile-success proof and memory analysis; this module owns the cost side.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+from ..configs.base import SHAPES, ArchDef
+from . import hlo_analysis
+from .specs import build_cell
+
+
+def _probe_metrics(
+    arch: ArchDef,
+    shape_name: str,
+    mesh,
+    l_groups: int,
+    m_micro: int,
+    micro_size: int,
+    overrides: Optional[Dict[str, Any]] = None,
+    rules=None,
+) -> Dict[str, float]:
+    pattern_len = len(arch.full.group_pattern())
+    ov = dict(overrides or {})
+    ov["num_layers"] = pattern_len * l_groups
+    kind = SHAPES[shape_name].kind
+    if kind == "train":
+        # hold the microbatch SIZE fixed, vary the count — keeps the metric
+        # bilinear in (L, M)
+        ov["num_microbatches"] = m_micro
+        ov["global_batch"] = micro_size * m_micro
+    cell = build_cell(arch, shape_name, mesh, overrides=ov, analysis_mode=True,
+                      rules=rules)
+    with mesh, jax.set_mesh(mesh):
+        compiled = (
+            jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                    out_shardings=cell.out_shardings)
+            .lower(*cell.args).compile()
+        )
+    cost = compiled.cost_analysis() or {}
+    coll = hlo_analysis.collective_bytes(compiled.as_text())
+    out = {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_total": float(sum(v for k, v in coll.items() if k != "count")),
+        "coll_count": float(coll["count"]),
+    }
+    for k in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+              "collective-permute"):
+        out[f"coll_{k}"] = float(coll[k])
+    return out
+
+
+def _bilinear(m11, m21, m12, m22, L: float, M: float) -> float:
+    """Solve m(L,M)=a+bL+cM+dLM from probes at (1,1),(2,1),(1,2),(2,2)."""
+    d = m22 - m21 - m12 + m11
+    b = m21 - m11 - d
+    c = m12 - m11 - d
+    a = m11 - b - c - d
+    return a + b * L + c * M + d * L * M
+
+
+def _linear(m1, m2, L: float) -> float:
+    b = m2 - m1
+    return m1 + b * (L - 1.0)
+
+
+def probe_roofline(
+    arch: ArchDef,
+    shape_name: str,
+    mesh,
+    overrides: Optional[Dict[str, Any]] = None,
+    micro_override: Optional[int] = None,
+    rules=None,
+) -> Dict[str, Any]:
+    """Returns extrapolated per-device cost metrics + roofline terms."""
+    cell = SHAPES[shape_name]
+    pattern_len = len(arch.full.group_pattern())
+    L = arch.full.num_layers / pattern_len
+    if overrides and "num_layers" in overrides:
+        L = overrides["num_layers"] / pattern_len
+    M = (micro_override
+         or (overrides or {}).get("num_microbatches")
+         or arch.microbatches.get(shape_name, 1))
+    is_train = cell.kind == "train"
+    micro_size = max(cell.global_batch // M, 1)
+
+    p11 = _probe_metrics(arch, shape_name, mesh, 1, 1, micro_size, overrides, rules)
+    p21 = _probe_metrics(arch, shape_name, mesh, 2, 1, micro_size, overrides, rules)
+    if is_train and M > 1:
+        p12 = _probe_metrics(arch, shape_name, mesh, 1, 2, micro_size, overrides, rules)
+        p22 = _probe_metrics(arch, shape_name, mesh, 2, 2, micro_size, overrides, rules)
+        est = {
+            k: max(0.0, _bilinear(p11[k], p21[k], p12[k], p22[k], L, M))
+            for k in p11
+        }
+    else:
+        est = {k: max(0.0, _linear(p11[k], p21[k], L)) for k in p11}
+
+    terms = hlo_analysis.roofline_terms(
+        est["flops"], est["bytes"], est["coll_total"]
+    )
+    return {
+        "probes": {"L": L, "M": M, "p11": p11, "p21": p21},
+        "est": est,
+        "roofline": {
+            "compute_s": terms.compute_s,
+            "memory_s": terms.memory_s,
+            "collective_s": terms.collective_s,
+            "dominant": terms.dominant,
+            "bound_s": terms.bound_s,
+            "roofline_fraction": terms.roofline_fraction(),
+        },
+    }

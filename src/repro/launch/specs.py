@@ -1,0 +1,264 @@
+"""Cell builder: for each (arch x shape x mesh) produce the step function,
+ShapeDtypeStruct inputs, and in/out sharding specs — shared by the dry-run,
+the roofline pipeline, and the perf hillclimb.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import SHAPES, ArchDef, ShapeCell
+from ..distributed import sharding as shd
+from ..models import model as model_lib
+from ..models.config import ModelConfig
+from ..train import optimizer as opt_lib, train_loop
+
+
+@dataclasses.dataclass
+class CellSpec:
+    """Everything needed to lower one dry-run cell."""
+    fn: Callable
+    args: Tuple  # ShapeDtypeStructs
+    in_shardings: Tuple
+    out_shardings: Any
+    meta: Dict[str, Any]
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_structs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    if cfg.frontend == "audio":
+        return {
+            "frames": _sds((batch, seq, cfg.frontend_dim), jnp.bfloat16),
+            "labels": _sds((batch, seq), jnp.int32),
+        }
+    if cfg.frontend == "vision":
+        s_text = seq - cfg.num_patches
+        return {
+            "tokens": _sds((batch, s_text), jnp.int32),
+            "patches": _sds((batch, cfg.num_patches, cfg.frontend_dim), jnp.bfloat16),
+        }
+    return {"tokens": _sds((batch, seq), jnp.int32)}
+
+
+def batch_spec_tree(batch_structs_tree, rules, sizes):
+    def one(leaf):
+        return shd.batch_spec(rules, leaf.shape[0], len(leaf.shape) - 1, sizes)
+    return jax.tree.map(one, batch_structs_tree)
+
+
+def default_rules(mesh) -> shd.AxisRules:
+    multi = "pod" in mesh.axis_names
+    return shd.AxisRules(
+        batch_axes=("pod", "data") if multi else ("data",),
+        fsdp_axes=("data",),
+        tp_axis="model",
+    )
+
+
+def optimized_cell_config(arch: ArchDef, shape_name: str, mesh):
+    """Winning §Perf configuration per cell kind (beyond-paper defaults).
+
+    - serve cells: TP-only bf16 weights (no per-token FSDP gathers) when the
+      TP-sharded weights fit; big-model serving keeps FSDP.
+    - MoE train cells: shard_map local dispatch; small expert sets are
+      DP-replicated, 100B-scale experts keep FSDP with in-block bf16 gather.
+    Returns (rules, overrides).
+    """
+    kind = SHAPES[shape_name].kind
+    multi = "pod" in mesh.axis_names
+    batch = ("pod", "data") if multi else ("data",)
+    cfg = arch.full
+    small_experts = bool(cfg.moe_num_experts) and (
+        cfg.moe_num_experts * cfg.d_model * (cfg.moe_d_expert or cfg.d_ff)
+        * 3 * 4 <= 2**30)
+    if kind in ("prefill", "decode"):
+        ov = {"param_dtype": jnp.bfloat16}
+        if small_experts:  # dispatch blowup hits serving too
+            ov["moe_impl"] = "shard_map"
+        tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+        bf16_per_dev_gb = cfg.param_count() * 2 / tp / 2**30
+        if bf16_per_dev_gb <= 12:  # fits TP-only
+            return (
+                shd.AxisRules(batch_axes=batch, fsdp_axes=(), tp_axis="model",
+                              moe_fsdp=not small_experts),
+                ov,
+            )
+        return (  # 340B-class: keep FSDP for weights, bf16 for the math
+            shd.AxisRules(batch_axes=batch, fsdp_axes=("data",),
+                          tp_axis="model"),
+            {"param_dtype": jnp.bfloat16},
+        )
+    # train
+    overrides = {}
+    if cfg.moe_num_experts:
+        overrides["moe_impl"] = "shard_map"
+    rules = shd.AxisRules(batch_axes=batch, fsdp_axes=("data",),
+                          tp_axis="model", moe_fsdp=not small_experts)
+    return rules, overrides
+
+
+def build_cell(
+    arch: ArchDef,
+    shape_name: str,
+    mesh,
+    rules: Optional[shd.AxisRules] = None,
+    overrides: Optional[Dict[str, Any]] = None,
+    analysis_mode: bool = True,
+) -> CellSpec:
+    """Build the jit-able step + specs for one cell.
+
+    ``overrides`` patches ModelConfig fields (hillclimb knob).
+    ``analysis_mode`` unrolls every loop (layer groups, microbatches, KV
+    chunks) so the compiled module's cost analysis is trip-count-faithful —
+    XLA counts a ``while`` body once.  The production TPU build would keep
+    the scans; the math is identical.
+    """
+    cell = SHAPES[shape_name]
+    cfg = arch.full
+    overrides = dict(overrides or {})
+    micro_override = overrides.pop("num_microbatches", None)
+    gb_override = overrides.pop("global_batch", None)
+    kv_dtype_override = overrides.pop("kv_cache_dtype", None)
+    if kv_dtype_override:
+        arch = dataclasses.replace(arch, kv_cache_dtype=kv_dtype_override)
+    if gb_override:
+        cell = dataclasses.replace(cell, global_batch=gb_override)
+    if analysis_mode:
+        kvc = 2048 if cell.kind != "decode" else 8192
+        cfg = dataclasses.replace(
+            cfg, scan_layers=False, kv_chunk=kvc, attn_unroll=1 << 20,
+        )
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    rules = rules or default_rules(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    rng = jax.random.PRNGKey(0)
+    params_struct = jax.eval_shape(lambda: model_lib.init_params(rng, cfg))
+    pspecs = shd.param_specs(params_struct, rules, sizes)
+    ns = lambda spec_tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+    meta: Dict[str, Any] = {
+        "arch": arch.name,
+        "shape": shape_name,
+        "kind": cell.kind,
+        "seq_len": cell.seq_len,
+        "global_batch": cell.global_batch,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "params": int(cfg.param_count()),
+        "active_params": int(cfg.active_param_count()),
+    }
+
+    if cell.kind == "train":
+        n_micro = micro_override or arch.microbatches.get(shape_name, 1)
+        tcfg = train_loop.TrainConfig(
+            optimizer=opt_lib.OptimizerConfig(moment_dtype=jnp.bfloat16),
+            num_microbatches=n_micro,
+            unroll_microbatches=analysis_mode,
+        )
+        meta["microbatches"] = n_micro
+        step = train_loop.make_train_step(cfg, tcfg)
+        opt_struct = jax.eval_shape(
+            lambda: opt_lib.init_opt_state(params_struct, tcfg.optimizer)
+        )
+        ospecs = opt_lib.OptState(
+            step=P(),
+            m=shd.param_specs(opt_struct.m, rules, sizes),
+            v=shd.param_specs(opt_struct.v, rules, sizes),
+        )
+        bstruct = batch_structs(cfg, cell.global_batch, cell.seq_len)
+        bspecs = batch_spec_tree(bstruct, rules, sizes)
+
+        def fn(params, opt_state, batch):
+            with shd.use_rules(rules):
+                return step(params, opt_state, batch)
+
+        return CellSpec(
+            fn=fn,
+            args=(params_struct, opt_struct, bstruct),
+            in_shardings=(ns(pspecs), ns(ospecs), ns(bspecs)),
+            out_shardings=(ns(pspecs), ns(ospecs),
+                           jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                        {"loss": 0, "grad_norm": 0, "lr": 0})),
+            meta=meta,
+        )
+
+    if cell.kind == "prefill":
+        bstruct = batch_structs(cfg, cell.global_batch, cell.seq_len)
+        bspecs = batch_spec_tree(bstruct, rules, sizes)
+        if cfg.encoder_only:
+            def fn(params, batch):
+                with shd.use_rules(rules):
+                    logits, _ = model_lib.forward(params, batch, cfg)
+                    return logits
+            out_spec = NamedSharding(
+                mesh, P(shd._batch_axes_fit(rules, cell.global_batch, sizes),
+                        None, None))
+            return CellSpec(fn, (params_struct, bstruct),
+                            (ns(pspecs), ns(bspecs)), out_spec, meta)
+
+        cache_struct = jax.eval_shape(
+            lambda: model_lib.init_cache(cfg, cell.global_batch, cell.seq_len + 8,
+                                         _cache_dtype(arch))
+        )
+        cspecs = shd.cache_specs(cache_struct, rules, sizes)
+
+        def fn(params, batch, cache):
+            with shd.use_rules(rules):
+                return model_lib.prefill(params, batch, cfg, cache)
+
+        return CellSpec(
+            fn=fn,
+            args=(params_struct, bstruct, cache_struct),
+            in_shardings=(ns(pspecs), ns(bspecs), ns(cspecs)),
+            out_shardings=(
+                NamedSharding(mesh, P(shd._batch_axes_fit(
+                    rules, cell.global_batch, sizes), None)),
+                ns(cspecs),
+            ),
+            meta=meta,
+        )
+
+    # decode: one new token against a cache of seq_len
+    cache_struct = jax.eval_shape(
+        lambda: model_lib.init_cache(cfg, cell.global_batch, cell.seq_len,
+                                     _cache_dtype(arch))
+    )
+    cspecs = shd.cache_specs(cache_struct, rules, sizes)
+    tok_struct = _sds((cell.global_batch, 1), jnp.int32)
+    tok_spec = P(shd._batch_axes_fit(rules, cell.global_batch, sizes), None)
+    len_struct = _sds((), jnp.int32)
+    meta["kv_cache_dtype"] = arch.kv_cache_dtype
+
+    def fn(params, token, cache, cache_len):
+        with shd.use_rules(rules):
+            return model_lib.decode_step(params, token, cache, cache_len, cfg)
+
+    return CellSpec(
+        fn=fn,
+        args=(params_struct, tok_struct, cache_struct, len_struct),
+        in_shardings=(ns(pspecs), NamedSharding(mesh, tok_spec), ns(cspecs),
+                      NamedSharding(mesh, P())),
+        out_shardings=(
+            NamedSharding(mesh, P(shd._batch_axes_fit(
+                rules, cell.global_batch, sizes), None)),
+            ns(cspecs),
+        ),
+        meta=meta,
+    )
+
+
+def _cache_dtype(arch: ArchDef):
+    return jnp.int8 if arch.kv_cache_dtype == "int8" else jnp.bfloat16

@@ -1,0 +1,5 @@
+"""Model zoo: composable blocks covering the 10 assigned architectures."""
+from . import config, layers, model, moe, ssm, transformer
+from .config import ModelConfig
+
+__all__ = ["config", "layers", "model", "moe", "ssm", "transformer", "ModelConfig"]

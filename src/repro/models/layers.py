@@ -1,0 +1,268 @@
+"""Transformer building blocks: norms, RoPE, GQA/MQA attention (full, local,
+softcapped, biased), and the MLP variants used by the assigned archs.
+
+Pure-functional: params are nested dicts of jax arrays; every ``init_*``
+returns params and every ``apply`` is shape-polymorphic over batch/sequence.
+Attention is computed blockwise over KV chunks (online softmax) so peak
+memory is O(S * chunk) instead of O(S^2) — required for the 32k prefill
+cells to pass the dry-run memory analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_rms_norm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # (head_dim//2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention
+# ---------------------------------------------------------------------------
+def _softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def blockwise_attention(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Sk, KV, D)
+    v: jax.Array,  # (B, Sk, KV, D)
+    *,
+    causal: bool,
+    q_offset: jax.Array | int = 0,  # absolute position of q[0] (decode)
+    window: Optional[int] = None,   # local attention window (gemma2)
+    softcap: Optional[float] = None,
+    kv_chunk: int = 1024,
+    kv_len: Optional[jax.Array] = None,  # valid KV prefix length (decode)
+    unroll: int = 1,
+) -> jax.Array:
+    """Online-softmax attention over KV chunks; O(Sq * kv_chunk) memory.
+
+    GQA: H must be a multiple of KV; queries are grouped.
+    """
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    groups = h // kv
+    scale = 1.0 / np.sqrt(d)
+
+    # flash numerics: matmuls run in the input dtype (bf16 on TPU) with fp32
+    # accumulation; softmax statistics stay fp32
+    qf = (q * scale).astype(q.dtype).reshape(b, sq, kv, groups, d)
+    q_pos = (jnp.asarray(q_offset) + jnp.arange(sq))  # (Sq,)
+
+    n_chunks = max(1, (sk + kv_chunk - 1) // kv_chunk)
+    pad = n_chunks * kv_chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, kv_chunk, kv, d)
+    vc = v.reshape(b, n_chunks, kv_chunk, kv, d)
+    if sq == 1:
+        # decode: pin the cache to head-dim TP sharding.  Without this the
+        # partitioner "last-resort replicates" the whole cache every token
+        # when kv %% tp != 0 (measured: 108 GB/token all-gather on qwen).
+        # Contracting over sharded hd costs one tiny logits psum at sq=1.
+        kc = constrain(kc, "batch", None, None, None, "heads")
+        vc = constrain(vc, "batch", None, None, None, "heads")
+        qf = constrain(qf, "batch", None, None, None, "heads")
+    valid_len = jnp.asarray(sk if kv_len is None else kv_len)
+
+    def chunk_step(carry, xs):
+        m_prev, l_prev, acc_prev = carry
+        c_idx, k_blk, v_blk = xs  # k/v: (B, C, KV, D)
+        kv_pos = c_idx * kv_chunk + jnp.arange(kv_chunk)  # (C,)
+        # (B, Sq, KV, G, C) fp32 accumulation out of a bf16 MXU matmul
+        logits = jnp.einsum("bskgd,bckd->bskgc", qf, k_blk,
+                            preferred_element_type=jnp.float32)
+        logits = _softcap(logits, softcap)
+        mask = (kv_pos[None, :] < valid_len)[None, None, None]  # (1,1,1,1,C)->broadcast
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])[None, :, None, None, :]
+        if window is not None:
+            mask = mask & (q_pos[:, None] - kv_pos[None, :] < window)[None, :, None, None, :]
+        logits = jnp.where(mask, logits, -1e30)
+        m_cur = jnp.max(logits, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l_prev * jnp.exp(m_prev - m_new) + jnp.sum(p, axis=-1)
+        acc_new = acc_prev * jnp.exp(m_prev - m_new)[..., None] + jnp.einsum(
+            "bskgc,bckd->bskgd", p.astype(v_blk.dtype), v_blk,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, kv, groups), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, sq, kv, groups), jnp.float32)
+    a0 = jnp.zeros((b, sq, kv, groups, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        chunk_step,
+        (m0, l0, a0),
+        (jnp.arange(n_chunks), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)),
+        unroll=min(max(unroll, 1), n_chunks),
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (GQA / MQA / MHA + cache)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    causal: bool = True
+    window: Optional[int] = None
+    softcap: Optional[float] = None
+    kv_chunk: int = 1024
+    unroll: int = 1
+
+
+def init_attention(rng: jax.Array, spec: AttnSpec, dtype=jnp.float32) -> Params:
+    d, h, kv, hd = spec.d_model, spec.num_heads, spec.num_kv_heads, spec.head_dim
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    s = 1.0 / np.sqrt(d)
+    p = {
+        "wq": jax.random.normal(k1, (d, h * hd), dtype) * s,
+        "wk": jax.random.normal(k2, (d, kv * hd), dtype) * s,
+        "wv": jax.random.normal(k3, (d, kv * hd), dtype) * s,
+        "wo": jax.random.normal(k4, (h * hd, d), dtype) * (1.0 / np.sqrt(h * hd)),
+    }
+    if spec.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    return p
+
+
+def apply_attention(
+    params: Params,
+    x: jax.Array,  # (B, S, D)
+    spec: AttnSpec,
+    positions: jax.Array,  # (S,) or (B, S)
+    cache: Optional[Tuple[jax.Array, jax.Array, jax.Array]] = None,
+    # cache = (k_cache (B, Smax, KV, hd), v_cache, length ())  — decode mode
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array, jax.Array]]]:
+    b, s, d = x.shape
+    h, kv, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    q = jnp.einsum("bsd,de->bse", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", x, params["wv"].astype(x.dtype))
+    if spec.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    q = apply_rope(q, positions, spec.rope_theta)
+    k = apply_rope(k, positions, spec.rope_theta)
+
+    if cache is None:
+        out = blockwise_attention(
+            q, k, v, causal=spec.causal, window=spec.window,
+            softcap=spec.softcap, kv_chunk=spec.kv_chunk,
+            unroll=spec.unroll,
+        )
+        new_cache = None
+    else:
+        k_cache, v_cache, length = cache
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), length, axis=1
+        )
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), length, axis=1
+        )
+        out = blockwise_attention(
+            q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
+            causal=spec.causal, q_offset=length, window=spec.window,
+            softcap=spec.softcap, kv_chunk=spec.kv_chunk,
+            kv_len=length + s, unroll=spec.unroll,
+        )
+        new_cache = (k_cache, v_cache, length + s)
+
+    y = jnp.einsum(
+        "bse,ed->bsd", out.reshape(b, s, h * hd), params["wo"].astype(x.dtype)
+    )
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+def init_mlp(rng: jax.Array, d: int, f: int, kind: str, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    s_in = 1.0 / np.sqrt(d)
+    s_out = 1.0 / np.sqrt(f)
+    p = {
+        "w_in": jax.random.normal(k1, (d, f), dtype) * s_in,
+        "w_out": jax.random.normal(k2, (f, d), dtype) * s_out,
+    }
+    if kind in ("swiglu", "geglu"):
+        p["w_gate"] = jax.random.normal(k3, (d, f), dtype) * s_in
+    return p
+
+
+def apply_mlp(params: Params, x: jax.Array, kind: str) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, params["w_in"].astype(x.dtype))
+    if kind == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(x.dtype))
+        h = jax.nn.silu(g) * h
+    elif kind == "geglu":
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(x.dtype))
+        h = jax.nn.gelu(g) * h
+    elif kind == "squared_relu":  # nemotron-4
+        h = jnp.square(jax.nn.relu(h))
+    elif kind == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(f"unknown mlp kind {kind}")
+    return jnp.einsum("bsf,fd->bsd", h, params["w_out"].astype(x.dtype))

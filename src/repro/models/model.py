@@ -1,0 +1,171 @@
+"""Top-level model: embedding/frontend + stack + head; train & serve steps.
+
+Batch conventions (all synthetic-friendly; see data/pipeline.py):
+  LM families : {"tokens": (B, S) int32}           loss = next-token CE
+  audio       : {"frames": (B, S, F) , "labels": (B, S) int32}  frame CE
+  vlm         : {"tokens": (B, S_text), "patches": (B, P, F)}   text CE
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import constrain
+from . import layers, transformer
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def init_params(rng: jax.Array, cfg: ModelConfig) -> Params:
+    k_emb, k_stack, k_head, k_front = jax.random.split(rng, 4)
+    dt = cfg.param_dtype
+    p: Params = {
+        "embed": {
+            "table": jax.random.normal(k_emb, (cfg.padded_vocab, cfg.d_model), dt)
+            * 0.02
+        },
+        "stack": transformer.init_stack(k_stack, cfg),
+        "final_norm": layers.init_rms_norm(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = {
+            "lm_head": jax.random.normal(k_head, (cfg.d_model, cfg.padded_vocab), dt)
+            * (1.0 / np.sqrt(cfg.d_model))
+        }
+    if cfg.frontend != "none":
+        p["frontend"] = {
+            "frontend_proj": jax.random.normal(
+                k_front, (cfg.frontend_dim, cfg.d_model), dt
+            ) * (1.0 / np.sqrt(cfg.frontend_dim))
+        }
+    return p
+
+
+def _embed_batch(
+    params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x (B,S,D) in compute dtype, token positions (S,))."""
+    cd = cfg.compute_dtype
+    if cfg.frontend == "audio":
+        x = jnp.einsum(
+            "bsf,fd->bsd", batch["frames"].astype(cd),
+            params["frontend"]["frontend_proj"].astype(cd),
+        )
+    elif cfg.frontend == "vision":
+        patches = jnp.einsum(
+            "bpf,fd->bpd", batch["patches"].astype(cd),
+            params["frontend"]["frontend_proj"].astype(cd),
+        )
+        text = params["embed"]["table"].astype(cd)[batch["tokens"]]
+        x = jnp.concatenate([patches, text], axis=1)
+    else:
+        x = params["embed"]["table"].astype(cd)[batch["tokens"]]
+    positions = jnp.arange(x.shape[1])
+    return constrain(x, "batch", "seq", None), positions
+
+
+def _head(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = layers.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        w = params["embed"]["table"].astype(x.dtype).T
+    else:
+        w = params["head"]["lm_head"].astype(x.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x, w).astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    if cfg.padded_vocab != cfg.vocab_size:  # mask padding columns
+        col = jnp.arange(cfg.padded_vocab)
+        logits = jnp.where(col < cfg.vocab_size, logits, -1e30)
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def forward(
+    params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (logits fp32, aux_loss)."""
+    x, positions = _embed_batch(params, batch, cfg)
+    x, _, aux = transformer.apply_stack(params["stack"], x, cfg, positions)
+    return _head(params, x, cfg), aux
+
+
+def loss_fn(
+    params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux = forward(params, batch, cfg)
+    if cfg.frontend == "audio":
+        labels = batch["labels"]
+        valid = jnp.ones_like(labels, jnp.float32)
+        preds = logits
+    elif cfg.frontend == "vision":
+        # next-token loss on the text segment only
+        text_logits = logits[:, cfg.num_patches :]
+        preds = text_logits[:, :-1]
+        labels = batch["tokens"][:, 1:]
+        valid = jnp.ones_like(labels, jnp.float32)
+    else:
+        preds = logits[:, :-1]
+        labels = batch["tokens"][:, 1:]
+        valid = jnp.ones_like(labels, jnp.float32)
+    logz = jax.nn.logsumexp(preds, axis=-1)
+    # masked-sum gold pick (one_hot*sum) instead of take_along_axis: keeps
+    # the vocab axis sharded under GSPMD (no logits all-gather)
+    vocab_iota = jnp.arange(preds.shape[-1], dtype=labels.dtype)
+    gold = jnp.sum(
+        jnp.where(vocab_iota == labels[..., None], preds, 0.0), axis=-1
+    )
+    ce = (logz - gold) * valid
+    denom = jnp.maximum(valid.sum(), 1.0)
+    loss = ce.sum() / denom
+    total = loss + cfg.moe_aux_weight * aux
+    return total, {"ce": loss, "aux": aux, "tokens": denom}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> Any:
+    dtype = dtype or cfg.compute_dtype
+    return transformer.init_stack_cache(cfg, batch, max_len, dtype)
+
+
+def prefill(
+    params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+    cache: Any,
+) -> Tuple[jax.Array, Any]:
+    """Run the prompt through the stack filling the cache.
+
+    Returns (last-position logits (B, V), cache)."""
+    x, positions = _embed_batch(params, batch, cfg)
+    x, cache, _ = transformer.apply_stack(
+        params["stack"], x, cfg, positions, cache=cache,
+        cache_len=jnp.zeros((), jnp.int32),
+    )
+    logits = _head(params, x[:, -1:], cfg)
+    return logits[:, 0], cache
+
+
+def decode_step(
+    params: Params,
+    token: jax.Array,  # (B, 1) int32
+    cache: Any,
+    cache_len: jax.Array,  # () int32 — current valid cache length
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, Any]:
+    """One-token decode against a cache of length ``cache_len``.
+
+    Returns (logits (B, V), new cache)."""
+    cd = cfg.compute_dtype
+    x = params["embed"]["table"].astype(cd)[token]
+    x = constrain(x, "batch", None, None)
+    positions = cache_len + jnp.arange(1)
+    x, cache, _ = transformer.apply_stack(
+        params["stack"], x, cfg, positions, cache=cache, cache_len=cache_len
+    )
+    logits = _head(params, x, cfg)
+    return logits[:, 0], cache

@@ -1,0 +1,203 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Chunked SSD algorithm: the sequence is split into chunks of length Q; the
+intra-chunk term is a masked quadratic form (attention-like, runs on the
+MXU) and the inter-chunk term is a linear state recurrence carried by
+``lax.scan`` — O(S·Q) compute, O(S) memory, sub-quadratic end to end, which
+is what qualifies the ssm/hybrid archs for the ``long_500k`` cell.
+
+Decode maintains a constant-size state (B, H, P, N) + conv tail, so the
+serve_step for 500k context is O(1) in sequence length.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMSpec:
+    d_model: int
+    state_dim: int          # N
+    head_dim: int = 64      # P
+    expand: int = 2
+    d_conv: int = 4
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def num_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def init_ssm(rng: jax.Array, spec: SSMSpec, dtype=jnp.float32) -> Params:
+    d, di, n, h = spec.d_model, spec.d_inner, spec.state_dim, spec.num_heads
+    ks = jax.random.split(rng, 6)
+    s = 1.0 / np.sqrt(d)
+    # fused input projection: [z, x, B, C, dt]
+    d_proj = 2 * di + 2 * n + h
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, d_proj), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (spec.d_conv, di + 2 * n), dtype) * 0.2,
+        "conv_b": jnp.zeros((di + 2 * n,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(dtype),
+        "dt_bias": jnp.zeros((h,), dtype),
+        "d_skip": jnp.ones((h,), dtype),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": jax.random.normal(ks[2], (di, d), dtype) * (1.0 / np.sqrt(di)),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d. x: (B, S, C); w: (K, C). Returns (y, new_tail)."""
+    kw = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], kw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    new_tail = xp[:, -(kw - 1):] if kw > 1 else tail
+    y = sum(
+        xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(kw)
+    ) + b[None, None, :]
+    return jax.nn.silu(y), new_tail
+
+
+def _ssd_chunked(
+    x: jax.Array,   # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)   (softplus-ed)
+    a: jax.Array,   # (H,)        (negative decay rates)
+    bmat: jax.Array,  # (B, S, N)
+    cmat: jax.Array,  # (B, S, N)
+    chunk: int,
+    initial_state: Optional[jax.Array] = None,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Minimal SSD (Dao & Gu 2024, alg. 1 'quadratic mode' per chunk)."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    q = chunk
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // q
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    bc = bmat.reshape(b, nc, q, n)
+    cc = cmat.reshape(b, nc, q, n)
+
+    da = dtc * a[None, None, None, :]          # (B, nc, Q, H) log-decay increments
+    cum = jnp.cumsum(da, axis=2)               # within-chunk cumulative
+    seg_total = cum[:, :, -1]                  # (B, nc, H)
+
+    # intra-chunk (quadratic) term: L[i,j] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    # mask BEFORE exp: exp of masked (positive) entries would overflow and
+    # poison the gradient through the where
+    l_mat = jnp.exp(jnp.where(mask, diff, -1e30))
+    # heavy contractions keep bf16 operands with fp32 accumulation (flash
+    # numerics); all decay/softplus statistics stay fp32
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc,
+                        preferred_element_type=jnp.float32)  # (B,nc,Q,Q)
+    y_diag = jnp.einsum(
+        "bcij,bcijh,bcjh,bcjhp->bcihp", scores, l_mat, dtc,
+        xc.astype(jnp.float32) if xc.dtype != jnp.float32 else xc,
+        preferred_element_type=jnp.float32,
+    )
+
+    # chunk states: decayed sum of B dt x within the chunk
+    decay_to_end = jnp.exp(seg_total[:, :, None, :] - cum)  # (B,nc,Q,H)
+    states = jnp.einsum(
+        "bcqn,bcqh,bcqhp->bchpn",
+        bc.astype(jnp.float32) if bc.dtype != jnp.float32 else bc,
+        decay_to_end * dtc,
+        xc.astype(jnp.float32) if xc.dtype != jnp.float32 else xc,
+        preferred_element_type=jnp.float32,
+    )
+
+    # inter-chunk recurrence
+    def step(carry, xs):
+        st_prev = carry  # (B, H, P, N)
+        st_c, seg = xs   # (B,H,P,N), (B,H)
+        st_new = st_prev * jnp.exp(seg)[:, :, None, None] + st_c
+        return st_new, st_prev
+
+    init = (
+        jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+    final_state, prev_states = jax.lax.scan(
+        step,
+        init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(seg_total, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B, nc, H, P, N)
+
+    # off-diagonal term: carry-in state read out through C with decay
+    decay_from_start = jnp.exp(cum)  # (B,nc,Q,H)
+    y_off = jnp.einsum(
+        "bcqn,bcqh,bchpn->bcqhp", cc, decay_from_start, prev_states
+    )
+    y = (y_diag + y_off).reshape(b, nc * q, h, p)[:, :s]
+    return y, final_state
+
+
+def apply_ssm(
+    params: Params,
+    x: jax.Array,  # (B, S, D)
+    spec: SSMSpec,
+    state: Optional[Tuple[jax.Array, jax.Array]] = None,
+    # state = (ssd_state (B,H,P,N), conv_tail (B, d_conv-1, di+2N)) — decode
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    b, s, d = x.shape
+    di, n, h, p = spec.d_inner, spec.state_dim, spec.num_heads, spec.head_dim
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
+    z, xbc, dt_raw = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    conv_tail = None if state is None else state[1]
+    xbc, new_tail = _causal_conv(
+        xbc, params["conv_w"].astype(x.dtype), params["conv_b"].astype(x.dtype),
+        tail=conv_tail,
+    )
+    xs, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    xh = xs.reshape(b, s, h, p)
+
+    # operands stay in the compute dtype (bf16 on TPU): the einsums inside
+    # _ssd_chunked accumulate in fp32, halving the dominant operand traffic
+    y, final_state = _ssd_chunked(
+        xh, dt, a, bmat, cmat,
+        spec.chunk,
+        initial_state=None if state is None else state[0],
+    )
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    # gated RMSNorm (mamba2)
+    y32 = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y32 * y32, axis=-1, keepdims=True)
+    y = (y32 * jax.lax.rsqrt(var + 1e-6) * params["norm_scale"].astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(x.dtype))
+    new_state = None if state is None else (final_state, new_tail)
+    return out, new_state
+
+
+def init_ssm_state(
+    batch: int, spec: SSMSpec, dtype=jnp.float32
+) -> Tuple[jax.Array, jax.Array]:
+    return (
+        jnp.zeros((batch, spec.num_heads, spec.head_dim, spec.state_dim), dtype),
+        jnp.zeros((batch, spec.d_conv - 1, spec.d_inner + 2 * spec.state_dim), dtype),
+    )

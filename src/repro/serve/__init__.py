@@ -1,0 +1,5 @@
+"""Serving: KV/SSM-cache engine with prefill + decode steps."""
+from . import engine
+from .engine import ServeConfig, ServeEngine
+
+__all__ = ["engine", "ServeConfig", "ServeEngine"]

@@ -1,0 +1,66 @@
+"""Batched serving engine: prefill + greedy decode over a KV/SSM cache.
+
+The decode step is a single jitted function reused across requests;
+``serve_step`` (what the decode_* dry-run cells lower) is exactly
+``engine.decode_fn``.  Supports int8 KV-cache quantization — at 32k context
+x batch 128 the bf16 KV cache of a 340B-class model exceeds a pod's HBM;
+int8 halves it again and is the difference between fitting and not
+(recorded per-cell in EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import model as model_lib
+from ..models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch_size: int = 8
+    max_len: int = 512
+    cache_dtype: Any = jnp.bfloat16  # jnp.int8 models quantized cache sizing
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, scfg: ServeConfig):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self.prefill_fn = jax.jit(
+            functools.partial(model_lib.prefill, cfg=cfg)
+        )
+        self.decode_fn = jax.jit(
+            functools.partial(model_lib.decode_step, cfg=cfg)
+        )
+
+    def fresh_cache(self) -> Any:
+        return model_lib.init_cache(
+            self.cfg, self.scfg.batch_size, self.scfg.max_len,
+            self.cfg.compute_dtype,
+        )
+
+    def generate(
+        self, prompts: jax.Array, num_tokens: int
+    ) -> Tuple[jax.Array, Dict[str, float]]:
+        """prompts: (B, S_prompt) int32. Greedy decode ``num_tokens``."""
+        b, s = prompts.shape
+        assert b == self.scfg.batch_size
+        cache = self.fresh_cache()
+        logits, cache = self.prefill_fn(self.params, {"tokens": prompts}, cache=cache)
+        tokens = [jnp.argmax(logits, -1).astype(jnp.int32)]
+        length = jnp.asarray(s, jnp.int32)
+        for _ in range(num_tokens - 1):
+            logits, cache = self.decode_fn(
+                self.params, tokens[-1][:, None], cache, length
+            )
+            tokens.append(jnp.argmax(logits, -1).astype(jnp.int32))
+            length = length + 1
+        out = jnp.stack(tokens, axis=1)
+        return out, {"prompt_len": s, "generated": num_tokens}

@@ -1,0 +1,4 @@
+"""Training substrate: optimizer, train loop, compression, fault tolerance."""
+from . import compression, controller, optimizer, train_loop
+
+__all__ = ["compression", "controller", "optimizer", "train_loop"]

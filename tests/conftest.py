@@ -1,0 +1,25 @@
+import os
+import sys
+
+# Tests run single-device (the dry-run sets its own XLA_FLAGS in-process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)
+
+
+def make_sparse(rng, m, k, density=0.05, n_dense_rows=0, dtype=np.float32):
+    """Random sparse matrix with optional dense rows (power-law-ish mix)."""
+    a = (rng.rand(m, k) < density).astype(dtype) * rng.randn(m, k).astype(dtype)
+    if n_dense_rows:
+        rows = rng.choice(m, n_dense_rows, replace=False)
+        a[rows] = rng.randn(n_dense_rows, k).astype(dtype)
+    rows, cols = np.nonzero(a)
+    return a, rows.astype(np.int64), cols.astype(np.int64), a[rows, cols]

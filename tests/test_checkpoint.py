@@ -1,0 +1,76 @@
+"""Sharded checkpointing: round trip, atomicity, retention, elastic restore."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ck
+
+
+def _tree(seed=0):
+    r = np.random.RandomState(seed)
+    return {
+        "a": {"w": jnp.asarray(r.randn(10, 6).astype(np.float32))},
+        "b": [jnp.asarray(r.randn(4).astype(np.float32)),
+              jnp.asarray(np.int32(7))],
+    }
+
+
+def test_round_trip(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 5, t, meta={"note": "x"})
+    step, restored = ck.restore(str(tmp_path), t)
+    assert step == 5
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sharded_files_created(tmp_path):
+    t = {"w": jnp.zeros((10, 4))}
+    d = ck.save(str(tmp_path), 1, t, num_shards=3)
+    files = [f for f in os.listdir(d) if f.startswith("w.s")]
+    assert len(files) == 3
+
+
+def test_latest_and_retention(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        ck.save(str(tmp_path), s, t, keep=3)
+    assert ck.latest_step(str(tmp_path)) == 5
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(str(tmp_path)))
+    assert steps == [3, 4, 5]
+
+
+def test_no_tmp_left_behind(tmp_path):
+    ck.save(str(tmp_path), 9, _tree())
+    assert not [d for d in os.listdir(str(tmp_path)) if d.startswith(".tmp")]
+
+
+def test_restore_specific_step(tmp_path):
+    t1, t2 = _tree(1), _tree(2)
+    ck.save(str(tmp_path), 1, t1, keep=5)
+    ck.save(str(tmp_path), 2, t2, keep=5)
+    step, restored = ck.restore(str(tmp_path), t1, step=1)
+    np.testing.assert_array_equal(
+        np.asarray(restored["a"]["w"]), np.asarray(t1["a"]["w"]))
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    ck.save(str(tmp_path), 1, {"w": jnp.zeros((4, 4))})
+    with pytest.raises(AssertionError):
+        ck.restore(str(tmp_path), {"w": jnp.zeros((5, 4))})
+
+
+def test_elastic_restore_resharded(tmp_path):
+    """Restore under new shardings (single-device: SingleDeviceSharding)."""
+    t = _tree()
+    ck.save(str(tmp_path), 3, t)
+    dev = jax.devices()[0]
+    shardings = jax.tree.map(
+        lambda _: jax.sharding.SingleDeviceSharding(dev), t)
+    step, restored = ck.restore_resharded(str(tmp_path), t, shardings)
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

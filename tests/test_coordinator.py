@@ -1,0 +1,71 @@
+"""Adaptive coordination (paper §5.3) + row-window balancing (paper §7)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coordinator import (
+    AdaptiveCoordinator, balance_row_window_list, list_imbalance,
+)
+from repro.core.cost_model import EngineCostModel
+
+
+def _simulate(coord, cm, max_epochs=30):
+    for _ in range(max_epochs):
+        st_ = coord.state
+        t_m = cm.cost_matrix(max(st_.matrix_rows, 1), st_.k)
+        t_v = cm.cost_vector(max(st_.vector_nnz, 1))
+        coord.observe(t_m, t_v)
+        if coord.converged():
+            break
+    return coord
+
+
+def test_converges_from_extreme_skew_within_7_rounds():
+    """Paper Fig. 18: bisection-style convergence, <=7 rounds from extremes."""
+    rng = np.random.RandomState(0)
+    cm = EngineCostModel(p_matrix=1e9, p_vector=5e6, r=1.0)
+    nw = 200
+    nnz = rng.randint(10, 2000, nw).astype(float)
+    rows = np.full(nw, 128.0)
+    for init in (np.ones(nw, bool), np.zeros(nw, bool)):
+        coord = AdaptiveCoordinator(cm, nnz, rows, init.copy(), k=4096)
+        _simulate(coord, cm)
+        r = coord.rounds_to_converge()
+        assert r is not None and r <= 7, r
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 50), pm=st.floats(1e8, 1e10), pv=st.floats(1e5, 1e7))
+def test_skew_never_increases_limit(seed, pm, pv):
+    """Property: after convergence the skew stays within tolerance."""
+    rng = np.random.RandomState(seed)
+    cm = EngineCostModel(p_matrix=pm, p_vector=pv, r=1.0)
+    nw = 100
+    nnz = rng.randint(1, 3000, nw).astype(float)
+    rows = np.full(nw, 64.0)
+    coord = AdaptiveCoordinator(cm, nnz, rows, rng.rand(nw) < 0.5, k=2048)
+    _simulate(coord, cm, max_epochs=40)
+    if coord.converged():
+        final = coord.history[-1].skew
+        assert final <= 1.0 + coord.epsilon + 1e-9
+
+
+def test_no_migration_when_balanced():
+    cm = EngineCostModel(p_matrix=1.0, p_vector=1.0)
+    coord = AdaptiveCoordinator(
+        cm, np.ones(10), np.ones(10), np.zeros(10, bool), k=10)
+    rec = coord.observe(1.0, 1.01)
+    assert rec.migrated_windows == 0
+
+
+def test_lpt_balances_power_law_windows():
+    rng = np.random.RandomState(0)
+    costs = rng.pareto(1.1, 500) + 0.1
+    naive = [np.arange(i, 500, 24) for i in range(24)]
+    lpt = balance_row_window_list(costs, 24)
+    assert list_imbalance(lpt, costs) < list_imbalance(naive, costs)
+    # LPT is within ~4/3 of the lower bound max(ideal, heaviest window)
+    lower = max(1.0, costs.max() / (costs.sum() / 24))
+    assert list_imbalance(lpt, costs) <= lower * 4 / 3 + 1e-9
+    # every window assigned exactly once
+    allw = np.concatenate(lpt)
+    assert sorted(allw.tolist()) == list(range(500))

@@ -1,0 +1,62 @@
+"""Architecture-aware cost model (paper §5.2.1, Eq. 1-3, 7)."""
+import numpy as np
+import pytest
+
+from repro.core.cost_model import EngineCostModel, default_cost_model
+
+
+def test_alpha_formula():
+    cm = EngineCostModel(p_matrix=100.0, p_vector=10.0, r=2.0)
+    assert cm.alpha == pytest.approx(0.2)  # r * Pv / Pm
+
+
+def test_alpha_clipped():
+    cm = EngineCostModel(p_matrix=1.0, p_vector=10.0, r=2.0)
+    assert cm.alpha == 1.0
+
+
+def test_cost_eq1():
+    cm = EngineCostModel(p_matrix=50.0, p_vector=5.0)
+    assert cm.cost_vector(10) == pytest.approx(2.0)
+    assert cm.cost_matrix(10, 10) == pytest.approx(2.0)
+
+
+def test_balanced_at_alpha_density():
+    """At density == alpha the two engines predict equal cost (r=1)."""
+    cm = EngineCostModel(p_matrix=1000.0, p_vector=10.0, r=1.0)
+    m, k = 128, 256
+    nnz = cm.alpha * m * k
+    assert cm.cost_vector(nnz) == pytest.approx(cm.cost_matrix(m, k))
+
+
+def test_split_residual_targets_alpha():
+    cm = EngineCostModel(p_matrix=1000.0, p_vector=10.0, r=1.0)
+    k = 512
+    nnz = np.full(100, 64.0)
+    rows = np.full(100, 8.0)
+    c = cm.split_residual(nnz, rows, k)
+    ratio = nnz[:c].sum() / max((rows[c:].sum()) * k, 1)
+    # chosen prefix approximates the alpha target better than extremes
+    err = abs(ratio - cm.alpha)
+    err0 = abs(0.0 - cm.alpha)
+    assert err <= err0
+
+
+def test_measure_calibration():
+    import time
+
+    def fast():
+        pass
+
+    def slow():
+        time.sleep(0.002)
+
+    cm = EngineCostModel.measure(fast, slow, 1000.0, 1000.0, repeats=1)
+    assert cm.p_matrix > cm.p_vector  # fast engine calibrates faster
+
+
+def test_analytic_tpu_sane():
+    cm = default_cost_model(256)
+    assert 0.0 < cm.alpha < 1.0
+    # vector path is memory-bound: far fewer nnz/s than matrix elements/s
+    assert cm.p_matrix > cm.p_vector

@@ -1,0 +1,73 @@
+"""Format round-trips + tile-redundancy metric (paper Table 1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import formats
+from conftest import make_sparse
+
+
+def test_coo_round_trip(rng):
+    a, rows, cols, vals = make_sparse(rng, 50, 40, 0.1)
+    coo = formats.coo_from_dense(a)
+    assert coo.nnz == len(rows)
+    np.testing.assert_allclose(formats.dense_from_coo(coo), a)
+
+
+def test_coo_row_sorted(rng):
+    a, *_ = make_sparse(rng, 30, 30, 0.2)
+    coo = formats.coo_from_dense(a)
+    r = np.asarray(coo.rows)
+    assert (np.diff(r) >= 0).all()
+
+
+@pytest.mark.parametrize("bm,bk", [(8, 8), (16, 32), (128, 64)])
+def test_block_ell_round_trip(rng, bm, bk):
+    a, rows, cols, vals = make_sparse(rng, 70, 90, 0.08)
+    be = formats.block_ell_from_coo(rows, cols, vals, a.shape, bm, bk)
+    np.testing.assert_allclose(formats.dense_from_block_ell(be), a, rtol=1e-6)
+
+
+def test_block_ell_row_permutation(rng):
+    a, rows, cols, vals = make_sparse(rng, 40, 40, 0.1)
+    order = np.random.RandomState(1).permutation(40)
+    be = formats.block_ell_from_coo(rows, cols, vals, a.shape, 8, 8,
+                                    row_order=order)
+    np.testing.assert_allclose(formats.dense_from_block_ell(be), a, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(5, 60), k=st.integers(5, 60),
+    density=st.floats(0.01, 0.4), seed=st.integers(0, 99),
+)
+def test_block_ell_nnz_conserved(m, k, density, seed):
+    """Property: packing stores every nonzero exactly once."""
+    r = np.random.RandomState(seed)
+    a = (r.rand(m, k) < density) * r.randn(m, k)
+    rows, cols = np.nonzero(a)
+    vals = a[rows, cols]
+    be = formats.block_ell_from_coo(rows, cols, vals, (m, k), 8, 8)
+    assert be.nnz == len(rows)
+    dense = formats.dense_from_block_ell(be)
+    np.testing.assert_allclose(dense, a, rtol=1e-6, atol=1e-8)
+
+
+def test_active_tile_zero_fraction_trend(rng):
+    """Paper Table 1: redundancy grows with tile size."""
+    a, rows, cols, _ = make_sparse(rng, 512, 512, 0.01)
+    fracs = [
+        formats.active_tile_zero_fraction(rows, cols, a.shape, t)
+        for t in (4, 16, 32, 64, 128)
+    ]
+    assert all(b >= a - 1e-9 for a, b in zip(fracs, fracs[1:])), fracs
+    assert fracs[-1] > fracs[0]
+
+
+def test_empty_matrix():
+    be = formats.block_ell_from_coo(
+        np.zeros(0, np.int64), np.zeros(0, np.int64),
+        np.zeros(0, np.float32), (0, 16), 8, 8,
+    )
+    assert be.num_windows == 0
+    assert be.nnz == 0

@@ -1,0 +1,100 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.dense_tile_spmm import dense_tile_spmm
+from repro.kernels.gather_spmm import gather_spmm
+
+
+def _block_stream(rng, num_windows, max_blocks, bm, bk, k_blocks, dtype):
+    """Random flat tile stream (window-major sorted)."""
+    steps_w, steps_c = [], []
+    for w in range(num_windows):
+        n = rng.randint(1, max_blocks + 1)
+        steps_w += [w] * n
+        steps_c += rng.choice(k_blocks, n, replace=False).tolist()
+    t = len(steps_w)
+    vals = rng.randn(t, bm, bk).astype(dtype)
+    # sparsify tiles a bit
+    vals *= (rng.rand(t, bm, bk) < 0.3)
+    return (
+        jnp.asarray(np.array(steps_w, np.int32)),
+        jnp.asarray(np.array(steps_c, np.int32)),
+        jnp.asarray(vals),
+    )
+
+
+@pytest.mark.parametrize("bm,bk,bn", [(8, 8, 128), (16, 32, 128), (128, 64, 256)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_dense_tile_spmm_matches_ref(bm, bk, bn, dtype):
+    rng = np.random.RandomState(0)
+    num_windows, k_blocks = 3, 4
+    sw, sc, vals = _block_stream(rng, num_windows, 3, bm, bk, k_blocks, np.float32)
+    vals = vals.astype(dtype)
+    b = jnp.asarray(rng.randn(k_blocks * bk, bn), dtype)
+    out = dense_tile_spmm(sw, sc, vals, b, num_windows=num_windows,
+                          bm=bm, bk=bk, bn=bn, interpret=True)
+    expect = ref.ref_block_stream_spmm(sw, sc, vals, b, num_windows)
+    tol = 1e-5 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("bn", [128, 256])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_gather_spmm_matches_ref(bn, dtype):
+    rng = np.random.RandomState(1)
+    num_rows, kk, nnz = 6, 32, 40
+    rows = np.sort(rng.randint(0, num_rows, nnz)).astype(np.int32)
+    rows[:2] = 0
+    rows[-2:] = num_rows - 1  # every packed row visited
+    for r in range(num_rows):  # ensure all rows present
+        if r not in rows:
+            rows[rng.randint(nnz)] = r
+    rows = np.sort(rows)
+    cols = rng.randint(0, kk, nnz).astype(np.int32)
+    vals = rng.randn(nnz).astype(np.float32)
+    b = jnp.asarray(rng.randn(kk, bn), dtype)
+    out = gather_spmm(jnp.asarray(rows), jnp.asarray(cols), jnp.asarray(vals),
+                      b, num_rows=num_rows, bn=bn, interpret=True)
+    expect = ref.ref_gather_spmm(jnp.asarray(rows), jnp.asarray(cols),
+                                 jnp.asarray(vals), b, num_rows)
+    tol = 1e-5 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=tol, atol=tol)
+
+
+def test_gather_spmm_duplicate_columns():
+    """Consecutive same-col nonzeros (copy-elision path) accumulate correctly."""
+    rows = jnp.asarray(np.array([0, 0, 0, 1], np.int32))
+    cols = jnp.asarray(np.array([2, 2, 2, 2], np.int32))
+    vals = jnp.asarray(np.array([1.0, 2.0, 3.0, 4.0], np.float32))
+    b = jnp.asarray(np.eye(4, 128, dtype=np.float32) + 1.0)
+    out = gather_spmm(rows, cols, vals, b, num_rows=2, bn=128, interpret=True)
+    expect = ref.ref_gather_spmm(rows, cols, vals, b, 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-6)
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+def test_ops_dispatch(impl):
+    rng = np.random.RandomState(2)
+    sw, sc, vals = _block_stream(rng, 2, 2, 8, 8, 3, np.float32)
+    b = jnp.asarray(rng.randn(24, 128).astype(np.float32))
+    out = ops.block_stream_spmm(sw, sc, vals, b, num_windows=2, bm=8, bk=8,
+                                bn=128, impl=impl)
+    expect = ref.ref_block_stream_spmm(sw, sc, vals, b, 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-5)
+
+
+def test_zero_value_padding_steps_are_noops():
+    """Padding tiles (window 0, block 0, zero values) must not perturb."""
+    sw = jnp.asarray(np.array([0, 0], np.int32))
+    sc = jnp.asarray(np.array([0, 1], np.int32))
+    vals = jnp.asarray(np.stack([np.eye(8, 8), np.zeros((8, 8))]).astype(np.float32))
+    b = jnp.asarray(np.random.RandomState(3).randn(16, 128).astype(np.float32))
+    out = dense_tile_spmm(sw, sc, vals, b, num_windows=1, bm=8, bk=8, bn=128,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(b[:8]), rtol=1e-6)

@@ -1,0 +1,80 @@
+"""SpMMOperator differentiation + reuse-planner properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import reuse, spmm
+from repro.core.spmm import SpMMOperator
+from conftest import make_sparse
+
+
+def test_spmm_operator_forward_and_grad(rng):
+    a, rows, cols, vals = make_sparse(rng, 120, 100, 0.06, n_dense_rows=6)
+    b = jnp.asarray(rng.randn(100, 64).astype(np.float32))
+    op = SpMMOperator(rows, cols, vals, a.shape, spmm.SpmmConfig(impl="xla"))
+    out = np.asarray(op(b))
+    np.testing.assert_allclose(out, a @ np.asarray(b), rtol=1e-4, atol=1e-4)
+
+    # dL/dB for L = sum(A @ B * W) is A^T @ W
+    w = jnp.asarray(rng.randn(120, 64).astype(np.float32))
+    grad = jax.grad(lambda bb: jnp.sum(op(bb) * w))(b)
+    expect = a.T @ np.asarray(w)
+    np.testing.assert_allclose(np.asarray(grad), expect, rtol=1e-4, atol=1e-4)
+
+
+def test_spmm_operator_inside_jit(rng):
+    a, rows, cols, vals = make_sparse(rng, 64, 64, 0.1)
+    op = SpMMOperator(rows, cols, vals, a.shape, spmm.SpmmConfig(impl="xla"))
+    b = jnp.asarray(rng.randn(64, 32).astype(np.float32))
+    f = jax.jit(lambda x: op(x * 2.0))
+    np.testing.assert_allclose(np.asarray(f(b)), a @ (2 * np.asarray(b)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 99), nw=st.integers(1, 40), nb=st.integers(1, 6),
+       kblocks=st.integers(2, 12))
+def test_reuse_plan_is_permutation_and_never_worse(seed, nw, nb, kblocks):
+    r = np.random.RandomState(seed)
+    nb = min(nb, kblocks)
+    num_blocks = r.randint(1, nb + 1, nw)
+    block_cols = np.zeros((nw, nb), np.int64)
+    for w in range(nw):
+        block_cols[w, : num_blocks[w]] = np.sort(
+            r.choice(kblocks, num_blocks[w], replace=False))
+    clusters = np.sort(r.randint(0, 4, nw))
+    plan = reuse.plan_window_order(block_cols, num_blocks, clusters)
+    # permutation of all windows
+    assert sorted(plan.window_order.tolist()) == list(range(nw))
+    # copy elision can only help
+    assert plan.est_b_blocks_loaded <= plan.est_b_blocks_naive
+    assert plan.reuse_factor >= 1.0
+
+
+def test_reuse_plan_elides_shared_leading_blocks():
+    # 4 windows in one cluster all leading with block 7 -> 3 elided loads
+    block_cols = np.array([[7, 1], [7, 2], [7, 3], [7, 4]])
+    num_blocks = np.array([2, 2, 2, 2])
+    plan = reuse.plan_window_order(block_cols, num_blocks, np.zeros(4, np.int64))
+    assert plan.est_b_blocks_naive == 8
+    assert plan.est_b_blocks_loaded == 8 - 3
+
+
+def test_capacity_bound_splits_clusters():
+    # one cluster touching 10 distinct blocks with capacity 4 gets split
+    block_cols = np.arange(10).reshape(10, 1)
+    num_blocks = np.ones(10, np.int64)
+    plan = reuse.plan_window_order(
+        block_cols, num_blocks, np.zeros(10, np.int64),
+        capacity_blocks=5, capacity_frac=0.8)
+    assert plan.working_set_blocks <= 4
+    assert sorted(plan.window_order.tolist()) == list(range(10))
+
+
+def test_tile_shape_selector_respects_constraints():
+    t = reuse.select_tile_shape(n_cols=256)
+    assert t.bm % 128 == 0 and t.bn % 128 == 0 and t.bk % 8 == 0
+    assert t.vmem_bytes() <= reuse.VMEM_BYTES // 2
+    # the paper's asymmetry: N-heavy beats K-heavy at equal volume
+    assert t.bn >= t.bk

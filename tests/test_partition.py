@@ -1,0 +1,79 @@
+"""Two-stage row/column extraction (paper §5.2.2) invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import partition
+from repro.core.cost_model import EngineCostModel
+from conftest import make_sparse
+
+
+def _cm(alpha):
+    # synthetic model with the requested alpha
+    return EngineCostModel(p_matrix=1.0, p_vector=alpha, r=1.0)
+
+
+def test_nnz_conserved(rng):
+    a, rows, cols, vals = make_sparse(rng, 100, 80, 0.05, n_dense_rows=5)
+    part = partition.partition_rows_cols(rows, cols, vals, a.shape, _cm(0.1))
+    assert part.nnz == len(rows)
+    # reconstruct
+    out = np.zeros(a.shape, np.float32)
+    np.add.at(out, (part.core_rows, part.core_cols), part.core_vals)
+    np.add.at(out, (part.fringe_rows, part.fringe_cols), part.fringe_vals)
+    np.testing.assert_allclose(out, a, rtol=1e-6)
+
+
+def test_alpha_extremes(rng):
+    a, rows, cols, vals = make_sparse(rng, 60, 60, 0.1)
+    all_fringe = partition.partition_rows_cols(
+        rows, cols, vals, a.shape, _cm(1.0))
+    assert all_fringe.core_nnz == 0
+    all_core = partition.partition_rows_cols(
+        rows, cols, vals, a.shape, _cm(1e-9), col_stage=False)
+    assert all_core.fringe_nnz == 0
+
+
+def test_row_threshold_semantics(rng):
+    """Rows at or below Thres = alpha*K must be extracted (Eq. 4/5)."""
+    m, k = 50, 100
+    a = np.zeros((m, k), np.float32)
+    a[:25, :2] = 1.0     # short rows: Len=2
+    a[25:, :60] = 1.0    # long rows: Len=60
+    rows, cols = np.nonzero(a)
+    vals = a[rows, cols]
+    part = partition.partition_rows_cols(
+        rows, cols, vals, (m, k), _cm(0.1), col_stage=False)
+    # alpha*K = 10: Len-2 rows -> fringe; Len-60 rows -> core
+    assert set(np.unique(part.fringe_rows)) == set(range(25))
+    assert set(np.unique(part.core_rows)) == set(range(25, 50))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 99), alpha=st.floats(0.001, 0.9))
+def test_partition_property(seed, alpha):
+    r = np.random.RandomState(seed)
+    m = k = 40
+    a = (r.rand(m, k) < 0.15) * r.randn(m, k)
+    rows, cols = np.nonzero(a)
+    vals = a[rows, cols]
+    part = partition.partition_rows_cols(rows, cols, vals, (m, k), _cm(alpha))
+    assert part.nnz == len(rows)
+    assert part.core_nnz >= 0 and part.fringe_nnz >= 0
+    # core rows really are the denser ones: every core row longer than thres
+    if part.core_nnz:
+        row_len = np.bincount(rows, minlength=m)
+        core_rows = np.unique(part.core_rows)
+        assert (row_len[core_rows] > part.row_threshold).all()
+
+
+def test_migration_helpers(rng):
+    a, rows, cols, vals = make_sparse(rng, 64, 64, 0.1, n_dense_rows=8)
+    part = partition.partition_rows_cols(rows, cols, vals, a.shape, _cm(0.05))
+    n0 = part.core_nnz
+    row_window = np.arange(64) // 8
+    moved = partition.migrate_core_to_fringe(
+        part, np.array([0]), row_window)
+    assert moved.nnz == part.nnz
+    assert moved.core_nnz <= n0
+    back = partition.migrate_fringe_to_core(moved, np.arange(8))
+    assert back.nnz == part.nnz

@@ -1,0 +1,94 @@
+"""Sharding rules: spec assignment, divisibility fallbacks, batch prefix."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shd
+
+SIZES = {"pod": 2, "data": 16, "model": 16}
+RULES = shd.AxisRules(batch_axes=("pod", "data"), fsdp_axes=("data",),
+                      tp_axis="model")
+
+
+def _specs(tree):
+    return shd.param_specs(tree, RULES, SIZES)
+
+
+def test_col_parallel():
+    s = _specs({"attn": {"wq": jnp.zeros((64, 32))}})
+    assert s["attn"]["wq"] == P("data", "model")
+
+
+def test_row_parallel():
+    s = _specs({"attn": {"wo": jnp.zeros((32, 64))}})
+    assert s["attn"]["wo"] == P("model", "data")
+
+
+def test_stacked_leading_dims_ignored():
+    s = _specs({"mlp": {"w_in": jnp.zeros((12, 64, 32))}})
+    assert s["mlp"]["w_in"] == P(None, "data", "model")
+
+
+def test_divisibility_fallback():
+    # 17 is not divisible by 16 on either axis -> unsharded dims
+    s = _specs({"attn": {"wq": jnp.zeros((17, 17))}})
+    assert s["attn"]["wq"] == P(None, None)
+
+
+def test_embed_table_padded_vocab_shards():
+    s = _specs({"embed": {"table": jnp.zeros((49280, 1536))}})  # padded
+    assert s["embed"]["table"] == P("model", "data")
+
+
+def test_scalars_replicated():
+    s = _specs({"norm": {"scale": jnp.zeros((64,))}})
+    assert s["norm"]["scale"] == P(None)
+
+
+def test_cache_specs_kv():
+    c = {"groups": {"slot0": {"k": jnp.zeros((4, 128, 1024, 16, 64)),
+                              "v": jnp.zeros((4, 128, 1024, 16, 64))}}}
+    s = shd.cache_specs(c, RULES, SIZES)
+    assert s["groups"]["slot0"]["k"] == P(None, ("pod", "data"), None, None, "model")
+    # small batch falls back to the divisible prefix
+    c8 = {"k": jnp.zeros((8, 1024, 16, 64))}
+    assert shd.cache_specs(c8, RULES, SIZES)["k"] == P("pod", None, None, "model")
+
+
+def test_cache_specs_mqa_falls_to_head_dim():
+    # kv=1 cannot shard over model=16; head_dim 128 can
+    c = {"k": jnp.zeros((128, 1024, 1, 128))}
+    s = shd.cache_specs(c, RULES, SIZES)
+    assert s["k"] == P(("pod", "data"), None, None, "model")
+
+
+def test_cache_specs_ssm():
+    c = {"ssd": jnp.zeros((4, 128, 64, 64, 128)),
+         "conv": jnp.zeros((4, 128, 3, 4352))}
+    s = shd.cache_specs(c, RULES, SIZES)
+    assert s["ssd"] == P(None, ("pod", "data"), "model", None, None)
+    assert s["conv"] == P(None, ("pod", "data"), None, "model")
+
+
+def test_batch_prefix_fit():
+    # batch 1 cannot shard at all
+    assert shd.batch_spec(RULES, 1, 1, SIZES) == P(None, None)
+    # batch 2 shards over pod only
+    assert shd.batch_spec(RULES, 2, 1, SIZES) == P("pod", None)
+    # batch 32 shards over pod x data
+    assert shd.batch_spec(RULES, 32, 1, SIZES) == P(("pod", "data"), None)
+
+
+def test_constrain_noop_without_rules():
+    x = jnp.zeros((4, 4))
+    y = shd.constrain(x, "batch", None)
+    assert y is x
+
+
+def test_expert_axis_rules():
+    rules = shd.AxisRules(batch_axes=("data",), fsdp_axes=("data",),
+                          tp_axis="model", expert_axis="model")
+    s = shd.param_specs(
+        {"moe": {"w_in": jnp.zeros((16, 5120, 8192))}}, rules, SIZES)
+    assert s["moe"]["w_in"] == P("model", "data", None)
