@@ -1,0 +1,45 @@
+"""Fused single-dispatch executor vs the two-dispatch scatter-merge style.
+
+Quantifies the tentpole change: ``spmm.execute`` (one jitted program, gather
+merge) against running the two engine paths as separate dispatches and
+summing their (M, N) contributions — the pre-fusion executor shape.  Also
+reports the prepare() host time so preprocessing regressions show up next
+to the execution wins they pay for.
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spmm
+from .common import BENCH_DATASETS, emit, load_dataset, time_fn
+
+N = 128
+
+
+def run():
+    rng = np.random.RandomState(11)
+    out = []
+    for name in BENCH_DATASETS:
+        rows, cols, vals, shape = load_dataset(name, max_dim=2048)
+        b = jnp.asarray(rng.randn(shape[1], N).astype(np.float32))
+        plan = spmm.prepare(rows, cols, vals, shape,
+                            spmm.SpmmConfig(impl="xla"))
+
+        def two_dispatch():
+            return (spmm.execute_matrix_path(plan, b)
+                    + spmm.execute_vector_path(plan, b))
+
+        fused_us = time_fn(lambda: spmm.execute(plan, b))
+        split_us = time_fn(two_dispatch)
+        best_prep = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            spmm.prepare(rows, cols, vals, shape, spmm.SpmmConfig(impl="xla"))
+            best_prep = min(best_prep, time.perf_counter() - t0)
+        out.append(emit(
+            f"fused_executor/{name}", fused_us,
+            f"two_dispatch_us={split_us:.1f};"
+            f"fusion_speedup={split_us / max(fused_us, 1e-9):.2f}x;"
+            f"prepare_us={best_prep * 1e6:.1f}"))
+    return out

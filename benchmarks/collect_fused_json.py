@@ -1,0 +1,76 @@
+"""Collect the fused-executor before/after record (BENCH_fused_executor.json).
+
+Measures the current tree's end-to-end ``execute`` us_per_call on the
+BENCH_DATASETS panel plus host ``prepare`` time on the preprocessing panel,
+and writes them next to the frozen seed numbers (measured on the same
+machine at the seed commit) with per-dataset and geomean speedups.
+
+    PYTHONPATH=src python -m benchmarks.collect_fused_json
+"""
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spmm
+from .common import BENCH_DATASETS, load_dataset, time_fn
+
+# seed-commit numbers, best-of-3 (same harness as bench_overall /
+# bench_preprocess) on this machine
+SEED_EXEC_US = {
+    "cora": 8183.9, "wiki-RfA": 49303.3, "ogbn-arxiv": 17504.8,
+    "pattern1": 52329.0, "human_gene1": 110029.1, "F1": 9313.8,
+    "mouse_gene": 103260.0, "reddit": 14549.0,
+}
+SEED_PREPARE_US = {"cora": 3311.2, "ogbn-arxiv": 11473.4, "reddit": 36049.6}
+PREP_PANEL = (("cora", 2048), ("ogbn-arxiv", 2048), ("reddit", 4096))
+N = 128
+
+
+def main() -> None:
+    rng = np.random.RandomState(0)
+    exec_after = {}
+    for name in BENCH_DATASETS:
+        rows, cols, vals, shape = load_dataset(name, max_dim=2048)
+        b = jnp.asarray(rng.randn(shape[1], N).astype(np.float32))
+        plan = spmm.prepare(rows, cols, vals, shape,
+                            spmm.SpmmConfig(impl="xla"))
+        exec_after[name] = time_fn(lambda: spmm.execute(plan, b))
+
+    prep_after = {}
+    for name, dim in PREP_PANEL:
+        rows, cols, vals, shape = load_dataset(name, max_dim=dim)
+        best = float("inf")
+        for _ in range(7):
+            t0 = time.perf_counter()
+            spmm.prepare(rows, cols, vals, shape, spmm.SpmmConfig(impl="xla"))
+            best = min(best, time.perf_counter() - t0)
+        prep_after[name] = best * 1e6
+
+    exec_speedups = {k: SEED_EXEC_US[k] / exec_after[k] for k in exec_after}
+    prep_speedups = {k: SEED_PREPARE_US[k] / prep_after[k] for k in prep_after}
+    record = {
+        "panel": "BENCH_DATASETS, max_dim=2048 (prepare: table3 panel dims)",
+        "metric": "us_per_call (best-of-3 wall clock, compile excluded)",
+        "execute": {
+            "seed_us": SEED_EXEC_US,
+            "fused_us": {k: round(v, 1) for k, v in exec_after.items()},
+            "speedup": {k: round(v, 2) for k, v in exec_speedups.items()},
+            "geomean_speedup": round(
+                float(np.exp(np.mean(np.log(list(exec_speedups.values()))))),
+                2),
+        },
+        "prepare": {
+            "seed_us": SEED_PREPARE_US,
+            "new_us": {k: round(v, 1) for k, v in prep_after.items()},
+            "speedup": {k: round(v, 2) for k, v in prep_speedups.items()},
+        },
+    }
+    with open("BENCH_fused_executor.json", "w") as f:
+        json.dump(record, f, indent=2)
+    print(json.dumps(record, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,7 @@ SUITES = [
     "bench_tile_redundancy",  # Table 1
     "bench_preprocess",     # Tables 3/4
     "bench_roofline",       # EXPERIMENTS.md §Roofline feed
+    "bench_fused",          # fused single-dispatch executor vs two-dispatch
 ]
 
 

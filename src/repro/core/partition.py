@@ -82,8 +82,7 @@ def partition_rows_cols(
     a = cost_model.alpha if alpha is None else float(alpha)
 
     # --- stage 1: row extraction (Eq. 4/5) ---
-    row_len = np.zeros(m, np.int64)
-    np.add.at(row_len, rows, 1)
+    row_len = np.bincount(rows, minlength=m)
     row_thres = a * k
     sparse_row = row_len <= row_thres  # Len(v) <= Thres -> vector path
     nz_sparse_row = sparse_row[rows]
@@ -99,9 +98,8 @@ def partition_rows_cols(
     # --- stage 2: column extraction within the dense rows ---
     col_thres = 0.0
     if col_stage and d_rows.size:
-        m1 = int(np.unique(d_rows).size)
-        col_len = np.zeros(k, np.int64)
-        np.add.at(col_len, d_cols, 1)
+        m1 = int(np.count_nonzero(np.bincount(d_rows, minlength=m)))
+        col_len = np.bincount(d_cols, minlength=k)
         col_thres = a * m1
         sparse_col = col_len <= col_thres
         nz_sparse_col = sparse_col[d_cols]
@@ -118,7 +116,10 @@ def partition_rows_cols(
         np.concatenate(f_vals) if f_vals else np.zeros(0, vals.dtype)
     )
 
-    core_row_ids = np.unique(d_rows) if d_rows.size else np.zeros(0, np.int64)
+    core_row_ids = (
+        np.flatnonzero(np.bincount(d_rows, minlength=m))
+        if d_rows.size else np.zeros(0, np.int64)
+    )
 
     return PartitionResult(
         core_rows=d_rows,

@@ -88,16 +88,14 @@ def global_reorder(
 
     for it in range(n_iters):
         # rows <- mean position of their columns
-        acc = np.zeros(m)
-        np.add.at(acc, rows, col_pos[cols])
+        acc = np.bincount(rows, weights=col_pos[cols], minlength=m)
         key = np.where(has_r, acc / np.maximum(row_cnt, 1), np.inf)
         order_r = np.argsort(key, kind="stable")
         row_pos[order_r] = np.arange(m, dtype=np.float64)
         if not reorder_cols and it > 0:
             continue
         # cols <- mean position of their rows
-        accc = np.zeros(k)
-        np.add.at(accc, cols, row_pos[rows])
+        accc = np.bincount(cols, weights=row_pos[rows], minlength=k)
         ckey = np.where(has_c, accc / np.maximum(col_cnt, 1), np.inf)
         order_c = np.argsort(ckey, kind="stable")
         col_pos[order_c] = np.arange(k, dtype=np.float64)
@@ -120,34 +118,42 @@ def global_reorder(
 
 
 def _jaccard_greedy_windows(
-    row_ids: np.ndarray, blocks_per_row: list, bm: int
+    row_ids: np.ndarray, block_mask: np.ndarray, bm: int
 ) -> np.ndarray:
     """Paper's exact local rule: pick an anchor, fill the window with the
-    (bm-1) most Jaccard-similar unassigned rows. O(n^2) — small clusters."""
+    (bm-1) most Jaccard-similar unassigned rows.
+
+    ``block_mask`` is the (n, n_kblocks) 0/1 membership matrix; all pairwise
+    intersections come from one integer-exact matmul, so the loop body is a
+    similarity lookup + stable top-k instead of O(n) python set algebra.
+    """
     n = len(row_ids)
-    unassigned = list(range(n))
-    order = []
-    sets = [set(b.tolist()) for b in blocks_per_row]
-    while unassigned:
-        anchor = unassigned.pop(0)
-        window = [anchor]
-        if unassigned:
-            a = sets[anchor]
-            sims = []
-            for j in unassigned:
-                b = sets[j]
-                inter = len(a & b)
-                union = len(a) + len(b) - inter
-                sims.append(inter / union if union else 0.0)
-            take = np.argsort(-np.asarray(sims), kind="stable")[: bm - 1]
-            chosen = [unassigned[t] for t in sorted(take.tolist())]
-            # preserve similarity ranking inside the window
-            chosen = [unassigned[t] for t in take.tolist()]
-            for c in chosen:
-                window.append(c)
-            unassigned = [u for u in unassigned if u not in set(chosen)]
-        order.extend(window)
-    return row_ids[np.asarray(order, np.int64)]
+    x = block_mask.astype(np.float64)
+    inter = x @ x.T  # exact: block counts are small integers
+    sizes = x.sum(axis=1)
+    alive = np.ones(n, bool)
+    order = np.empty(n, np.int64)
+    pos = 0
+    nxt = 0  # first-alive pointer (rows are consumed in ascending order)
+    while pos < n:
+        while not alive[nxt]:
+            nxt += 1
+        anchor = nxt
+        alive[anchor] = False
+        order[pos] = anchor
+        pos += 1
+        cand = np.flatnonzero(alive)  # ascending == original relative order
+        if cand.size == 0:
+            break
+        inter_a = inter[anchor, cand]
+        union = sizes[anchor] + sizes[cand] - inter_a
+        sims = np.where(union > 0, inter_a / np.maximum(union, 1e-9), 0.0)
+        take = np.argsort(-sims, kind="stable")[: bm - 1]
+        chosen = cand[take]  # similarity-ranked inside the window
+        order[pos : pos + chosen.size] = chosen
+        pos += chosen.size
+        alive[chosen] = False
+    return row_ids[order]
 
 
 def local_reorder(
@@ -158,9 +164,9 @@ def local_reorder(
     bm: int,
     bk: int,
     exact_limit: int = 512,
-    seed: int = 0,
 ) -> np.ndarray:
     """Refine the packed row order inside each cluster into bm-row windows.
+    Fully deterministic (greedy similarity ranking; no randomness).
 
     Returns a new full row order (length m).  Rows with similar column-block
     sets land in the same window, so BlockELL packing compacts more empty
@@ -172,12 +178,26 @@ def local_reorder(
     inv_col = np.empty(k, np.int64)
     inv_col[global_res.col_order] = np.arange(k)
     kblk = inv_col[cols] // bk  # column-block ids AFTER the global col permutation
+    n_kblocks = (k + bk - 1) // bk
 
-    # per-row sorted unique block lists
-    order = np.lexsort((kblk, rows))
-    r_sorted, b_sorted = rows[order], kblk[order]
-    row_starts = np.searchsorted(r_sorted, np.arange(m))
-    row_ends = np.searchsorted(r_sorted, np.arange(m), side="right")
+    # deduplicate (row, block) pairs once, globally (sorted, first-occurrence
+    # mask) — replaces a per-row np.unique call per cluster.  A single
+    # fused-key sort stands in for the 2-key lexsort (no permutation needed,
+    # only the sorted pairs).
+    keys_sorted = np.sort(rows * np.int64(n_kblocks) + kblk)
+    r_sorted = keys_sorted // n_kblocks
+    b_sorted = keys_sorted % n_kblocks
+    if r_sorted.size:
+        keep = np.concatenate(
+            [[True],
+             (r_sorted[1:] != r_sorted[:-1]) | (b_sorted[1:] != b_sorted[:-1])]
+        )
+        ur, ub = r_sorted[keep], b_sorted[keep]
+    else:
+        ur = ub = r_sorted
+    # CSR-style row pointers over the unique pairs
+    row_ptr = np.searchsorted(ur, np.arange(m + 1))
+    deg = np.diff(row_ptr)
 
     new_order = np.empty(m, np.int64)
     pos = 0
@@ -185,27 +205,31 @@ def local_reorder(
     packed = global_res.row_order
     boundaries = np.flatnonzero(np.diff(cluster_ids)) + 1
     segments = np.split(np.arange(m), boundaries)
-    rng = np.random.RandomState(seed)
 
     for seg in segments:
         cluster_rows = packed[seg]
-        nz_mask = (row_ends[cluster_rows] - row_starts[cluster_rows]) > 0
+        nz_mask = deg[cluster_rows] > 0
         nz_rows = cluster_rows[nz_mask]
         z_rows = cluster_rows[~nz_mask]
         if nz_rows.size == 0:
             new_order[pos : pos + cluster_rows.size] = cluster_rows
             pos += cluster_rows.size
             continue
-        blocks = [
-            np.unique(b_sorted[row_starts[r] : row_ends[r]]) for r in nz_rows
-        ]
+        starts = row_ptr[nz_rows]
+        cnts = deg[nz_rows]
         if nz_rows.size <= exact_limit:
-            ordered = _jaccard_greedy_windows(nz_rows, blocks, bm)
+            # (n_local, n_kblocks) membership built by flat fancy indexing
+            tot = int(cnts.sum())
+            flat_pos = np.arange(tot) - np.repeat(np.cumsum(cnts) - cnts, cnts)
+            src = np.repeat(starts, cnts) + flat_pos
+            mask = np.zeros((nz_rows.size, n_kblocks), np.int8)
+            mask[np.repeat(np.arange(nz_rows.size), cnts), ub[src]] = 1
+            ordered = _jaccard_greedy_windows(nz_rows, mask, bm)
         else:
             # signature sort: adjacent rows share leading blocks
-            sig1 = np.asarray([b[0] for b in blocks])
-            sig2 = np.asarray([b[len(b) // 2] for b in blocks])
-            sig3 = np.asarray([len(b) for b in blocks])
+            sig1 = ub[starts]
+            sig2 = ub[starts + cnts // 2]
+            sig3 = cnts
             ordered = nz_rows[np.lexsort((sig3, sig2, sig1))]
         new_order[pos : pos + ordered.size] = ordered
         pos += ordered.size
@@ -244,7 +268,7 @@ def reorder(
             n_clusters=1,
         )
     if enable_local and np.asarray(rows).size:
-        row_order = local_reorder(rows, cols, shape, g, bm, bk, seed=seed)
+        row_order = local_reorder(rows, cols, shape, g, bm, bk)
     else:
         row_order = g.row_order
     # recompute cluster labels for the final order

@@ -3,12 +3,18 @@
 ``prepare`` runs the full preprocessing pipeline from the paper's workflow
 (Fig. 7): cost-model split -> two-stage extraction -> global-local reorder
 -> BlockELL packing + flat tile stream -> reuse-ordered grid -> fringe COO.
-``execute`` runs both engine paths and merges their contributions.
+``execute`` runs both engine paths and merges their contributions as one
+fused jitted program: the plan carries *inverse* row maps so the final C is
+assembled by gathering from the packed per-path outputs (each original row
+has at most one packed source per path) instead of scatter-adding both paths
+into full-size zero buffers.  Executors are cached per plan signature, so
+repeated epochs over re-prepared plans of the same structure never retrace.
 ``NeutronSpMM`` wraps an adaptive epoch loop with runtime migration.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Dict, Optional, Tuple
 
@@ -35,6 +41,7 @@ class SpmmConfig:
     enable_reuse_order: bool = True
     max_clusters: int = 64
     impl: ops.Impl = "xla"
+    fringe_chunk: Optional[int] = None     # nonzeros per fringe grid step
     seed: int = 0
 
 
@@ -54,6 +61,9 @@ class NeutronPlan:
     fringe_vals: jax.Array   # (nnz_f,)
     fringe_row_ids: jax.Array  # (n_fringe_rows,) int32 original ids
     col_perm: jax.Array      # (K,) int32 — B row permutation (identity unless reorder_cols)
+    # scatter-free merge: inverse row maps (original row -> packed slot or -1)
+    gather_src_matrix: jax.Array  # (M,) int32 -> packed matrix-path row
+    gather_src_vector: jax.Array  # (M,) int32 -> packed vector-path row
 
     shape: Tuple[int, int]
     config: SpmmConfig
@@ -64,6 +74,7 @@ class NeutronPlan:
             self.step_window, self.step_col, self.flat_values, self.core_row_map,
             self.fringe_rows, self.fringe_cols, self.fringe_vals,
             self.fringe_row_ids, self.col_perm,
+            self.gather_src_matrix, self.gather_src_vector,
         )
         return leaves, (self.shape, self.config, self.stats)
 
@@ -78,6 +89,24 @@ class NeutronPlan:
     @property
     def stats_dict(self) -> Dict:
         return dict(self.stats)
+
+    @property
+    def has_core(self) -> bool:
+        return bool(self.stats_dict["core_nnz"])
+
+    @property
+    def has_fringe(self) -> bool:
+        return bool(self.stats_dict["fringe_nnz"])
+
+    def signature(self) -> Tuple:
+        """Static structure key: plans sharing it reuse one jitted executor."""
+        cfg = self.config
+        return (
+            self.shape, cfg.bm, cfg.bk, cfg.bn, cfg.impl, cfg.reorder_cols,
+            cfg.fringe_chunk, self.num_windows,
+            int(self.step_window.shape[0]), int(self.fringe_rows.shape[0]),
+            int(self.fringe_row_ids.shape[0]), self.has_core, self.has_fringe,
+        )
 
 
 def prepare(
@@ -100,9 +129,14 @@ def prepare(
     )
     t_part = time.perf_counter() - t0
 
-    # 2) global-local reordering of the dense core (§6.1)
+    # 2) global-local reordering of the dense core (§6.1).  Only the active
+    # (window, k-block) *structure* is computed here — tile values are
+    # written once, directly into the flat stream (step 3), instead of
+    # materializing a BlockELL values array and re-gathering it.
     t0 = time.perf_counter()
     n_core = int(part.core_row_ids.shape[0])
+    nw = (n_core + config.bm - 1) // config.bm
+    nkb = (k + config.bk - 1) // config.bk
     if n_core:
         local_of_row = np.full(m, -1, np.int64)
         local_of_row[part.core_row_ids] = np.arange(n_core)
@@ -117,71 +151,99 @@ def prepare(
         )
         inv_col = np.empty(k, np.int64)
         inv_col[ro.col_order] = np.arange(k)
-        be = formats.block_ell_from_coo(
-            lrows, inv_col[part.core_cols], part.core_vals, (n_core, k),
-            config.bm, config.bk, row_order=ro.row_order,
+        ccols = inv_col[part.core_cols]
+        inv_row = np.empty(n_core, np.int64)
+        inv_row[ro.row_order] = np.arange(n_core)
+        prow = inv_row[lrows]
+        st = formats.block_structure_from_coo(
+            prow // config.bm, ccols // config.bk, nw, nkb
         )
-        cluster_of_window = ro.cluster_of_row[:: config.bm][: be.num_windows]
+        block_cols = np.zeros((nw, st.max_blocks), np.int32)
+        block_cols[st.uw, st.slot] = st.ub.astype(np.int32)
+        num_blocks = st.counts
+        cluster_of_window = ro.cluster_of_row[:: config.bm][:nw]
         col_perm = ro.col_order
-    else:
-        be = formats.block_ell_from_coo(
-            np.zeros(0, np.int64), np.zeros(0, np.int64),
-            np.zeros(0, np.float32), (0, k), config.bm, config.bk,
+        tile_density = part.core_nnz / max(
+            st.uw.size * config.bm * config.bk, 1
         )
-        cluster_of_window = np.zeros(be.num_windows, np.int64)
+    else:
+        st = None
+        block_cols = np.zeros((0, 1), np.int32)
+        num_blocks = np.zeros(0, np.int64)
+        cluster_of_window = np.zeros(0, np.int64)
         col_perm = np.arange(k, dtype=np.int64)
+        tile_density = 0.0
     t_reorder = time.perf_counter() - t0
 
     # 3) reuse-ordered flat tile stream (§6.2)
     t0 = time.perf_counter()
-    bc = np.asarray(be.block_cols)
-    nb = np.asarray(be.num_blocks)
-    vv = np.asarray(be.values)
-    if config.enable_reuse_order and be.num_windows:
-        plan_r = reuse.plan_window_order(bc, nb, np.asarray(cluster_of_window))
+    if config.enable_reuse_order and nw:
+        plan_r = reuse.plan_window_order(
+            block_cols, num_blocks, np.asarray(cluster_of_window)
+        )
         worder = plan_r.window_order
         reuse_factor = plan_r.reuse_factor
     else:
-        worder = np.arange(be.num_windows, dtype=np.int64)
+        worder = np.arange(nw, dtype=np.int64)
         reuse_factor = 1.0
-    steps_w, steps_c, steps_v = [], [], []
-    for w in worder:
-        cnt = int(nb[w])
-        if cnt:
-            steps_w.append(np.full(cnt, w, np.int32))
-            steps_c.append(bc[w, :cnt].astype(np.int32))
-            steps_v.append(vv[w, :cnt])
-    if steps_w:
-        step_window = np.concatenate(steps_w)
-        step_col = np.concatenate(steps_c)
-        flat_values = np.concatenate(steps_v, axis=0)
+    if st is not None and st.uw.size:
+        # pair p of window w occupies stream position start(w) + slot(p);
+        # nonzeros then land at (their pair's step, row%bm, col%bk) via one
+        # flat scatter-add — no per-window python loop, no value re-gather
+        cnt = num_blocks[worder]
+        total = int(cnt.sum())
+        starts_w = np.zeros(nw, np.int64)
+        starts_w[worder] = np.cumsum(cnt) - cnt
+        step_of_pair = starts_w[st.uw] + st.slot
+        step_window = np.zeros(total, np.int32)
+        step_window[step_of_pair] = st.uw.astype(np.int32)
+        step_col = np.zeros(total, np.int32)
+        step_col[step_of_pair] = st.ub.astype(np.int32)
+        lin = (
+            step_of_pair[st.inv_idx] * config.bm + prow % config.bm
+        ) * config.bk + ccols % config.bk
+        flat = np.zeros(total * config.bm * config.bk, np.float32)
+        np.add.at(flat, lin, part.core_vals.astype(np.float32))
+        flat_values = flat.reshape(total, config.bm, config.bk)
     else:  # degenerate all-fringe matrix: one zero tile keeps shapes static
         step_window = np.zeros(1, np.int32)
         step_col = np.zeros(1, np.int32)
         flat_values = np.zeros((1, config.bm, config.bk), np.float32)
 
     # map packed core rows -> original ids
-    rm_local = np.asarray(be.row_map)  # local core row per packed slot (-1 pad)
-    core_row_map = np.where(
-        rm_local >= 0,
-        part.core_row_ids[np.clip(rm_local, 0, max(n_core - 1, 0))] if n_core else -1,
-        -1,
-    ).astype(np.int32)
+    core_row_map = np.full(nw * config.bm, -1, np.int64)
+    if n_core:
+        core_row_map[:n_core] = part.core_row_ids[ro.row_order]
+    core_row_map = core_row_map.astype(np.int32)
 
-    # 4) fringe packing (row-sorted; packed row ids)
+    # 4) fringe packing: one single-key stable sort (rows are already the
+    # major key, so row runs come out contiguous); packed ids by run scan
     f_rows, f_cols, f_vals = part.fringe_rows, part.fringe_cols, part.fringe_vals
-    fringe_row_ids = np.unique(f_rows) if f_rows.size else np.zeros(1, np.int64)
-    packed_of_row = np.zeros(m, np.int64)
-    packed_of_row[fringe_row_ids] = np.arange(fringe_row_ids.size)
     if f_rows.size:
-        order = np.lexsort((f_cols, f_rows))
-        pr = packed_of_row[f_rows[order]].astype(np.int32)
+        order = np.argsort(f_rows * np.int64(k) + f_cols, kind="stable")
+        sr = f_rows[order]
+        first = np.concatenate([[True], sr[1:] != sr[:-1]])
+        fringe_row_ids = sr[first]
+        pr = (np.cumsum(first) - 1).astype(np.int32)
         pc = f_cols[order].astype(np.int32)
         pv = f_vals[order]
     else:
+        fringe_row_ids = np.zeros(1, np.int64)
         pr = np.zeros(1, np.int32)
         pc = np.zeros(1, np.int32)
         pv = np.zeros(1, np.float32)
+
+    # inverse row maps for the scatter-free merge: C's row r gathers from
+    # packed matrix row gather_src_matrix[r] and/or packed fringe row
+    # gather_src_vector[r] (-1 = no contribution from that path)
+    gather_src_matrix = np.full(m, -1, np.int32)
+    valid_slots = np.flatnonzero(core_row_map >= 0)
+    gather_src_matrix[core_row_map[valid_slots]] = valid_slots
+    gather_src_vector = np.full(m, -1, np.int32)
+    if f_rows.size:
+        gather_src_vector[fringe_row_ids] = np.arange(
+            fringe_row_ids.size, dtype=np.int32
+        )
     t_pack = time.perf_counter() - t0
 
     k_pad = ((k + config.bk - 1) // config.bk) * config.bk
@@ -191,9 +253,9 @@ def prepare(
         ("fringe_nnz", int(part.fringe_nnz)),
         ("core_nnz", int(part.core_nnz)),
         ("fringe_fraction", float(part.fringe_fraction())),
-        ("tile_density", float(be.tile_density)),
+        ("tile_density", float(tile_density)),
         ("reuse_factor", float(reuse_factor)),
-        ("num_windows", int(be.num_windows)),
+        ("num_windows", int(nw)),
         ("num_steps", int(step_window.shape[0])),
         ("t_partition_s", t_part),
         ("t_reorder_s", t_reorder),
@@ -210,23 +272,38 @@ def prepare(
         fringe_vals=jnp.asarray(pv),
         fringe_row_ids=jnp.asarray(fringe_row_ids.astype(np.int32)),
         col_perm=jnp.asarray(col_perm.astype(np.int32)),
+        gather_src_matrix=jnp.asarray(gather_src_matrix),
+        gather_src_vector=jnp.asarray(gather_src_vector),
         shape=tuple(shape),
         config=config,
         stats=stats,
     )
 
 
-def _pad_b(plan: NeutronPlan, b: jax.Array) -> jax.Array:
-    """Apply the column permutation to B rows and pad K/N to block multiples."""
-    cfg = plan.config
+def _permute_pad_b(
+    b: jax.Array, col_perm: jax.Array, reorder_cols: bool, bk: int, bn: int
+) -> jax.Array:
+    """Apply the column permutation to B rows and pad K/N to block multiples
+    (shared by the per-path executors and the fused executor)."""
     k, n = b.shape
-    if cfg.reorder_cols:
-        b = b[plan.col_perm]
-    k_pad = ((k + cfg.bk - 1) // cfg.bk) * cfg.bk
-    n_pad = ((n + cfg.bn - 1) // cfg.bn) * cfg.bn
+    if reorder_cols:
+        b = b[col_perm]
+    k_pad = ((k + bk - 1) // bk) * bk
+    n_pad = ((n + bn - 1) // bn) * bn
     if k_pad != k or n_pad != n:
         b = jnp.pad(b, ((0, k_pad - k), (0, n_pad - n)))
     return b
+
+
+def _pad_b(plan: NeutronPlan, b: jax.Array) -> jax.Array:
+    cfg = plan.config
+    return _permute_pad_b(b, plan.col_perm, cfg.reorder_cols, cfg.bk, cfg.bn)
+
+
+def _gather_rows(packed: jax.Array, src: jax.Array) -> jax.Array:
+    """Scatter-free merge: out[r] = packed[src[r]] where src[r] >= 0 else 0."""
+    idx = jnp.clip(src, 0, packed.shape[0] - 1)
+    return jnp.where((src >= 0)[:, None], packed[idx], 0.0)
 
 
 def execute_matrix_path(plan: NeutronPlan, b: jax.Array) -> jax.Array:
@@ -234,16 +311,15 @@ def execute_matrix_path(plan: NeutronPlan, b: jax.Array) -> jax.Array:
     cfg = plan.config
     m, _ = plan.shape
     n = b.shape[1]
+    if not plan.has_core:  # skip the dummy zero-tile dispatch entirely
+        return jnp.zeros((m, n), jnp.float32)
     bp = _pad_b(plan, b)
     packed = ops.block_stream_spmm(
         plan.step_window, plan.step_col, plan.flat_values, bp,
         num_windows=plan.num_windows, bm=cfg.bm, bk=cfg.bk, bn=cfg.bn,
         impl=cfg.impl,
     )[:, :n]
-    valid = (plan.core_row_map >= 0)[:, None]
-    idx = jnp.clip(plan.core_row_map, 0, m - 1)
-    out = jnp.zeros((m, n), jnp.float32)
-    return out.at[idx].add(jnp.where(valid, packed, 0.0))
+    return _gather_rows(packed, plan.gather_src_matrix)
 
 
 def execute_vector_path(plan: NeutronPlan, b: jax.Array) -> jax.Array:
@@ -251,18 +327,75 @@ def execute_vector_path(plan: NeutronPlan, b: jax.Array) -> jax.Array:
     cfg = plan.config
     m, _ = plan.shape
     n = b.shape[1]
+    if not plan.has_fringe:  # skip the 1-element dummy kernel entirely
+        return jnp.zeros((m, n), jnp.float32)
     bp = _pad_b(plan, b)
     packed = ops.fringe_spmm(
         plan.fringe_rows, plan.fringe_cols, plan.fringe_vals, bp,
         num_rows=int(plan.fringe_row_ids.shape[0]), bn=cfg.bn, impl=cfg.impl,
+        chunk=cfg.fringe_chunk,
     )[:, :n]
-    out = jnp.zeros((m, n), jnp.float32)
-    return out.at[plan.fringe_row_ids].add(packed)
+    return _gather_rows(packed, plan.gather_src_vector)
+
+
+# --- fused single-dispatch executor ---------------------------------------
+# One jitted program per plan *signature* (static structure), cached so that
+# re-prepared plans of identical structure — e.g. every epoch of an adaptive
+# run that didn't migrate — reuse the compiled executable without retracing.
+_FUSED_TRACES: list = []  # signatures appended at trace time (tests)
+
+
+def fused_trace_count() -> int:
+    """Number of fused-executor traces since process start (test hook)."""
+    return len(_FUSED_TRACES)
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_executor(sig: Tuple):
+    (shape, bm, bk, bn, impl, reorder_cols, fringe_chunk, num_windows,
+     _num_steps, _nnz_f, n_fringe_rows, has_core, has_fringe) = sig
+    m, k = shape
+
+    def _run(step_window, step_col, flat_values, fringe_rows, fringe_cols,
+             fringe_vals, col_perm, gsrc_m, gsrc_v, b):
+        _FUSED_TRACES.append(sig)
+        n = b.shape[1]
+        bp = _permute_pad_b(b, col_perm, reorder_cols, bk, bn)
+
+        c = None
+        if has_core:
+            packed_m = ops.block_stream_spmm(
+                step_window, step_col, flat_values, bp,
+                num_windows=num_windows, bm=bm, bk=bk, bn=bn, impl=impl,
+            )[:, :n]
+            c = _gather_rows(packed_m, gsrc_m)
+        if has_fringe:
+            packed_v = ops.fringe_spmm(
+                fringe_rows, fringe_cols, fringe_vals, bp,
+                num_rows=n_fringe_rows, bn=bn, impl=impl, chunk=fringe_chunk,
+            )[:, :n]
+            cv = _gather_rows(packed_v, gsrc_v)
+            c = cv if c is None else c + cv
+        if c is None:  # empty matrix
+            c = jnp.zeros((m, n), jnp.float32)
+        return c
+
+    return jax.jit(_run)
 
 
 def execute(plan: NeutronPlan, b: jax.Array) -> jax.Array:
-    """Full coordinated SpMM: C = A @ B, original row order, fp32."""
-    return execute_matrix_path(plan, b) + execute_vector_path(plan, b)
+    """Full coordinated SpMM: C = A @ B, original row order, fp32.
+
+    Single end-to-end jitted dispatch: both engine paths plus the
+    scatter-free gather merge compile into one program (empty paths are
+    dropped at trace time).
+    """
+    fn = _fused_executor(plan.signature())
+    return fn(
+        plan.step_window, plan.step_col, plan.flat_values,
+        plan.fringe_rows, plan.fringe_cols, plan.fringe_vals,
+        plan.col_perm, plan.gather_src_matrix, plan.gather_src_vector, b,
+    )
 
 
 def neutron_spmm(

@@ -1,0 +1,19 @@
+"""Version-compat shims for the Pallas TPU API surface.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` across
+releases (0.4.x ships only the ``TPU``-prefixed name, newer releases only the
+bare one).  Kernels go through :func:`tpu_compiler_params` so they lower on
+either side of the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_COMPILER_PARAMS_CLS = getattr(
+    pltpu, "CompilerParams", None
+) or getattr(pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """Build TPU compiler params under whichever class name this jax has."""
+    return _COMPILER_PARAMS_CLS(**kwargs)

@@ -32,6 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import tpu_compiler_params
+
 
 def _kernel(
     step_window_ref,  # scalar prefetch: (T,) int32
@@ -90,7 +92,7 @@ def dense_tile_spmm(
             out_specs=pl.BlockSpec((bm, bn), lambda j, t, w, c: (w[t], j)),
         ),
         out_shape=jax.ShapeDtypeStruct((num_windows * bm, n), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

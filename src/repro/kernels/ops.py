@@ -37,8 +37,27 @@ def block_stream_spmm(
     bn: int = 256,
     impl: Impl = "xla",
 ) -> jax.Array:
-    """Matrix-engine path; returns packed (num_windows*bm, N) fp32."""
+    """Matrix-engine path; returns packed (num_windows*bm, N) fp32.
+
+    The xla impl assumes plan-generated streams, whose (window, k-block)
+    pairs are unique: above the occupancy threshold it dispatches to the
+    densified GEMM, where a duplicate pair's last tile would win instead
+    of accumulating (the streaming/pallas forms accumulate).
+    """
     if impl == "xla":
+        # static occupancy = active tiles / total (window, k-block) slots.
+        # Dense-ish cores run ~10-20x faster as one densified GEMM than as
+        # a batched per-tile einsum; keep the streaming form only when the
+        # zero-block FLOP waste would dominate (stream cost scales with
+        # occupancy, the densified GEMM is occupancy-independent) or the
+        # dense core would be unreasonably large in absolute terms.
+        t_steps = flat_values.shape[0]
+        slots = max(num_windows * (b.shape[0] // bk), 1)
+        core_elems = num_windows * bm * b.shape[0]
+        if num_windows and t_steps / slots >= 0.25 and core_elems <= 2 ** 26:
+            return ref.densified_block_stream_spmm(
+                step_window, step_col, flat_values, b, num_windows
+            )
         return ref.ref_block_stream_spmm(
             step_window, step_col, flat_values, b, num_windows
         )
@@ -49,7 +68,9 @@ def block_stream_spmm(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("num_rows", "bn", "impl"))
+@functools.partial(
+    jax.jit, static_argnames=("num_rows", "bn", "impl", "chunk")
+)
 def fringe_spmm(
     rows: jax.Array,
     cols: jax.Array,
@@ -59,12 +80,20 @@ def fringe_spmm(
     num_rows: int,
     bn: int = 256,
     impl: Impl = "xla",
+    chunk: int | None = None,
 ) -> jax.Array:
-    """Vector-engine path; returns packed (num_rows, N) fp32."""
+    """Vector-engine path; returns packed (num_rows, N) fp32.
+
+    ``chunk`` is the per-grid-step nonzero count of the chunked gather
+    kernel; for the XLA path it bounds the gather intermediate (None means
+    the one-shot vectorized formulation).  The pallas kernel unrolls its
+    chunk loop in python, so large XLA-oriented values (thousands) are
+    clamped to a compile-friendly unroll factor there.
+    """
     if impl == "xla":
-        return ref.ref_gather_spmm(rows, cols, vals, b, num_rows)
+        return ref.ref_gather_spmm(rows, cols, vals, b, num_rows, chunk=chunk)
     return gather_spmm(
         rows, cols, vals, b,
-        num_rows=num_rows, bn=bn,
+        num_rows=num_rows, bn=bn, chunk=min(chunk or 8, 64),
         interpret=(impl == "pallas_interpret"),
     )

@@ -42,13 +42,81 @@ def ref_block_stream_spmm(
     return out.reshape(num_windows * bm, n)
 
 
+def densified_block_stream_spmm(
+    step_window: jax.Array,  # (T,) int32
+    step_col: jax.Array,     # (T,) int32
+    flat_values: jax.Array,  # (T, bm, bk)
+    b: jax.Array,            # (K, N) — K a multiple of bk
+    num_windows: int,
+) -> jax.Array:
+    """High-occupancy XLA formulation of the flat block stream.
+
+    The per-tile batched einsum keeps every (bm, bk)x(bk, N) product as its
+    own small matmul — far below peak on wide backends.  When most k-blocks
+    of each window are active, scattering the tile stream back into a
+    densified (num_windows*bm, K) core and issuing ONE large matmul trades
+    a few wasted zero-block FLOPs for full-rate GEMM throughput.  Exactly
+    the same math for plan-generated streams, whose (window, k-block) pairs
+    are unique — with duplicates, the last tile of a slot wins instead of
+    accumulating.  Returns packed (num_windows*bm, N) fp32.
+    """
+    t, bm, bk = flat_values.shape
+    k, n = b.shape
+    nkb = k // bk
+    # scatter only the T slot *indices* (cheap), then densify by GATHERING
+    # tiles — large XLA scatters are far slower than the equivalent gather
+    slot = jnp.full((num_windows, nkb), t, jnp.int32)
+    slot = slot.at[step_window, step_col].set(
+        jnp.arange(t, dtype=jnp.int32), mode="drop"
+    )
+    valid = slot < t
+    tiles = flat_values.astype(jnp.float32)[jnp.where(valid, slot, 0)]
+    tiles = jnp.where(valid[..., None, None], tiles, 0.0)
+    core = tiles.transpose(0, 2, 1, 3).reshape(num_windows * bm, k)
+    return jnp.dot(
+        core, b.astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+
+
 def ref_gather_spmm(
     rows: jax.Array,  # (nnz,) int32, values scatter-add into packed row ids
     cols: jax.Array,  # (nnz,) int32
     vals: jax.Array,  # (nnz,)
     b: jax.Array,     # (K, N)
     num_rows: int,
+    chunk: int | None = None,
 ) -> jax.Array:
-    """Oracle for the vector path: out[rows[i]] += vals[i] * B[cols[i]]."""
-    gathered = b[cols].astype(jnp.float32) * vals.astype(jnp.float32)[:, None]
-    return jax.ops.segment_sum(gathered, rows, num_segments=num_rows)
+    """Oracle for the vector path: out[rows[i]] += vals[i] * B[cols[i]].
+
+    ``chunk`` bounds the materialized gather to (chunk, N) per step via a
+    scanned accumulate — the XLA analogue of the chunked Pallas kernel's
+    grid step — instead of the (nnz, N) one-shot intermediate.
+    """
+    nnz = rows.shape[0]
+    if chunk is None or nnz <= chunk:
+        gathered = (
+            b[cols].astype(jnp.float32) * vals.astype(jnp.float32)[:, None]
+        )
+        return jax.ops.segment_sum(gathered, rows, num_segments=num_rows)
+
+    nnz_pad = ((nnz + chunk - 1) // chunk) * chunk
+    if nnz_pad != nnz:
+        pad = nnz_pad - nnz
+        rows = jnp.concatenate([rows, jnp.zeros(pad, rows.dtype)])
+        cols = jnp.concatenate([cols, jnp.zeros(pad, cols.dtype)])
+        vals = jnp.concatenate([vals, jnp.zeros(pad, vals.dtype)])
+    n_chunks = nnz_pad // chunk
+    xs = (
+        rows.reshape(n_chunks, chunk),
+        cols.reshape(n_chunks, chunk),
+        vals.reshape(n_chunks, chunk),
+    )
+
+    def body(out, x):
+        r, c, v = x
+        gathered = b[c].astype(jnp.float32) * v.astype(jnp.float32)[:, None]
+        return out.at[r].add(gathered), None
+
+    init = jnp.zeros((num_rows, b.shape[1]), jnp.float32)
+    out, _ = jax.lax.scan(body, init, xs)
+    return out

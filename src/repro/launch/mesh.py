@@ -12,13 +12,19 @@ from typing import Dict
 import jax
 
 
+def _mesh_kwargs(n_axes: int) -> Dict:
+    """``axis_types`` only exists on newer jax; older releases default to
+    Auto, so omitting it is equivalent there."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return jax.make_mesh(shape, axes, **_mesh_kwargs(len(axes)))
 
 
 def mesh_axis_sizes(mesh) -> Dict[str, int]:
@@ -27,7 +33,5 @@ def mesh_axis_sizes(mesh) -> Dict[str, int]:
 
 def make_debug_mesh(n_data: int = 2, n_model: int = 4):
     """Small mesh for CPU tests (requires forced host device count)."""
-    return jax.make_mesh(
-        (n_data, n_model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return jax.make_mesh((n_data, n_model), ("data", "model"),
+                         **_mesh_kwargs(2))

@@ -1,6 +1,6 @@
 """Adaptive coordination (paper §5.3) + row-window balancing (paper §7)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.coordinator import (
     AdaptiveCoordinator, balance_row_window_list, list_imbalance,

@@ -1,6 +1,6 @@
 """Data pipeline: determinism, skip-ahead, shard disjointness, modalities."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.data import graphs, pipeline
 

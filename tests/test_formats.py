@@ -1,7 +1,7 @@
 """Format round-trips + tile-redundancy metric (paper Table 1)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import formats
 from conftest import make_sparse

@@ -1,0 +1,162 @@
+"""Fused single-dispatch executor: oracle equivalence, chunked fringe
+kernel sweeps, and retrace-count guarantees."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import spmm
+from repro.data import graphs
+from repro.kernels import ref
+from repro.kernels.gather_spmm import gather_spmm
+from conftest import make_sparse
+
+PANEL = ["cora", "wiki-RfA", "ogbn-arxiv", "F1", "reddit"]
+
+
+def _load(name, max_dim=512):
+    spec = graphs.PAPER_DATASETS[name]
+    spec = dataclasses.replace(spec, m=min(spec.m, max_dim),
+                               k=min(spec.k, max_dim))
+    rows, cols, vals = graphs.generate(spec)
+    return rows, cols, vals, (spec.m, spec.k)
+
+
+# ---------------------------------------------------------------------------
+# fused execute == matrix path + vector path (dataset panel oracle)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", PANEL)
+def test_fused_matches_two_path_sum_on_panel(name):
+    rows, cols, vals, shape = _load(name)
+    b = jnp.asarray(
+        np.random.RandomState(0).randn(shape[1], 64).astype(np.float32))
+    plan = spmm.prepare(rows, cols, vals, shape, spmm.SpmmConfig(impl="xla"))
+    fused = np.asarray(spmm.execute(plan, b))
+    two_path = np.asarray(
+        spmm.execute_matrix_path(plan, b) + spmm.execute_vector_path(plan, b))
+    np.testing.assert_allclose(fused, two_path, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("alpha", [None, 1.0, 1e-9])
+def test_fused_matches_dense_reference(rng, alpha):
+    """Including the all-fringe (alpha=1) and all-core (alpha~0) splits that
+    exercise the empty-path short-circuits."""
+    a, rows, cols, vals = make_sparse(rng, 150, 130, 0.08, n_dense_rows=6)
+    b = rng.randn(130, 64).astype(np.float32)
+    cfg = spmm.SpmmConfig(impl="xla", alpha=alpha,
+                          enable_col_stage=alpha is None)
+    plan = spmm.prepare(rows, cols, vals, a.shape, cfg)
+    out = np.asarray(spmm.execute(plan, jnp.asarray(b)))
+    expect = a.astype(np.float64) @ b.astype(np.float64)
+    scale = np.abs(expect).max() + 1e-9
+    assert np.abs(out - expect).max() / scale < 1e-4
+
+
+def test_empty_path_short_circuits(rng):
+    """Empty paths return exact zeros without dispatching dummy kernels."""
+    a, rows, cols, vals = make_sparse(rng, 64, 64, 0.05)
+    b = jnp.asarray(rng.randn(64, 32).astype(np.float32))
+    all_fringe = spmm.prepare(rows, cols, vals, a.shape,
+                              spmm.SpmmConfig(impl="xla", alpha=1.0))
+    assert not all_fringe.has_core
+    assert np.all(np.asarray(spmm.execute_matrix_path(all_fringe, b)) == 0.0)
+    all_core = spmm.prepare(
+        rows, cols, vals, a.shape,
+        spmm.SpmmConfig(impl="xla", alpha=1e-12, enable_col_stage=False))
+    assert not all_core.has_fringe
+    assert np.all(np.asarray(spmm.execute_vector_path(all_core, b)) == 0.0)
+
+
+def test_empty_matrix_executes_to_zeros():
+    plan = spmm.prepare(np.zeros(0, np.int64), np.zeros(0, np.int64),
+                        np.zeros(0, np.float32), (32, 48),
+                        spmm.SpmmConfig(impl="xla"))
+    b = jnp.ones((48, 16), jnp.float32)
+    assert np.all(np.asarray(spmm.execute(plan, b)) == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# chunked fringe kernel vs oracle
+# ---------------------------------------------------------------------------
+def _sorted_coo(rng, num_rows, kk, nnz):
+    rows = np.sort(rng.randint(0, num_rows, nnz)).astype(np.int32)
+    for r in range(num_rows):  # every packed row owns >= 1 nonzero
+        if r not in rows:
+            rows[rng.randint(nnz)] = r
+    rows = np.sort(rows)
+    cols = rng.randint(0, kk, nnz).astype(np.int32)
+    vals = rng.randn(nnz).astype(np.float32)
+    return rows, cols, vals
+
+
+@pytest.mark.parametrize("chunk", [1, 2, 3, 8, 16])
+@pytest.mark.parametrize("nnz", [5, 40, 64])
+def test_chunked_gather_matches_ref(chunk, nnz):
+    """Sweep chunk sizes incl. non-divisors of nnz (padded tail chunks)."""
+    rng = np.random.RandomState(chunk * 100 + nnz)
+    num_rows, kk = 7, 32
+    rows, cols, vals = _sorted_coo(rng, num_rows, kk, nnz)
+    b = jnp.asarray(rng.randn(kk, 128).astype(np.float32))
+    out = gather_spmm(jnp.asarray(rows), jnp.asarray(cols), jnp.asarray(vals),
+                      b, num_rows=num_rows, bn=128, chunk=chunk,
+                      interpret=True)
+    expect = ref.ref_gather_spmm(jnp.asarray(rows), jnp.asarray(cols),
+                                 jnp.asarray(vals), b, num_rows)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_chunked_gather_segment_boundaries():
+    """Row runs crossing chunk edges must accumulate across grid steps."""
+    # rows: run of 5 zeros then 3 ones -> with chunk=4 the row-0 run spans
+    # two chunks and row 1 starts mid-chunk
+    rows = jnp.asarray(np.array([0, 0, 0, 0, 0, 1, 1, 1], np.int32))
+    cols = jnp.asarray(np.array([0, 1, 2, 0, 1, 2, 2, 3], np.int32))
+    vals = jnp.asarray(np.arange(1.0, 9.0, dtype=np.float32))
+    b = jnp.asarray(np.random.RandomState(3).randn(4, 128).astype(np.float32))
+    for chunk in (1, 2, 4, 8):
+        out = gather_spmm(rows, cols, vals, b, num_rows=2, bn=128,
+                          chunk=chunk, interpret=True)
+        expect = ref.ref_gather_spmm(rows, cols, vals, b, 2)
+        # fp32 accumulation order differs between run-wise and segment sums
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("chunk", [3, 16, None])
+def test_ref_gather_chunked_matches_oneshot(chunk):
+    rng = np.random.RandomState(7)
+    rows, cols, vals = _sorted_coo(rng, 9, 24, 50)
+    b = jnp.asarray(rng.randn(24, 96).astype(np.float32))
+    out = ref.ref_gather_spmm(jnp.asarray(rows), jnp.asarray(cols),
+                              jnp.asarray(vals), b, 9, chunk=chunk)
+    expect = ref.ref_gather_spmm(jnp.asarray(rows), jnp.asarray(cols),
+                                 jnp.asarray(vals), b, 9)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# retrace behavior of the cached executor
+# ---------------------------------------------------------------------------
+def test_fused_executor_traces_once_across_epochs(rng):
+    a, rows, cols, vals = make_sparse(rng, 120, 100, 0.06, n_dense_rows=4)
+    cfg = spmm.SpmmConfig(impl="xla")
+    plan = spmm.prepare(rows, cols, vals, a.shape, cfg)
+    b = jnp.asarray(rng.randn(100, 48).astype(np.float32))
+    spmm.execute(plan, b).block_until_ready()
+    before = spmm.fused_trace_count()
+    for _ in range(5):  # same plan, repeated epochs
+        spmm.execute(plan, b).block_until_ready()
+    # re-prepared plan with identical structure (same signature) must reuse
+    # the cached executor without tracing again
+    plan2 = spmm.prepare(rows, cols, vals, a.shape, cfg)
+    assert plan2.signature() == plan.signature()
+    spmm.execute(plan2, b).block_until_ready()
+    assert spmm.fused_trace_count() == before
+
+    # a different operand width is a legitimate retrace (new jit shape)
+    b2 = jnp.asarray(rng.randn(100, 32).astype(np.float32))
+    spmm.execute(plan, b2).block_until_ready()
+    assert spmm.fused_trace_count() == before + 1

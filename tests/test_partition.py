@@ -1,6 +1,6 @@
 """Two-stage row/column extraction (paper §5.2.2) invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import partition
 from repro.core.cost_model import EngineCostModel

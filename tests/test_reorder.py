@@ -1,6 +1,6 @@
 """Global-local reordering (paper §6.1): permutation validity + density."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import reorder
 
