@@ -1,0 +1,74 @@
+"""Benchmark regression gate: fail when exec time regresses past a band.
+
+Compares a fresh ``collect_fused_json`` record against a committed baseline.
+Absolute wall-clock does not transfer between machines (a CI runner is not
+the laptop that produced the baseline), so the gate compares the
+*calibration-normalized* geomean: each record's geomean exec time divided by
+its own ``calib_us`` dense-matmul anchor.  A ratio above ``--tolerance``
+fails the gate (exit 1); large improvements are reported as a hint to
+refresh the baseline.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        benchmarks/baseline_ci.json fresh.json --tolerance 1.6
+"""
+import argparse
+import json
+import sys
+
+from .common import geomean
+
+
+def normalized_geomean(record: dict, datasets) -> float:
+    us = record["execute"]["fused_us"]
+    return geomean(us[k] for k in datasets) / float(record["calib_us"])
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("baseline", help="committed baseline JSON")
+    p.add_argument("fresh", help="freshly collected JSON")
+    p.add_argument("--tolerance", type=float, default=1.6,
+                   help="max allowed fresh/baseline normalized-geomean ratio")
+    args = p.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+
+    if base["panel"] != fresh["panel"]:
+        print("FAIL: panel mismatch — records are not comparable\n"
+              f"  baseline: {base['panel']}\n  fresh:    {fresh['panel']}")
+        return 1
+
+    shared = sorted(
+        set(base["execute"]["fused_us"]) & set(fresh["execute"]["fused_us"])
+    )
+    if not shared:
+        print("FAIL: baseline and fresh records share no datasets")
+        return 1
+
+    base_g = normalized_geomean(base, shared)
+    fresh_g = normalized_geomean(fresh, shared)
+    ratio = fresh_g / base_g
+    print(f"datasets: {shared}")
+    print(f"baseline normalized geomean: {base_g:.3f} "
+          f"(geomean/calib, calib_us={base['calib_us']})")
+    print(f"fresh    normalized geomean: {fresh_g:.3f} "
+          f"(calib_us={fresh['calib_us']})")
+    print(f"ratio: {ratio:.3f}  (tolerance: {args.tolerance:.2f})")
+
+    if ratio > args.tolerance:
+        print(f"FAIL: exec time regressed {ratio:.2f}x past the "
+              f"{args.tolerance:.2f}x band")
+        return 1
+    if ratio < 1.0 / args.tolerance:
+        print("OK (note: large improvement — consider refreshing the "
+              "committed baseline)")
+        return 0
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -45,6 +45,10 @@ def time_fn(fn: Callable[[], jax.Array], repeats: int = 3,
     return best * 1e6
 
 
+def geomean(values) -> float:
+    return float(np.exp(np.mean(np.log(list(values)))))
+
+
 def emit(name: str, us_per_call: float, derived: str) -> str:
     line = f"{name},{us_per_call:.1f},{derived}"
     print(line, flush=True)

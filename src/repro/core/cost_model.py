@@ -151,3 +151,55 @@ class EngineCostModel:
 
 def default_cost_model(n_cols: int = 256) -> EngineCostModel:
     return EngineCostModel.analytic_tpu(n_cols=n_cols)
+
+
+# --- vector-path (fringe) VMEM dispatch tiers ------------------------------
+# The coordinator's matrix/vector split is only meaningful if the vector path
+# can actually execute what it is handed, so the kernel-dispatch tier choice
+# lives here next to the split model: the budget leaves ~4 MB of the 16 MB
+# VMEM for the grid pipeline's double-buffered fetches and Mosaic scratch.
+FRINGE_VMEM_BUDGET = 12 * 1024 * 1024
+FRINGE_MIN_BK = SUBLANES  # smallest legal fp32 k-slice (sublane multiple)
+
+
+def _pad_rows(num_rows: int) -> int:
+    """Packed fringe rows padded to the fp32 sublane multiple."""
+    return max(SUBLANES, ((num_rows + SUBLANES - 1) // SUBLANES) * SUBLANES)
+
+
+def fringe_resident_bytes(k: int, num_rows: int, bn: int) -> int:
+    """Tier-(a) working set: full (K, bn) B panel + packed fp32 out block."""
+    return (k + _pad_rows(num_rows)) * bn * 4
+
+
+def fringe_ksharded_bytes(bk: int, num_rows: int, bn: int) -> int:
+    """Tier-(b) working set: double-buffered (bk, bn) B slice + out block.
+
+    Unlike the resident tier, the B slice changes every grid step, so the
+    pipeline keeps two in flight — hence the 2x on bk.
+    """
+    return (2 * bk + _pad_rows(num_rows)) * bn * 4
+
+
+def select_fringe_tier(
+    k: int, num_rows: int, bn: int, vmem_budget: Optional[int] = None
+) -> tuple:
+    """Pick the vector-path kernel tier for a fringe of this shape.
+
+    Returns ``(tier, bk)``:
+      - ``("resident", 0)``  — single-panel kernel; whole (K, bn) B panel
+        stays in VMEM (fastest: B loaded once per n-block).
+      - ``("ksharded", bk)`` — K-sharded streaming kernel; only a (bk, bn)
+        B slice is resident per step, with bk the largest sublane multiple
+        that fits the budget (least redundant streaming).
+      - ``("xla", 0)``       — even one minimal (8, bn) slice plus the
+        packed output block overflows; fall back to the XLA gather.
+    """
+    budget = FRINGE_VMEM_BUDGET if vmem_budget is None else int(vmem_budget)
+    if fringe_resident_bytes(k, num_rows, bn) <= budget:
+        return "resident", 0
+    bk_max = (budget // (bn * 4) - _pad_rows(num_rows)) // 2
+    bk = min((bk_max // SUBLANES) * SUBLANES, _pad_rows(k))
+    if bk >= FRINGE_MIN_BK:
+        return "ksharded", int(bk)
+    return "xla", 0

@@ -25,7 +25,9 @@ import numpy as np
 from ..kernels import ops
 from . import formats, partition, reorder, reuse
 from .coordinator import AdaptiveCoordinator
-from .cost_model import EngineCostModel, default_cost_model
+from .cost_model import (
+    EngineCostModel, default_cost_model, select_fringe_tier,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +44,7 @@ class SpmmConfig:
     max_clusters: int = 64
     impl: ops.Impl = "xla"
     fringe_chunk: Optional[int] = None     # nonzeros per fringe grid step
+    fringe_vmem_budget: Optional[int] = None  # override dispatch-tier budget
     seed: int = 0
 
 
@@ -64,10 +67,21 @@ class NeutronPlan:
     # scatter-free merge: inverse row maps (original row -> packed slot or -1)
     gather_src_matrix: jax.Array  # (M,) int32 -> packed matrix-path row
     gather_src_vector: jax.Array  # (M,) int32 -> packed vector-path row
+    # K-sharded streaming tier: fringe COO re-bucketed by k-block (sorted by
+    # (k-block, row, col), per-bucket chunk-padded, columns k-block-local);
+    # 1-element dummies unless fringe_tier == "ksharded"
+    fringe_kb_chunk: jax.Array  # (num_chunks,) int32, chunk -> k-block id
+    fringe_kb_rows: jax.Array   # (num_chunks*chunk,) int32
+    fringe_kb_cols: jax.Array   # (num_chunks*chunk,) int32
+    fringe_kb_vals: jax.Array   # (num_chunks*chunk,)
 
     shape: Tuple[int, int]
     config: SpmmConfig
     stats: Tuple  # immutable (key, value) pairs
+    # vector-path kernel dispatch tier chosen at prepare time from the VMEM
+    # budget (cost_model.select_fringe_tier): "resident" | "ksharded" | "xla"
+    fringe_tier: str = "resident"
+    fringe_bk: int = 0           # k-block size of the ksharded tier (0 else)
 
     def tree_flatten(self):
         leaves = (
@@ -75,8 +89,13 @@ class NeutronPlan:
             self.fringe_rows, self.fringe_cols, self.fringe_vals,
             self.fringe_row_ids, self.col_perm,
             self.gather_src_matrix, self.gather_src_vector,
+            self.fringe_kb_chunk, self.fringe_kb_rows,
+            self.fringe_kb_cols, self.fringe_kb_vals,
         )
-        return leaves, (self.shape, self.config, self.stats)
+        return leaves, (
+            self.shape, self.config, self.stats,
+            self.fringe_tier, self.fringe_bk,
+        )
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
@@ -99,13 +118,21 @@ class NeutronPlan:
         return bool(self.stats_dict["fringe_nnz"])
 
     def signature(self) -> Tuple:
-        """Static structure key: plans sharing it reuse one jitted executor."""
+        """Static structure key: plans sharing it reuse one jitted executor.
+
+        Includes the vector-path dispatch tier and its k-block size: two
+        plans differing only in tier (e.g. from different VMEM budgets)
+        must not alias one cached executor.
+        """
         cfg = self.config
         return (
             self.shape, cfg.bm, cfg.bk, cfg.bn, cfg.impl, cfg.reorder_cols,
             cfg.fringe_chunk, self.num_windows,
             int(self.step_window.shape[0]), int(self.fringe_rows.shape[0]),
             int(self.fringe_row_ids.shape[0]), self.has_core, self.has_fringe,
+            self.fringe_tier, self.fringe_bk,
+            int(self.fringe_kb_chunk.shape[0]),
+            int(self.fringe_kb_rows.shape[0]),
         )
 
 
@@ -233,6 +260,48 @@ def prepare(
         pc = np.zeros(1, np.int32)
         pv = np.zeros(1, np.float32)
 
+    # 4b) vector-path dispatch tier: a VMEM-budget estimate picks the fringe
+    # kernel (resident single-panel / K-sharded streaming / XLA fallback) so
+    # the coordinator's split stays consistent with what the vector engine
+    # can actually execute.  The K-sharded tier needs its nonzeros bucketed
+    # by k-block — sorted (k-block, row, col), per-bucket padded to a chunk
+    # multiple with zero-value entries, columns made k-block-local — built
+    # here vectorized; empty k-blocks get no chunks (their B slices are
+    # never fetched).
+    k_pad = ((k + config.bk - 1) // config.bk) * config.bk
+    fringe_tier, fringe_bk = select_fringe_tier(
+        k_pad, int(fringe_row_ids.shape[0]), config.bn,
+        vmem_budget=config.fringe_vmem_budget,
+    )
+    # the bucketed stream is only consumed by the pallas kernels; xla-impl
+    # plans skip the bucketing sort/scatter passes (tier is still recorded)
+    if fringe_tier == "ksharded" and f_rows.size and config.impl != "xla":
+        chunk_eff = min(config.fringe_chunk or 8, 64)  # ops.py pallas clamp
+        nkb_f = (k_pad + fringe_bk - 1) // fringe_bk
+        kb = pc.astype(np.int64) // fringe_bk
+        order_kb = np.argsort(kb, kind="stable")  # keeps (row, col) per kb
+        kbs = kb[order_kb]
+        counts = np.bincount(kbs, minlength=nkb_f)
+        padded = ((counts + chunk_eff - 1) // chunk_eff) * chunk_eff
+        src_start = np.cumsum(counts) - counts
+        dst_start = np.cumsum(padded) - padded
+        dest = dst_start[kbs] + np.arange(kbs.size) - src_start[kbs]
+        total_kb = int(padded.sum())
+        kb_rows = np.zeros(total_kb, np.int32)
+        kb_rows[dest] = pr[order_kb]
+        kb_cols = np.zeros(total_kb, np.int32)
+        kb_cols[dest] = (pc[order_kb] % fringe_bk).astype(np.int32)
+        kb_vals = np.zeros(total_kb, pv.dtype)
+        kb_vals[dest] = pv[order_kb]
+        kb_chunk = np.repeat(
+            np.arange(nkb_f, dtype=np.int32), padded // chunk_eff
+        )
+    else:
+        kb_chunk = np.zeros(1, np.int32)
+        kb_rows = np.zeros(1, np.int32)
+        kb_cols = np.zeros(1, np.int32)
+        kb_vals = np.zeros(1, np.float32)
+
     # inverse row maps for the scatter-free merge: C's row r gathers from
     # packed matrix row gather_src_matrix[r] and/or packed fringe row
     # gather_src_vector[r] (-1 = no contribution from that path)
@@ -245,8 +314,6 @@ def prepare(
             fringe_row_ids.size, dtype=np.int32
         )
     t_pack = time.perf_counter() - t0
-
-    k_pad = ((k + config.bk - 1) // config.bk) * config.bk
     stats = (
         ("alpha", float(part.alpha)),
         ("nnz", int(part.nnz)),
@@ -261,6 +328,8 @@ def prepare(
         ("t_reorder_s", t_reorder),
         ("t_pack_s", t_pack),
         ("k_pad", k_pad),
+        ("fringe_tier", fringe_tier),
+        ("fringe_bk", int(fringe_bk)),
     )
     return NeutronPlan(
         step_window=jnp.asarray(step_window),
@@ -274,9 +343,15 @@ def prepare(
         col_perm=jnp.asarray(col_perm.astype(np.int32)),
         gather_src_matrix=jnp.asarray(gather_src_matrix),
         gather_src_vector=jnp.asarray(gather_src_vector),
+        fringe_kb_chunk=jnp.asarray(kb_chunk),
+        fringe_kb_rows=jnp.asarray(kb_rows),
+        fringe_kb_cols=jnp.asarray(kb_cols),
+        fringe_kb_vals=jnp.asarray(kb_vals),
         shape=tuple(shape),
         config=config,
         stats=stats,
+        fringe_tier=fringe_tier,
+        fringe_bk=int(fringe_bk),
     )
 
 
@@ -317,7 +392,7 @@ def execute_matrix_path(plan: NeutronPlan, b: jax.Array) -> jax.Array:
     packed = ops.block_stream_spmm(
         plan.step_window, plan.step_col, plan.flat_values, bp,
         num_windows=plan.num_windows, bm=cfg.bm, bk=cfg.bk, bn=cfg.bn,
-        impl=cfg.impl,
+        impl=cfg.impl, assume_unique=True,  # prepare() emits unique pairs
     )[:, :n]
     return _gather_rows(packed, plan.gather_src_matrix)
 
@@ -334,6 +409,9 @@ def execute_vector_path(plan: NeutronPlan, b: jax.Array) -> jax.Array:
         plan.fringe_rows, plan.fringe_cols, plan.fringe_vals, bp,
         num_rows=int(plan.fringe_row_ids.shape[0]), bn=cfg.bn, impl=cfg.impl,
         chunk=cfg.fringe_chunk,
+        tier=plan.fringe_tier, bk=plan.fringe_bk,
+        kb_chunk=plan.fringe_kb_chunk, kb_rows=plan.fringe_kb_rows,
+        kb_cols=plan.fringe_kb_cols, kb_vals=plan.fringe_kb_vals,
     )[:, :n]
     return _gather_rows(packed, plan.gather_src_vector)
 
@@ -353,11 +431,13 @@ def fused_trace_count() -> int:
 @functools.lru_cache(maxsize=None)
 def _fused_executor(sig: Tuple):
     (shape, bm, bk, bn, impl, reorder_cols, fringe_chunk, num_windows,
-     _num_steps, _nnz_f, n_fringe_rows, has_core, has_fringe) = sig
+     _num_steps, _nnz_f, n_fringe_rows, has_core, has_fringe,
+     fringe_tier, fringe_bk, _n_chunks, _nnz_kb) = sig
     m, k = shape
 
     def _run(step_window, step_col, flat_values, fringe_rows, fringe_cols,
-             fringe_vals, col_perm, gsrc_m, gsrc_v, b):
+             fringe_vals, col_perm, gsrc_m, gsrc_v,
+             kb_chunk, kb_rows, kb_cols, kb_vals, b):
         _FUSED_TRACES.append(sig)
         n = b.shape[1]
         bp = _permute_pad_b(b, col_perm, reorder_cols, bk, bn)
@@ -367,12 +447,16 @@ def _fused_executor(sig: Tuple):
             packed_m = ops.block_stream_spmm(
                 step_window, step_col, flat_values, bp,
                 num_windows=num_windows, bm=bm, bk=bk, bn=bn, impl=impl,
+                assume_unique=True,  # prepare() emits unique pairs
             )[:, :n]
             c = _gather_rows(packed_m, gsrc_m)
         if has_fringe:
             packed_v = ops.fringe_spmm(
                 fringe_rows, fringe_cols, fringe_vals, bp,
                 num_rows=n_fringe_rows, bn=bn, impl=impl, chunk=fringe_chunk,
+                tier=fringe_tier, bk=fringe_bk,
+                kb_chunk=kb_chunk, kb_rows=kb_rows,
+                kb_cols=kb_cols, kb_vals=kb_vals,
             )[:, :n]
             cv = _gather_rows(packed_v, gsrc_v)
             c = cv if c is None else c + cv
@@ -394,7 +478,9 @@ def execute(plan: NeutronPlan, b: jax.Array) -> jax.Array:
     return fn(
         plan.step_window, plan.step_col, plan.flat_values,
         plan.fringe_rows, plan.fringe_cols, plan.fringe_vals,
-        plan.col_perm, plan.gather_src_matrix, plan.gather_src_vector, b,
+        plan.col_perm, plan.gather_src_matrix, plan.gather_src_vector,
+        plan.fringe_kb_chunk, plan.fringe_kb_rows,
+        plan.fringe_kb_cols, plan.fringe_kb_vals, b,
     )
 
 

@@ -1,6 +1,8 @@
 """TPU Pallas kernels for the NeutronSparse dual-path SpMM."""
 from . import ops, ref
 from .dense_tile_spmm import dense_tile_spmm
-from .gather_spmm import gather_spmm
+from .gather_spmm import gather_spmm, gather_spmm_ksharded
 
-__all__ = ["ops", "ref", "dense_tile_spmm", "gather_spmm"]
+__all__ = [
+    "ops", "ref", "dense_tile_spmm", "gather_spmm", "gather_spmm_ksharded",
+]

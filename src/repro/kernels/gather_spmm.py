@@ -1,8 +1,12 @@
-"""Vector-engine ("AIV") path: chunked sorted-COO gather-accumulate kernel.
+"""Vector-engine ("AIV") path: chunked sorted-COO gather-accumulate kernels.
 
 The sparse fringes execute in the paper's AIV style: for each nonzero,
 Gather the B row addressed by its column index, scale by the value, and
-accumulate into the output row (ScatterAdd).  TPU adaptation:
+accumulate into the output row (ScatterAdd).  TPU adaptation — two kernels
+sharing one chunk-accumulate body, chosen by the VMEM dispatch tier
+(core/cost_model.select_fringe_tier):
+
+``gather_spmm`` (tier "resident")
 
   grid = (N/bn, ceil(nnz/G))     G = ``chunk`` nonzeros per grid step
   B        : B[:, j*bn : ]           (K, bn)        resident across the whole
@@ -10,23 +14,37 @@ accumulate into the output row (ScatterAdd).  TPU adaptation:
   out      : out[:, j*bn : ]         (num_rows, bn) resident fp32 accumulator,
                                      written back once per n-block
 
+``gather_spmm_ksharded`` (tier "ksharded") — the reduction dimension is
+tiled so arbitrarily large K streams through VMEM (Acc-SpMM/FlashSparse
+style k-dimension tiling under the tile-based execution model):
+
+  grid = (N/bn, num_chunks)      chunk c owns G nonzeros of ONE k-block
+  B        : B[kb[c]*bk : , j*bn : ]  (bk, bn)      streamed per chunk step
+                                     (double-buffered by the grid pipeline;
+                                     consecutive chunks of one k-block elide
+                                     the copy)
+  out      : out[:, j*bn : ]         (num_rows, bn) resident fp32 accumulator
+
+The caller buckets nonzeros by k-block at plan-build time (column ids become
+k-block-local, each bucket padded to a chunk multiple with zero-value
+entries) and prefetches ``chunk_kb`` mapping chunk -> k-block; empty
+k-blocks get no chunks at all, so fully inactive B slices are never fetched.
+
 Each grid step walks its G nonzeros with an unrolled, *segment-boundary-
 aware* accumulate: contributions of a run of equal row ids are summed in a
 register accumulator and flushed to the VMEM output row only when the row id
-changes (the COO is row-sorted, so runs are contiguous).  Compared to the
-previous one-nonzero-per-step formulation this cuts grid steps by G and
-replaces per-nonzero output read-modify-writes with per-run ones.
+changes (the COO is row-sorted within a bucket, so runs are contiguous).
+Partial sums of a row split across k-blocks merge in the resident output
+block via the end-of-chunk flush read-modify-write.
 
 Vector-tile merging (paper §7): entries are (row, col)-sorted, so repeated
 columns within a row reuse the resident B block, and bn is a multiple of the
 128-lane VPU width so every lane is active.
 
-VMEM budget: one n-block claims (K + num_rows_pad) * bn * 4 bytes.  Neither
-K nor the packed fringe row count is bounded by the routing decision (it
-splits on per-row nonzero counts), so the wrapper checks the claim against
-a VMEM budget up front and raises a descriptive error instead of letting
-Mosaic fail opaquely — shrink ``bn``, shard K/rows, or use ``impl="xla"``
-for fringes that exceed it.
+VMEM working sets: (K + num_rows_pad) * bn * 4 bytes resident,
+(2*bk + num_rows_pad) * bn * 4 streaming.  Callers go through
+``ops.fringe_spmm``, which picks the tier from the VMEM budget instead of
+hard-erroring on large fringes.
 
 Outputs are *packed* fringe rows (the caller gathers them into original row
 ids via the plan's inverse row map).
@@ -43,6 +61,37 @@ from jax.experimental.pallas import tpu as pltpu
 from ._compat import tpu_compiler_params
 
 
+def _accumulate_chunk(rows_ref, cols_ref, vals_ref, b_ref, o_ref, base, chunk):
+    """Unrolled segment-boundary-aware accumulate of one G-nonzero chunk.
+
+    Column ids address rows of ``b_ref`` directly (global for the resident
+    kernel, k-block-local for the K-sharded one).
+    """
+
+    def contrib(g):
+        c = cols_ref[base + g]
+        brow = pl.load(b_ref, (pl.ds(c, 1), slice(None)))
+        return vals_ref[base + g].astype(jnp.float32) * brow.astype(
+            jnp.float32
+        )
+
+    cur_row = rows_ref[base]
+    acc = contrib(0)
+    for g in range(1, chunk):
+        r = rows_ref[base + g]
+        same = r == cur_row
+
+        @pl.when(jnp.logical_not(same))
+        def _flush(acc=acc, cur_row=cur_row):
+            cur = pl.load(o_ref, (pl.ds(cur_row, 1), slice(None)))
+            pl.store(o_ref, (pl.ds(cur_row, 1), slice(None)), cur + acc)
+
+        acc = jnp.where(same, acc + contrib(g), contrib(g))
+        cur_row = r
+    cur = pl.load(o_ref, (pl.ds(cur_row, 1), slice(None)))
+    pl.store(o_ref, (pl.ds(cur_row, 1), slice(None)), cur + acc)
+
+
 def _make_kernel(chunk: int):
     def _kernel(
         rows_ref,  # scalar prefetch (nnz_pad,)
@@ -57,30 +106,31 @@ def _make_kernel(chunk: int):
         def _init():
             o_ref[...] = jnp.zeros_like(o_ref)
 
-        base = i * chunk
+        _accumulate_chunk(
+            rows_ref, cols_ref, vals_ref, b_ref, o_ref, i * chunk, chunk
+        )
 
-        def contrib(g):
-            c = cols_ref[base + g]
-            brow = pl.load(b_ref, (pl.ds(c, 1), slice(None)))
-            return vals_ref[base + g].astype(jnp.float32) * brow.astype(
-                jnp.float32
-            )
+    return _kernel
 
-        cur_row = rows_ref[base]
-        acc = contrib(0)
-        for g in range(1, chunk):
-            r = rows_ref[base + g]
-            same = r == cur_row
 
-            @pl.when(jnp.logical_not(same))
-            def _flush(acc=acc, cur_row=cur_row):
-                cur = pl.load(o_ref, (pl.ds(cur_row, 1), slice(None)))
-                pl.store(o_ref, (pl.ds(cur_row, 1), slice(None)), cur + acc)
+def _make_ksharded_kernel(chunk: int):
+    def _kernel(
+        kb_ref,    # scalar prefetch (num_chunks,) chunk -> k-block id
+        rows_ref,  # scalar prefetch (num_chunks*chunk,)
+        cols_ref,  # scalar prefetch (num_chunks*chunk,) k-block-local
+        vals_ref,  # scalar prefetch (num_chunks*chunk,)
+        b_ref,     # (bk, bn) streamed B k-slice of this chunk's k-block
+        o_ref,     # (num_rows_pad, bn) resident fp32 out n-block
+    ):
+        i = pl.program_id(1)
 
-            acc = jnp.where(same, acc + contrib(g), contrib(g))
-            cur_row = r
-        cur = pl.load(o_ref, (pl.ds(cur_row, 1), slice(None)))
-        pl.store(o_ref, (pl.ds(cur_row, 1), slice(None)), cur + acc)
+        @pl.when(i == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        _accumulate_chunk(
+            rows_ref, cols_ref, vals_ref, b_ref, o_ref, i * chunk, chunk
+        )
 
     return _kernel
 
@@ -99,18 +149,29 @@ def gather_spmm(
     chunk: int = 8,
     interpret: bool = False,
 ) -> jax.Array:
-    """Returns packed fp32 output (num_rows, N)."""
+    """Resident-panel tier: returns packed fp32 output (num_rows, N).
+
+    Claims (K + num_rows_pad) * bn * 4 bytes of VMEM; use
+    ``ops.fringe_spmm`` (or ``gather_spmm_ksharded`` directly) when that
+    exceeds the budget.
+    """
     nnz = rows.shape[0]
     k, n = b.shape
     assert n % bn == 0, (n, bn)
     assert chunk >= 1, chunk
+    # direct-call guard against the PHYSICAL 16 MB VMEM ceiling only — a
+    # raw call past it would die as an opaque Mosaic allocation failure.
+    # Soft-budget policy (default 12 MB, user-overridable) belongs to the
+    # tier dispatch in ops.fringe_spmm / cost_model.select_fringe_tier,
+    # which may legitimately route near-ceiling claims here.
     nr_est = max(8, ((num_rows + 7) // 8) * 8)
     vmem_claim = (k + nr_est) * bn * 4
-    if not interpret and vmem_claim > 12 * 1024 * 1024:
+    if not interpret and vmem_claim > 16 * 1024 * 1024:
         raise ValueError(
             f"gather_spmm resident working set {vmem_claim} B "
-            f"(K={k} + rows={nr_est} at bn={bn}, fp32) exceeds the VMEM "
-            "budget; shrink bn, shard K/rows, or use impl='xla'"
+            f"(K={k} + rows={nr_est} at bn={bn}, fp32) cannot fit VMEM; "
+            "go through ops.fringe_spmm (tier dispatch) or call "
+            "gather_spmm_ksharded directly"
         )
 
     # pad the nonzero stream to a chunk multiple; padding entries replicate
@@ -141,4 +202,61 @@ def gather_spmm(
         ),
         interpret=interpret,
     )(rows, cols, vals, b)
+    return out[:num_rows]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_rows", "bk", "bn", "interpret")
+)
+def gather_spmm_ksharded(
+    chunk_kb: jax.Array,  # (num_chunks,) int32, chunk -> k-block id
+    rows: jax.Array,  # (num_chunks*chunk,) int32, k-bucketed packed row ids
+    cols: jax.Array,  # (num_chunks*chunk,) int32, k-block-LOCAL column ids
+    vals: jax.Array,  # (num_chunks*chunk,) — zero for bucket-padding entries
+    b: jax.Array,     # (K, N) — N a multiple of bn
+    *,
+    num_rows: int,
+    bk: int,
+    bn: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """K-sharded streaming tier: returns packed fp32 output (num_rows, N).
+
+    The nonzero stream must be the plan-built k-bucketed layout: sorted by
+    (k-block, row, col), each bucket padded to a chunk multiple (``chunk`` is
+    derived as ``rows.size // chunk_kb.size``), columns local to their
+    k-block.  Only a (bk, bn) slice of B is VMEM-resident per grid step, so
+    K is unbounded by the VMEM budget.
+    """
+    num_chunks = chunk_kb.shape[0]
+    assert num_chunks >= 1 and rows.shape[0] % num_chunks == 0, (
+        rows.shape, chunk_kb.shape
+    )
+    chunk = rows.shape[0] // num_chunks
+    k, n = b.shape
+    assert n % bn == 0, (n, bn)
+    k_pad = ((k + bk - 1) // bk) * bk
+    if k_pad != k:
+        b = jnp.pad(b, ((0, k_pad - k), (0, 0)))
+    nr_pad = max(8, ((num_rows + 7) // 8) * 8)
+
+    grid = (n // bn, num_chunks)
+    out = pl.pallas_call(
+        _make_ksharded_kernel(chunk),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bk, bn), lambda j, i, kb, r, c, v: (kb[i], j)),
+            ],
+            out_specs=pl.BlockSpec(
+                (nr_pad, bn), lambda j, i, kb, r, c, v: (0, j)
+            ),
+        ),
+        out_shape=jax.ShapeDtypeStruct((nr_pad, n), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(chunk_kb, rows, cols, vals, b)
     return out[:num_rows]

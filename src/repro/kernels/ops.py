@@ -17,13 +17,15 @@ import jax.numpy as jnp
 
 from . import ref
 from .dense_tile_spmm import dense_tile_spmm
-from .gather_spmm import gather_spmm
+from .gather_spmm import gather_spmm, gather_spmm_ksharded
 
 Impl = Literal["pallas", "pallas_interpret", "xla"]
+FringeTier = Literal["auto", "resident", "ksharded", "xla"]
 
 
 @functools.partial(
-    jax.jit, static_argnames=("num_windows", "bm", "bk", "bn", "impl")
+    jax.jit,
+    static_argnames=("num_windows", "bm", "bk", "bn", "impl", "assume_unique"),
 )
 def block_stream_spmm(
     step_window: jax.Array,
@@ -36,13 +38,17 @@ def block_stream_spmm(
     bk: int,
     bn: int = 256,
     impl: Impl = "xla",
+    assume_unique: bool = False,
 ) -> jax.Array:
     """Matrix-engine path; returns packed (num_windows*bm, N) fp32.
 
-    The xla impl assumes plan-generated streams, whose (window, k-block)
-    pairs are unique: above the occupancy threshold it dispatches to the
-    densified GEMM, where a duplicate pair's last tile would win instead
-    of accumulating (the streaming/pallas forms accumulate).
+    Above the occupancy threshold the xla impl dispatches to a densified
+    GEMM.  The default add-based densify accumulates duplicate
+    (window, k-block) pairs exactly like the streaming/pallas forms, so
+    hand-built streams are safe on either side of the threshold;
+    ``assume_unique=True`` (a static guarantee plan-driven callers can
+    make — ``prepare()`` emits one tile per pair by construction) selects
+    the ~4x-faster index-scatter + gather densify instead.
     """
     if impl == "xla":
         # static occupancy = active tiles / total (window, k-block) slots.
@@ -55,7 +61,11 @@ def block_stream_spmm(
         slots = max(num_windows * (b.shape[0] // bk), 1)
         core_elems = num_windows * bm * b.shape[0]
         if num_windows and t_steps / slots >= 0.25 and core_elems <= 2 ** 26:
-            return ref.densified_block_stream_spmm(
+            densify = (
+                ref.densified_block_stream_spmm_unique
+                if assume_unique else ref.densified_block_stream_spmm
+            )
+            return densify(
                 step_window, step_col, flat_values, b, num_windows
             )
         return ref.ref_block_stream_spmm(
@@ -69,7 +79,7 @@ def block_stream_spmm(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("num_rows", "bn", "impl", "chunk")
+    jax.jit, static_argnames=("num_rows", "bn", "impl", "chunk", "tier", "bk")
 )
 def fringe_spmm(
     rows: jax.Array,
@@ -81,6 +91,12 @@ def fringe_spmm(
     bn: int = 256,
     impl: Impl = "xla",
     chunk: int | None = None,
+    tier: FringeTier = "auto",
+    bk: int = 0,
+    kb_chunk: jax.Array | None = None,
+    kb_rows: jax.Array | None = None,
+    kb_cols: jax.Array | None = None,
+    kb_vals: jax.Array | None = None,
 ) -> jax.Array:
     """Vector-engine path; returns packed (num_rows, N) fp32.
 
@@ -89,11 +105,46 @@ def fringe_spmm(
     the one-shot vectorized formulation).  The pallas kernel unrolls its
     chunk loop in python, so large XLA-oriented values (thousands) are
     clamped to a compile-friendly unroll factor there.
+
+    Pallas impls dispatch across three VMEM tiers
+    (core/cost_model.select_fringe_tier): "resident" keeps the full (K, bn)
+    B panel on chip, "ksharded" streams (bk, bn) slices of B through a
+    third-grid-dimension k-block loop, and "xla" is the gather fallback
+    when even one slice cannot fit.  ``tier="auto"`` picks from the default
+    VMEM budget; plan-driven callers pass the tier chosen at prepare time
+    plus the k-bucketed stream (``kb_*``, layout described in
+    gather_spmm_ksharded).  Without a bucketed stream, an auto choice of
+    "ksharded" degrades to the XLA fallback (bucketing needs host-side
+    padding).
     """
     if impl == "xla":
         return ref.ref_gather_spmm(rows, cols, vals, b, num_rows, chunk=chunk)
-    return gather_spmm(
-        rows, cols, vals, b,
-        num_rows=num_rows, bn=bn, chunk=min(chunk or 8, 64),
-        interpret=(impl == "pallas_interpret"),
-    )
+    if tier == "auto":
+        from ..core.cost_model import select_fringe_tier
+
+        tier, auto_bk = select_fringe_tier(b.shape[0], num_rows, bn)
+        if tier == "ksharded":
+            # a bucketed stream is only interpretable with the bk it was
+            # bucketed under, so an auto choice never overrides the
+            # caller's bk; without a stream (or its bk) fall back to XLA
+            if kb_rows is None or bk <= 0:
+                tier = "xla"
+    if tier == "resident":
+        return gather_spmm(
+            rows, cols, vals, b,
+            num_rows=num_rows, bn=bn, chunk=min(chunk or 8, 64),
+            interpret=(impl == "pallas_interpret"),
+        )
+    if tier == "ksharded":
+        if kb_rows is None or kb_chunk is None or bk <= 0:
+            raise ValueError(
+                "tier='ksharded' needs the k-bucketed stream (kb_chunk/"
+                "kb_rows/kb_cols/kb_vals) and its bk; plans built by "
+                "prepare() carry them, or use tier='auto' to fall back"
+            )
+        return gather_spmm_ksharded(
+            kb_chunk, kb_rows, kb_cols, kb_vals, b,
+            num_rows=num_rows, bk=bk, bn=bn,
+            interpret=(impl == "pallas_interpret"),
+        )
+    return ref.ref_gather_spmm(rows, cols, vals, b, num_rows, chunk=chunk)

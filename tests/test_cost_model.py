@@ -1,8 +1,16 @@
-"""Architecture-aware cost model (paper §5.2.1, Eq. 1-3, 7)."""
+"""Architecture-aware cost model (paper §5.2.1, Eq. 1-3, 7) and the
+vector-path VMEM dispatch-tier estimate."""
 import numpy as np
 import pytest
 
-from repro.core.cost_model import EngineCostModel, default_cost_model
+from repro.core.cost_model import (
+    FRINGE_VMEM_BUDGET,
+    EngineCostModel,
+    default_cost_model,
+    fringe_ksharded_bytes,
+    fringe_resident_bytes,
+    select_fringe_tier,
+)
 
 
 def test_alpha_formula():
@@ -60,3 +68,33 @@ def test_analytic_tpu_sane():
     assert 0.0 < cm.alpha < 1.0
     # vector path is memory-bound: far fewer nnz/s than matrix elements/s
     assert cm.p_matrix > cm.p_vector
+
+
+def test_fringe_tier_resident_when_panel_fits():
+    tier, bk = select_fringe_tier(1024, 100, 256)
+    assert (tier, bk) == ("resident", 0)
+    assert fringe_resident_bytes(1024, 100, 256) <= FRINGE_VMEM_BUDGET
+
+
+def test_fringe_tier_ksharded_when_panel_overflows():
+    k, rows, bn = 20_000, 100, 256
+    assert fringe_resident_bytes(k, rows, bn) > FRINGE_VMEM_BUDGET
+    tier, bk = select_fringe_tier(k, rows, bn)
+    assert tier == "ksharded"
+    # bk is the largest sublane multiple whose double-buffered slice fits
+    assert bk >= 8 and bk % 8 == 0
+    assert fringe_ksharded_bytes(bk, rows, bn) <= FRINGE_VMEM_BUDGET
+    assert fringe_ksharded_bytes(bk + 8, rows, bn) > FRINGE_VMEM_BUDGET
+
+
+def test_fringe_tier_xla_when_rows_alone_overflow():
+    # the packed output block by itself busts the budget: no bk can help
+    tier, bk = select_fringe_tier(20_000, 100_000, 256)
+    assert (tier, bk) == ("xla", 0)
+
+
+def test_fringe_tier_respects_budget_override():
+    # same shape sweeps all three tiers as the synthetic budget shrinks
+    assert select_fringe_tier(64, 16, 128)[0] == "resident"
+    assert select_fringe_tier(64, 16, 128, vmem_budget=20_000)[0] == "ksharded"
+    assert select_fringe_tier(64, 16, 128, vmem_budget=4_096)[0] == "xla"

@@ -138,6 +138,95 @@ def test_ref_gather_chunked_matches_oneshot(chunk):
 
 
 # ---------------------------------------------------------------------------
+# VMEM dispatch tiers: resident / K-sharded / XLA fallback
+# ---------------------------------------------------------------------------
+def _fringe_problem(rng, m=60, k=96, nnz=400, n=128):
+    rows = rng.randint(0, m, nnz)
+    cols = rng.randint(0, k, nnz)
+    vals = rng.randn(nnz).astype(np.float32)
+    a = np.zeros((m, k), np.float32)
+    np.add.at(a, (rows, cols), vals)
+    b = rng.randn(k, n).astype(np.float32)
+    return rows, cols, vals, a, b
+
+
+# budgets sized for k=96, ~60 packed rows, bn=128: huge -> resident;
+# 60 kB fits only a k-slice -> ksharded; 4 kB fits nothing -> xla
+@pytest.mark.parametrize("budget,tier", [
+    (None, "resident"), (60_000, "ksharded"), (4_096, "xla"),
+])
+def test_dispatch_tier_forced_by_budget(rng, budget, tier):
+    """Each tier, forced via a synthetic VMEM budget, matches the dense
+    reference under the pallas (interpret) impl."""
+    rows, cols, vals, a, b = _fringe_problem(rng)
+    cfg = spmm.SpmmConfig(impl="pallas_interpret", bn=128, alpha=1.0,
+                          fringe_vmem_budget=budget)
+    plan = spmm.prepare(rows, cols, vals, a.shape, cfg)
+    assert plan.fringe_tier == tier
+    assert (plan.fringe_bk > 0) == (tier == "ksharded")
+    out = np.asarray(spmm.execute(plan, jnp.asarray(b)))
+    expect = a.astype(np.float64) @ b.astype(np.float64)
+    scale = np.abs(expect).max() + 1e-9
+    assert np.abs(out - expect).max() / scale < 1e-4
+
+
+def test_over_budget_fringe_runs_ksharded(rng):
+    """(K + packed_rows) * bn * 4 > 12 MB — the shape that used to raise the
+    hard VMEM ValueError — now executes via the K-sharded tier under
+    impl='pallas*' and matches the XLA reference."""
+    m, k, nnz = 160, 12800, 1200
+    rows = rng.randint(0, m, nnz)
+    cols = rng.randint(0, k, nnz)
+    vals = rng.randn(nnz).astype(np.float32)
+    from repro.core.cost_model import FRINGE_VMEM_BUDGET, fringe_resident_bytes
+    assert fringe_resident_bytes(k, m, 256) > FRINGE_VMEM_BUDGET
+    cfg = spmm.SpmmConfig(impl="pallas_interpret", alpha=1.0)
+    plan = spmm.prepare(rows, cols, vals, (m, k), cfg)
+    assert plan.fringe_tier == "ksharded" and plan.fringe_bk % 8 == 0
+    b = jnp.asarray(rng.randn(k, 256).astype(np.float32))
+    out = np.asarray(spmm.execute(plan, b))
+    xla_plan = spmm.prepare(rows, cols, vals, (m, k),
+                            spmm.SpmmConfig(impl="xla", alpha=1.0))
+    expect = np.asarray(spmm.execute(xla_plan, b))
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+def test_kb_stream_matches_unbucketed_oracle(rng):
+    """The plan-built k-bucketed stream is a pure relayout: the k-blocked
+    oracle over it equals the plain gather oracle over the fringe COO."""
+    rows, cols, vals, a, b = _fringe_problem(rng)
+    cfg = spmm.SpmmConfig(impl="pallas_interpret", bn=128, alpha=1.0,
+                          fringe_vmem_budget=60_000)
+    plan = spmm.prepare(rows, cols, vals, a.shape, cfg)
+    assert plan.fringe_tier == "ksharded"
+    nr = int(plan.fringe_row_ids.shape[0])
+    got = ref.ref_gather_spmm_kblocked(
+        plan.fringe_kb_chunk, plan.fringe_kb_rows, plan.fringe_kb_cols,
+        plan.fringe_kb_vals, jnp.asarray(b), nr, plan.fringe_bk)
+    expect = ref.ref_gather_spmm(plan.fringe_rows, plan.fringe_cols,
+                                 plan.fringe_vals, jnp.asarray(b), nr)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_signature_distinguishes_tiers(rng):
+    """Two plans differing only in dispatch tier must not alias one cached
+    executor (same structure, different kernels)."""
+    rows, cols, vals, a, b = _fringe_problem(rng)
+    mk = lambda budget: spmm.prepare(
+        rows, cols, vals, a.shape,
+        spmm.SpmmConfig(impl="pallas_interpret", bn=128, alpha=1.0,
+                        fringe_vmem_budget=budget))
+    resident, ksharded, xla = mk(None), mk(60_000), mk(4_096)
+    sigs = {p.signature() for p in (resident, ksharded, xla)}
+    assert len(sigs) == 3
+    b = jnp.asarray(b)
+    outs = [np.asarray(spmm.execute(p, b)) for p in (resident, ksharded, xla)]
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
 # retrace behavior of the cached executor
 # ---------------------------------------------------------------------------
 def test_fused_executor_traces_once_across_epochs(rng):

@@ -6,7 +6,7 @@ import pytest
 
 from repro.kernels import ops, ref
 from repro.kernels.dense_tile_spmm import dense_tile_spmm
-from repro.kernels.gather_spmm import gather_spmm
+from repro.kernels.gather_spmm import gather_spmm, gather_spmm_ksharded
 
 
 def _block_stream(rng, num_windows, max_blocks, bm, bk, k_blocks, dtype):
@@ -76,6 +76,109 @@ def test_gather_spmm_duplicate_columns():
     out = gather_spmm(rows, cols, vals, b, num_rows=2, bn=128, interpret=True)
     expect = ref.ref_gather_spmm(rows, cols, vals, b, 2)
     np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-6)
+
+
+def _bucketed_stream(rng, num_rows, num_kb, bk, chunk, max_per_kb=6):
+    """Hand-built k-bucketed fringe stream (the gather_spmm_ksharded layout):
+    per-k-block row-sorted entries padded to a chunk multiple; empty
+    k-blocks own no chunks.  Returns the stream plus the dense A it encodes."""
+    kb_chunk, rows_l, cols_l, vals_l = [], [], [], []
+    a = np.zeros((num_rows, num_kb * bk), np.float32)
+    for kb in range(num_kb):
+        cnt = rng.randint(0, max_per_kb + 1)
+        if cnt == 0:
+            continue
+        r = np.sort(rng.randint(0, num_rows, cnt)).astype(np.int32)
+        c = rng.randint(0, bk, cnt).astype(np.int32)
+        v = rng.randn(cnt).astype(np.float32)
+        np.add.at(a, (r, kb * bk + c), v)
+        pad = ((cnt + chunk - 1) // chunk) * chunk - cnt
+        rows_l.append(np.concatenate([r, np.zeros(pad, np.int32)]))
+        cols_l.append(np.concatenate([c, np.zeros(pad, np.int32)]))
+        vals_l.append(np.concatenate([v, np.zeros(pad, np.float32)]))
+        kb_chunk += [kb] * ((cnt + chunk - 1) // chunk)
+    return (
+        jnp.asarray(np.array(kb_chunk, np.int32)),
+        jnp.asarray(np.concatenate(rows_l)),
+        jnp.asarray(np.concatenate(cols_l)),
+        jnp.asarray(np.concatenate(vals_l)),
+        a,
+    )
+
+
+@pytest.mark.parametrize("chunk", [1, 3, 4, 8])
+def test_gather_spmm_ksharded_matches_refs(chunk):
+    """K-sharded streaming kernel vs its k-blocked oracle and the dense
+    answer; rows recur across k-blocks, so partial sums must merge in the
+    resident output block across chunk steps."""
+    rng = np.random.RandomState(chunk)
+    num_rows, num_kb, bk = 6, 5, 8
+    kb_chunk, rows, cols, vals, a = _bucketed_stream(
+        rng, num_rows, num_kb, bk, chunk)
+    b = jnp.asarray(rng.randn(num_kb * bk, 128).astype(np.float32))
+    out = gather_spmm_ksharded(kb_chunk, rows, cols, vals, b,
+                               num_rows=num_rows, bk=bk, bn=128,
+                               interpret=True)
+    oracle = ref.ref_gather_spmm_kblocked(kb_chunk, rows, cols, vals, b,
+                                          num_rows, bk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out), a @ np.asarray(b),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gather_spmm_ksharded_ragged_k():
+    """K not a multiple of bk: the kernel pads B internally."""
+    rng = np.random.RandomState(11)
+    num_rows, num_kb, bk, chunk = 4, 3, 8, 2
+    kb_chunk, rows, cols, vals, _ = _bucketed_stream(
+        rng, num_rows, num_kb, bk, chunk, max_per_kb=4)
+    k_ragged = num_kb * bk - 3
+    # zero entries addressing the (padded-away) tail columns
+    keep_cols = jnp.repeat(kb_chunk, chunk) * bk + cols < k_ragged
+    vals = jnp.where(keep_cols, vals, 0.0)
+    b = jnp.asarray(rng.randn(k_ragged, 128).astype(np.float32))
+    out = gather_spmm_ksharded(kb_chunk, rows, cols, vals, b,
+                               num_rows=num_rows, bk=bk, bn=128,
+                               interpret=True)
+    oracle = ref.ref_gather_spmm_kblocked(kb_chunk, rows, cols, vals, b,
+                                          num_rows, bk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_densified_duplicate_pairs_accumulate():
+    """Regression: hand-built streams may repeat a (window, k-block) pair;
+    the add-based densify must accumulate both tiles (previously the last
+    tile of a duplicated slot silently won)."""
+    rng = np.random.RandomState(9)
+    bm, bk = 8, 8
+    sw = jnp.asarray(np.array([0, 0, 1, 0], np.int32))
+    sc = jnp.asarray(np.array([1, 1, 0, 1], np.int32))  # slot (0,1) thrice
+    vals = jnp.asarray(rng.randn(4, bm, bk).astype(np.float32))
+    b = jnp.asarray(rng.randn(2 * bk, 128).astype(np.float32))
+    out = ref.densified_block_stream_spmm(sw, sc, vals, b, 2)
+    expect = ref.ref_block_stream_spmm(sw, sc, vals, b, 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+    # the duplicate stream is above the occupancy threshold, so the default
+    # ops dispatch (no uniqueness guarantee) must also take the safe densify
+    out_ops = ops.block_stream_spmm(sw, sc, vals, b, num_windows=2,
+                                    bm=bm, bk=bk, bn=128, impl="xla")
+    np.testing.assert_allclose(np.asarray(out_ops), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_densified_unique_matches_safe_on_unique_streams():
+    """The fast plan-stream densify (index scatter + gather) agrees with
+    the add-based one whenever pairs are unique."""
+    rng = np.random.RandomState(10)
+    sw, sc, vals = _block_stream(rng, 3, 3, 8, 8, 4, np.float32)
+    b = jnp.asarray(rng.randn(32, 128).astype(np.float32))
+    fast = ref.densified_block_stream_spmm_unique(sw, sc, vals, b, 3)
+    safe = ref.densified_block_stream_spmm(sw, sc, vals, b, 3)
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(safe),
+                               rtol=1e-5, atol=1e-5)
 
 
 @pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
