@@ -19,6 +19,7 @@ SUITES = [
     "bench_preprocess",     # Tables 3/4
     "bench_roofline",       # EXPERIMENTS.md §Roofline feed
     "bench_fused",          # fused single-dispatch executor vs two-dispatch
+    "bench_sharded",        # multi-device sharded executor scaling
 ]
 
 

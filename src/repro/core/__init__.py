@@ -1,10 +1,14 @@
 """NeutronSparse core: coordination-first SpMM for tile-centric accelerators."""
 from . import coordinator, cost_model, formats, partition, reorder, reuse, spmm
 from .cost_model import EngineCostModel, default_cost_model
-from .spmm import NeutronPlan, NeutronSpMM, SpmmConfig, execute, neutron_spmm, prepare
+from .spmm import (
+    NeutronPlan, NeutronSpMM, ShardedPlan, SpmmConfig, execute,
+    execute_sharded, neutron_spmm, prepare, prepare_sharded,
+)
 
 __all__ = [
     "coordinator", "cost_model", "formats", "partition", "reorder", "reuse",
     "spmm", "EngineCostModel", "default_cost_model", "NeutronPlan",
-    "NeutronSpMM", "SpmmConfig", "execute", "neutron_spmm", "prepare",
+    "NeutronSpMM", "ShardedPlan", "SpmmConfig", "execute", "execute_sharded",
+    "neutron_spmm", "prepare", "prepare_sharded",
 ]

@@ -172,6 +172,35 @@ class AdaptiveCoordinator:
         return None
 
 
+def window_costs_from_coo(
+    rows: np.ndarray, m: int, bm: int, k: int, cost_model: EngineCostModel,
+    alpha: Optional[float] = None,
+) -> np.ndarray:
+    """Per-row-window cost estimate straight from raw COO (pre-``prepare``).
+
+    Window w covers original rows [w*bm, (w+1)*bm).  Each window is costed
+    by the engine the cost-model split would route it to — vector cost
+    (∝ nnz, Eq. 1) below the alpha density boundary, matrix cost (∝ rows*K)
+    above — so the same model that balances the two intra-chip paths prices
+    inter-device shards.  ``alpha`` overrides the model's Eq. 3 boundary the
+    same way ``SpmmConfig.alpha`` overrides it in ``prepare`` — callers with
+    a forced split must price windows by the engine that will actually run
+    them.  Feed the result to :func:`balance_row_window_list` for the LPT
+    shard assignment.
+    """
+    nw = (m + bm - 1) // bm
+    if nw == 0:
+        return np.zeros(0, np.float64)
+    a = cost_model.alpha if alpha is None else float(alpha)
+    rows = np.asarray(rows, np.int64)
+    nnz_w = np.bincount(rows // bm, minlength=nw).astype(np.float64)
+    rows_w = np.minimum(np.arange(1, nw + 1) * bm, m) - np.arange(nw) * bm
+    dens = nnz_w / np.maximum(rows_w * max(k, 1), 1.0)
+    cost_v = cost_model.cost_vector(nnz_w)
+    cost_m = cost_model.cost_matrix(rows_w.astype(np.float64), max(k, 1))
+    return np.where(dens <= a, cost_v, cost_m)
+
+
 def balance_row_window_list(
     window_costs: Sequence[float], n_cores: int
 ) -> List[np.ndarray]:

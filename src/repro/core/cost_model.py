@@ -181,6 +181,63 @@ def fringe_ksharded_bytes(bk: int, num_rows: int, bn: int) -> int:
     return (2 * bk + _pad_rows(num_rows)) * bn * 4
 
 
+# --- data-parallel shard-axis selection -------------------------------------
+# The sharded executor (core/spmm.prepare_sharded) can distribute work two
+# ways: shard output row-windows (plan state fully distributed; balance
+# limited by how evenly window costs split) or replicate the plan and shard
+# RHS columns (perfectly balanced by construction; plan memory replicated
+# per device).  The estimator prices both and picks per plan.
+ROWS_IMBALANCE_THRESHOLD = 1.25  # max tolerated LPT max/mean before rhs wins
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardAxisDecision:
+    shard_axis: str        # "rows" | "rhs"
+    n_shards: int
+    rows_imbalance: float  # predicted max/mean load of the LPT row split
+    reason: str
+
+
+def select_shard_axis(
+    window_costs: np.ndarray,
+    n_shards: int,
+    imbalance_threshold: float = ROWS_IMBALANCE_THRESHOLD,
+) -> ShardAxisDecision:
+    """Pick the data-parallel axis for a plan with these window costs.
+
+    Runs the actual LPT assignment (coordinator.balance_row_window_list)
+    the rows-sharded executor would use and measures its max/mean load;
+    row-sharding wins unless the distribution is provably skewed past the
+    threshold or there are too few costed windows to occupy every shard.
+    """
+    from .coordinator import balance_row_window_list, list_imbalance
+
+    wc = np.asarray(window_costs, np.float64)
+    n_shards = int(n_shards)
+    if n_shards <= 1:
+        return ShardAxisDecision("rows", n_shards, 1.0, "single shard")
+    active = int(np.count_nonzero(wc))
+    if active == 0:
+        # empty matrix: nothing to balance, and rows has no N-divisibility
+        # constraint — keep the degenerate case on the unconstrained axis
+        return ShardAxisDecision("rows", n_shards, 1.0, "no costed windows")
+    if active < n_shards:
+        return ShardAxisDecision(
+            "rhs", n_shards, float("inf"),
+            f"{active} non-empty windows < {n_shards} shards",
+        )
+    assignment = balance_row_window_list(wc, n_shards)
+    imb = list_imbalance(assignment, wc)
+    if imb > imbalance_threshold:
+        return ShardAxisDecision(
+            "rhs", n_shards, float(imb),
+            f"LPT row imbalance {imb:.2f} > {imbalance_threshold:.2f}",
+        )
+    return ShardAxisDecision(
+        "rows", n_shards, float(imb), f"LPT row imbalance {imb:.2f}"
+    )
+
+
 def select_fringe_tier(
     k: int, num_rows: int, bn: int, vmem_budget: Optional[int] = None
 ) -> tuple:

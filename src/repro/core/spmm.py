@@ -9,24 +9,41 @@ assembled by gathering from the packed per-path outputs (each original row
 has at most one packed source per path) instead of scatter-adding both paths
 into full-size zero buffers.  Executors are cached per plan signature, so
 repeated epochs over re-prepared plans of the same structure never retrace.
-``NeutronSpMM`` wraps an adaptive epoch loop with runtime migration.
+``execute`` also accepts a batched ``(batch, K, N)`` right-hand side — the
+fused body is vmapped and cached per ``(signature, batch)`` so serving-style
+workloads amortize one plan across many RHS panels in a single dispatch.
+``prepare_sharded``/``execute_sharded`` extend the same machinery across a
+``jax.sharding.Mesh``: row-windows (or RHS columns) are balanced across
+devices, each shard runs the fused body on its own padded sub-plan under
+``shard_map``, and — because every shard owns a disjoint set of output rows
+— assembly is a gather over the all-gathered packed rows, never a
+scatter-add.  ``NeutronSpMM`` wraps an adaptive epoch loop with runtime
+migration.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import time
-from typing import Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..distributed.sharding import (
+    axis_spec, leading_axis_spec, replicated_spec, shard_map,
+    trailing_axis_spec,
+)
 from ..kernels import ops
 from . import formats, partition, reorder, reuse
-from .coordinator import AdaptiveCoordinator
+from .coordinator import (
+    AdaptiveCoordinator, balance_row_window_list, list_imbalance,
+    window_costs_from_coo,
+)
 from .cost_model import (
     EngineCostModel, default_cost_model, select_fringe_tier,
+    select_shard_axis,
 )
 
 
@@ -136,6 +153,81 @@ class NeutronPlan:
         )
 
 
+def _validate_coo(
+    rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+    shape: Tuple[int, int],
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Reject malformed COO input with a descriptive error.
+
+    Out-of-range indices previously surfaced as cryptic bincount/fancy-index
+    failures, and *negative* indices silently wrapped around python-style —
+    aliasing nonzeros onto the wrong rows without any error at all.
+    """
+    m, k = shape
+    rows = np.asarray(rows)
+    cols = np.asarray(cols)
+    vals = np.asarray(vals)
+    if not (rows.ndim == cols.ndim == vals.ndim == 1):
+        raise ValueError(
+            f"COO triplets must be 1-D; got rows.ndim={rows.ndim} "
+            f"cols.ndim={cols.ndim} vals.ndim={vals.ndim}"
+        )
+    if not (rows.shape == cols.shape == vals.shape):
+        raise ValueError(
+            f"COO triplet lengths disagree: rows={rows.shape[0]} "
+            f"cols={cols.shape[0]} vals={vals.shape[0]}"
+        )
+    for name, arr in (("rows", rows), ("cols", cols)):
+        if not np.issubdtype(arr.dtype, np.integer):
+            raise ValueError(f"{name} must be an integer array, got {arr.dtype}")
+    if rows.size:
+        if int(rows.min()) < 0 or int(rows.max()) >= m:
+            raise ValueError(
+                f"row indices out of range for shape {shape}: "
+                f"[{int(rows.min())}, {int(rows.max())}]"
+            )
+        if int(cols.min()) < 0 or int(cols.max()) >= k:
+            raise ValueError(
+                f"col indices out of range for shape {shape}: "
+                f"[{int(cols.min())}, {int(cols.max())}]"
+            )
+    return rows.astype(np.int64), cols.astype(np.int64), vals
+
+
+def _bucket_fringe_kblocks(
+    pr: np.ndarray, pc: np.ndarray, pv: np.ndarray,
+    k_pad: int, fringe_bk: int, chunk_eff: int,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Relayout packed fringe COO for the K-sharded streaming kernel.
+
+    Nonzeros sorted by (k-block, row, col), per-bucket padded to a chunk
+    multiple with zero-value entries, columns made k-block-local; empty
+    k-blocks get no chunks (their B slices are never fetched).  Shared by
+    ``prepare`` and ``prepare_sharded`` (which re-buckets every shard with
+    one mesh-wide bk so all shards run the same kernel).
+    """
+    nkb_f = (k_pad + fringe_bk - 1) // fringe_bk
+    kb = pc.astype(np.int64) // fringe_bk
+    order_kb = np.argsort(kb, kind="stable")  # keeps (row, col) per kb
+    kbs = kb[order_kb]
+    counts = np.bincount(kbs, minlength=nkb_f)
+    padded = ((counts + chunk_eff - 1) // chunk_eff) * chunk_eff
+    src_start = np.cumsum(counts) - counts
+    dst_start = np.cumsum(padded) - padded
+    dest = dst_start[kbs] + np.arange(kbs.size) - src_start[kbs]
+    total_kb = int(padded.sum())
+    kb_rows = np.zeros(total_kb, np.int32)
+    kb_rows[dest] = pr[order_kb]
+    kb_cols = np.zeros(total_kb, np.int32)
+    kb_cols[dest] = (pc[order_kb] % fringe_bk).astype(np.int32)
+    kb_vals = np.zeros(total_kb, pv.dtype)
+    kb_vals[dest] = pv[order_kb]
+    kb_chunk = np.repeat(
+        np.arange(nkb_f, dtype=np.int32), padded // chunk_eff
+    )
+    return kb_chunk, kb_rows, kb_cols, kb_vals
+
+
 def prepare(
     rows: np.ndarray,
     cols: np.ndarray,
@@ -146,6 +238,7 @@ def prepare(
 ) -> NeutronPlan:
     """Host-side preprocessing (one-time; amortized across epochs)."""
     m, k = shape
+    rows, cols, vals = _validate_coo(rows, cols, vals, shape)
     cm = cost_model or default_cost_model(n_cols=config.bn)
     t0 = time.perf_counter()
 
@@ -253,7 +346,9 @@ def prepare(
         fringe_row_ids = sr[first]
         pr = (np.cumsum(first) - 1).astype(np.int32)
         pc = f_cols[order].astype(np.int32)
-        pv = f_vals[order]
+        # kernels accumulate in fp32; int/f64 input values are cast once
+        # here instead of per-dispatch (and jnp would silently keep ints)
+        pv = f_vals[order].astype(np.float32)
     else:
         fringe_row_ids = np.zeros(1, np.int64)
         pr = np.zeros(1, np.int32)
@@ -276,25 +371,9 @@ def prepare(
     # the bucketed stream is only consumed by the pallas kernels; xla-impl
     # plans skip the bucketing sort/scatter passes (tier is still recorded)
     if fringe_tier == "ksharded" and f_rows.size and config.impl != "xla":
-        chunk_eff = min(config.fringe_chunk or 8, 64)  # ops.py pallas clamp
-        nkb_f = (k_pad + fringe_bk - 1) // fringe_bk
-        kb = pc.astype(np.int64) // fringe_bk
-        order_kb = np.argsort(kb, kind="stable")  # keeps (row, col) per kb
-        kbs = kb[order_kb]
-        counts = np.bincount(kbs, minlength=nkb_f)
-        padded = ((counts + chunk_eff - 1) // chunk_eff) * chunk_eff
-        src_start = np.cumsum(counts) - counts
-        dst_start = np.cumsum(padded) - padded
-        dest = dst_start[kbs] + np.arange(kbs.size) - src_start[kbs]
-        total_kb = int(padded.sum())
-        kb_rows = np.zeros(total_kb, np.int32)
-        kb_rows[dest] = pr[order_kb]
-        kb_cols = np.zeros(total_kb, np.int32)
-        kb_cols[dest] = (pc[order_kb] % fringe_bk).astype(np.int32)
-        kb_vals = np.zeros(total_kb, pv.dtype)
-        kb_vals[dest] = pv[order_kb]
-        kb_chunk = np.repeat(
-            np.arange(nkb_f, dtype=np.int32), padded // chunk_eff
+        chunk_eff = ops.effective_chunk(config.fringe_chunk)
+        kb_chunk, kb_rows, kb_cols, kb_vals = _bucket_fringe_kblocks(
+            pr, pc, pv, k_pad, fringe_bk, chunk_eff
         )
     else:
         kb_chunk = np.zeros(1, np.int32)
@@ -429,7 +508,14 @@ def fused_trace_count() -> int:
 
 
 @functools.lru_cache(maxsize=None)
-def _fused_executor(sig: Tuple):
+def _fused_run(sig: Tuple):
+    """Raw fused executor body for a plan signature (untraced).
+
+    The single-device jit (``_fused_executor``), the batched vmap
+    (``_batched_executor``) and the per-shard ``shard_map`` body of the
+    sharded executor all wrap this one function, so every dispatch flavor
+    runs identical math.
+    """
     (shape, bm, bk, bn, impl, reorder_cols, fringe_chunk, num_windows,
      _num_steps, _nnz_f, n_fringe_rows, has_core, has_fringe,
      fringe_tier, fringe_bk, _n_chunks, _nnz_kb) = sig
@@ -464,24 +550,429 @@ def _fused_executor(sig: Tuple):
             c = jnp.zeros((m, n), jnp.float32)
         return c
 
-    return jax.jit(_run)
+    return _run
+
+
+_N_PLAN_LEAVES = 13  # executor-body plan args (everything before b)
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_executor(sig: Tuple):
+    return jax.jit(_fused_run(sig))
+
+
+@functools.lru_cache(maxsize=None)
+def _batched_executor(sig: Tuple, batch: int):
+    """Multi-RHS executor: one compiled program per (signature, batch).
+
+    The plan leaves are broadcast (in_axes=None); only the (batch, K, N)
+    RHS carries the mapped axis.  ``batch`` is part of the cache key so the
+    retrace behavior is observable per batch size (see the cache tests).
+    """
+    del batch  # cache key only; the jit shape carries it at trace time
+    run = jax.vmap(_fused_run(sig), in_axes=(None,) * _N_PLAN_LEAVES + (0,))
+    return jax.jit(run)
+
+
+def _plan_leaves(plan: NeutronPlan) -> Tuple[jax.Array, ...]:
+    """Executor-body args in ``_fused_run`` order (without b)."""
+    return (
+        plan.step_window, plan.step_col, plan.flat_values,
+        plan.fringe_rows, plan.fringe_cols, plan.fringe_vals,
+        plan.col_perm, plan.gather_src_matrix, plan.gather_src_vector,
+        plan.fringe_kb_chunk, plan.fringe_kb_rows,
+        plan.fringe_kb_cols, plan.fringe_kb_vals,
+    )
 
 
 def execute(plan: NeutronPlan, b: jax.Array) -> jax.Array:
     """Full coordinated SpMM: C = A @ B, original row order, fp32.
 
-    Single end-to-end jitted dispatch: both engine paths plus the
-    scatter-free gather merge compile into one program (empty paths are
-    dropped at trace time).
+    ``b`` may be a single ``(K, N)`` operand or a batched ``(batch, K, N)``
+    stack of right-hand sides; the batched form returns ``(batch, M, N)``
+    from one vmapped dispatch compiled once per ``(signature, batch)``.
+    Single end-to-end jitted dispatch either way: both engine paths plus
+    the scatter-free gather merge compile into one program (empty paths
+    are dropped at trace time).
     """
-    fn = _fused_executor(plan.signature())
-    return fn(
-        plan.step_window, plan.step_col, plan.flat_values,
-        plan.fringe_rows, plan.fringe_cols, plan.fringe_vals,
-        plan.col_perm, plan.gather_src_matrix, plan.gather_src_vector,
-        plan.fringe_kb_chunk, plan.fringe_kb_rows,
-        plan.fringe_kb_cols, plan.fringe_kb_vals, b,
+    _validate_rhs(b, plan.shape)
+    if b.ndim == 2:
+        fn = _fused_executor(plan.signature())
+    else:
+        fn = _batched_executor(plan.signature(), int(b.shape[0]))
+    return fn(*_plan_leaves(plan), b)
+
+
+def _validate_rhs(b: jax.Array, shape: Tuple[int, int]) -> None:
+    """Reject an operand whose K disagrees with the plan.
+
+    Without this, a short b zero-pads up to the plan's k_pad inside the
+    executor — every kernel shape matches and nonzeros beyond b's K
+    silently multiply against zero rows (wrong output, no error).
+    """
+    if b.ndim not in (2, 3):
+        raise ValueError(
+            f"b must be (K, N) or (batch, K, N); got shape {tuple(b.shape)}"
+        )
+    if int(b.shape[-2]) != shape[1]:
+        raise ValueError(
+            f"operand K={int(b.shape[-2])} does not match the plan's "
+            f"K={shape[1]} (plan shape {shape})"
+        )
+
+
+# --- multi-device sharded executor -----------------------------------------
+# The window-cost model that balances the two intra-chip engine paths also
+# balances inter-device shards: row-windows are LPT-assigned to mesh devices
+# by coordinator.balance_row_window_list over cost-model window costs, each
+# shard gets its own NeutronPlan (padded to mesh-uniform static shapes so one
+# shard_map body serves every device), and since every shard owns a disjoint
+# set of output rows the merge is an all-gather of packed rows followed by
+# one gather — no psum, no scatter-add.
+
+
+@dataclasses.dataclass
+class ShardedPlan:
+    """Prepared multi-device execution plan.
+
+    ``shard_axis == "rows"``: plan leaves are stacked along a leading shard
+    dim; device s executes shard s's sub-plan and emits its packed
+    ``(rows_per_shard, N)`` block; ``assemble`` maps original rows into the
+    all-gathered stack.  ``shard_axis == "rhs"``: one replicated plan, B
+    columns sharded (the cost model picks this when the row-window
+    distribution is too skewed to balance, or there are fewer windows than
+    devices).
+    """
+
+    leaves: Tuple[jax.Array, ...]   # _fused_run args (stacked iff "rows")
+    sig: Tuple                      # mesh-uniform per-shard signature
+    mesh: Any
+    axis_name: str
+    shard_axis: str                 # "rows" | "rhs"
+    n_shards: int
+    assemble: Optional[jax.Array]   # (M,) int32 into stacked rows ("rows")
+    shape: Tuple[int, int]
+    config: SpmmConfig
+    stats: Tuple
+
+    @property
+    def stats_dict(self) -> Dict:
+        return dict(self.stats)
+
+    def signature(self) -> Tuple:
+        """Static structure key; never collides with NeutronPlan.signature()
+        (distinct leading tag + arity), so sharded executors can share cache
+        machinery with the fused ones without aliasing."""
+        return (
+            "sharded", self.shard_axis, self.n_shards, self.axis_name,
+            tuple(self.mesh.devices.shape), self.sig,
+        )
+
+
+def _pad_to(a: np.ndarray, n: int, fill=0) -> np.ndarray:
+    """Pad axis 0 of ``a`` to length ``n`` with ``fill``."""
+    if a.shape[0] == n:
+        return a
+    pad = np.full((n - a.shape[0],) + a.shape[1:], fill, a.dtype)
+    return np.concatenate([a, pad])
+
+
+def prepare_sharded(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+    shape: Tuple[int, int],
+    mesh: Any,
+    config: SpmmConfig = SpmmConfig(),
+    cost_model: Optional[EngineCostModel] = None,
+    shard_axis: str = "auto",
+    axis_name: Optional[str] = None,
+) -> ShardedPlan:
+    """Partition the SpMM across ``mesh`` and build per-shard plans.
+
+    ``shard_axis="auto"`` lets cost_model.select_shard_axis pick between
+    sharding output rows (balanced window lists, plan state fully
+    distributed) and replicating the plan while sharding RHS columns
+    (perfectly balanced but plan-replicated; chosen when window costs are
+    too skewed or too few).  The returned plan executes via
+    :func:`execute_sharded`.
+    """
+    m, k = shape
+    rows, cols, vals = _validate_coo(rows, cols, vals, shape)
+    if config.reorder_cols:
+        raise ValueError(
+            "prepare_sharded does not support reorder_cols=True: per-shard "
+            "column permutations cannot share one B operand"
+        )
+    axis_name = axis_name or mesh.axis_names[0]
+    n_shards = int(mesh.shape[axis_name])
+    cm = cost_model or default_cost_model(n_cols=config.bn)
+
+    wc = window_costs_from_coo(rows, m, config.bm, k, cm, alpha=config.alpha)
+    decision = select_shard_axis(wc, n_shards)
+    if shard_axis == "auto":
+        shard_axis = decision.shard_axis
+    if shard_axis not in ("rows", "rhs"):
+        raise ValueError(f"shard_axis must be rows|rhs|auto, got {shard_axis!r}")
+
+    base_stats = (
+        ("n_shards", n_shards),
+        ("shard_axis", shard_axis),
+        ("auto_shard_axis", decision.shard_axis),
+        ("rows_imbalance_est", decision.rows_imbalance),
+        ("num_windows_global", int(wc.shape[0])),
     )
+
+    if shard_axis == "rhs":
+        plan = prepare(rows, cols, vals, shape, config, cm)
+        return ShardedPlan(
+            leaves=_plan_leaves(plan), sig=plan.signature(), mesh=mesh,
+            axis_name=axis_name, shard_axis="rhs", n_shards=n_shards,
+            assemble=None, shape=tuple(shape), config=config,
+            stats=base_stats + (("nnz", int(rows.shape[0])),),
+        )
+
+    # --- rows axis: LPT-balanced window lists -> per-shard sub-problems ---
+    # Zero-cost (empty) windows are spread by row load *after* the LPT pass:
+    # fed to LPT directly they all tie-break onto one shard (+0 never moves
+    # argmin), inflating that shard's row count — and with it m_loc_max,
+    # i.e. every shard's padded problem size and the all-gather volume.
+    nw = int(wc.shape[0])
+    costed = np.flatnonzero(wc > 0)
+    empty = np.flatnonzero(wc == 0)
+    assign_costed = balance_row_window_list(wc[costed], n_shards)
+    lists = [list(costed[a]) for a in assign_costed]
+    rows_w_all = np.minimum(
+        (np.arange(nw, dtype=np.int64) + 1) * config.bm, m
+    ) - np.arange(nw, dtype=np.int64) * config.bm
+    row_loads = np.array([int(rows_w_all[l].sum()) for l in lists])
+    for w in empty:
+        s = int(np.argmin(row_loads))
+        lists[s].append(int(w))
+        row_loads[s] += int(rows_w_all[w])
+    assignment = [np.asarray(l, np.int64) for l in lists]
+    imbalance = list_imbalance(assignment, wc) if nw else 1.0
+    shard_of_window = np.zeros(nw, np.int64)
+    local_window_start = np.zeros(nw, np.int64)
+    m_loc = np.zeros(n_shards, np.int64)
+    for s, wins in enumerate(assignment):
+        wins = np.sort(wins)  # ascending original order within the shard
+        sizes = np.minimum((wins + 1) * config.bm, m) - wins * config.bm
+        starts = np.cumsum(sizes) - sizes
+        shard_of_window[wins] = s
+        local_window_start[wins] = starts
+        m_loc[s] = int(sizes.sum())
+    m_loc_max = int(m_loc.max()) if n_shards else 0
+
+    # per-shard prepare: every shard is a self-contained (m_loc_max, k)
+    # problem over locally-relabeled rows.  The per-shard fringe dispatch
+    # tier is forced off (budget 0) because the mesh-uniform tier is chosen
+    # below from the *largest* shard and re-bucketed once for all shards.
+    sub_cfg = dataclasses.replace(config, fringe_vmem_budget=0)
+    row_window = rows // config.bm if rows.size else rows
+    plans: List[NeutronPlan] = []
+    for s in range(n_shards):
+        mask = (
+            shard_of_window[row_window] == s if rows.size
+            else np.zeros(0, bool)
+        )
+        local_rows = (
+            local_window_start[row_window[mask]] + rows[mask] % config.bm
+        )
+        plans.append(prepare(
+            local_rows, cols[mask], vals[mask], (m_loc_max, k), sub_cfg, cm
+        ))
+
+    # --- mesh-uniform static structure: pad every leaf to the max ---------
+    cfg = config
+    k_pad = ((k + cfg.bk - 1) // cfg.bk) * cfg.bk
+    nw_max = max(p.num_windows for p in plans)
+    t_max = max(int(p.step_window.shape[0]) for p in plans)
+    nnzf_max = max(int(p.fringe_rows.shape[0]) for p in plans)
+    nfr_max = max(int(p.fringe_row_ids.shape[0]) for p in plans)
+    has_core = any(p.has_core for p in plans)
+    has_fringe = any(p.has_fringe for p in plans)
+    u_tier, u_bk = select_fringe_tier(
+        k_pad, nfr_max, cfg.bn, vmem_budget=cfg.fringe_vmem_budget
+    )
+    chunk_eff = ops.effective_chunk(cfg.fringe_chunk)
+
+    stacked: List[List[np.ndarray]] = [[] for _ in range(_N_PLAN_LEAVES)]
+    kb_streams = []
+    for p in plans:
+        if u_tier == "ksharded" and p.has_fringe and cfg.impl != "xla":
+            kb_streams.append(_bucket_fringe_kblocks(
+                np.asarray(p.fringe_rows), np.asarray(p.fringe_cols),
+                np.asarray(p.fringe_vals), k_pad, u_bk, chunk_eff,
+            ))
+        else:
+            kb_streams.append((
+                np.zeros(1, np.int32), np.zeros(1, np.int32),
+                np.zeros(1, np.int32), np.zeros(1, np.float32),
+            ))
+    nch_max = max(s[0].shape[0] for s in kb_streams)
+    nnzkb_max = max(s[1].shape[0] for s in kb_streams)
+
+    # the kernel window count grows by one: padded tile-stream steps target
+    # the dedicated window nw_max, never a real slot.  Targeting window 0
+    # would duplicate a real (window, k-block) pair and break the densified
+    # GEMM's assume_unique index-scatter (last-tile-wins would zero the real
+    # tile).  Padded steps only collide with each other — zero over zero.
+    nw_kernel = nw_max + 1
+    for p, kb in zip(plans, kb_streams):
+        # padding is inert everywhere: padded tile steps carry zero values
+        # into the extra window, padded fringe entries add 0.0 to packed row
+        # 0 (the fringe kernels accumulate, never overwrite), padded kb
+        # chunks target k-block 0 with zero values, and padded gather slots
+        # are -1 (no contribution)
+        leaves = [np.asarray(x) for x in _plan_leaves(p)]
+        sw, sc, fv, fr, fc, fvv, cp, gm, gv = leaves[:9]
+        kbc, kbr, kbcol, kbv = kb
+        padded = (
+            _pad_to(sw, t_max, nw_max), _pad_to(sc, t_max),
+            _pad_to(fv, t_max, 0.0),
+            _pad_to(fr, nnzf_max), _pad_to(fc, nnzf_max),
+            _pad_to(fvv, nnzf_max, 0.0),
+            cp,  # identity (reorder_cols is rejected above); same all shards
+            gm, gv,  # already (m_loc_max,) — prepared at the padded shape
+            _pad_to(kbc, nch_max), _pad_to(kbr, nnzkb_max),
+            _pad_to(kbcol, nnzkb_max), _pad_to(kbv, nnzkb_max, 0.0),
+        )
+        for i, arr in enumerate(padded):
+            stacked[i].append(arr)
+    leaves = tuple(jnp.asarray(np.stack(col)) for col in stacked)
+
+    sig = (
+        (m_loc_max, k), cfg.bm, cfg.bk, cfg.bn, cfg.impl, cfg.reorder_cols,
+        cfg.fringe_chunk, nw_kernel, t_max, nnzf_max, nfr_max,
+        has_core, has_fringe, u_tier, int(u_bk), nch_max, nnzkb_max,
+    )
+
+    # original row r lives in shard shard_of_window[r//bm] at local slot
+    # local_window_start[..] + r%bm; the all-gathered stack is row-major in
+    # (shard, local), so one flat index gathers the final C
+    if m:
+        rw = np.arange(m, dtype=np.int64) // cfg.bm
+        assemble = (
+            shard_of_window[rw] * m_loc_max
+            + local_window_start[rw] + np.arange(m, dtype=np.int64) % cfg.bm
+        ).astype(np.int32)
+    else:
+        assemble = np.zeros(0, np.int32)
+
+    stats = base_stats + (
+        ("rows_imbalance", float(imbalance)),
+        ("shard_rows", tuple(int(x) for x in m_loc)),
+        ("shard_nnz", tuple(int(p.stats_dict["nnz"]) for p in plans)),
+        ("rows_per_shard_padded", m_loc_max),
+        ("fringe_tier", u_tier),
+        ("fringe_bk", int(u_bk)),
+    )
+    return ShardedPlan(
+        leaves=leaves, sig=sig, mesh=mesh, axis_name=axis_name,
+        shard_axis="rows", n_shards=n_shards,
+        assemble=jnp.asarray(assemble), shape=tuple(shape), config=config,
+        stats=stats,
+    )
+
+
+_SHARDED_TRACES: list = []  # signatures appended at trace time (tests)
+
+
+def sharded_trace_count() -> int:
+    """Number of sharded-executor traces since process start (test hook)."""
+    return len(_SHARDED_TRACES)
+
+
+# per-shard ranks of the _fused_run plan args, for building PartitionSpecs
+_LEAF_RANKS = (1, 1, 3, 1, 1, 1, 1, 1, 1, 1, 1, 1, 1)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_executor(sig: Tuple, mesh, axis_name: str, shard_axis: str,
+                      batch: Optional[int]):
+    """shard_map-wrapped fused executor, cached per sharded signature.
+
+    "rows": leaves arrive stacked (leading shard dim), each device squeezes
+    its slice and runs the fused body on replicated b; out_specs concatenate
+    the disjoint packed row blocks (the only cross-device movement — an
+    all-gather of results, no scatter-add).  "rhs": leaves replicated, b
+    column-sharded, outputs concatenate along N.  ``batch`` selects the
+    vmapped multi-RHS body.
+    """
+    run = _fused_run(sig)
+    b_rank = 2 if batch is None else 3
+
+    if shard_axis == "rows":
+        in_specs = tuple(
+            leading_axis_spec(r + 1, axis_name) for r in _LEAF_RANKS
+        ) + (replicated_spec(b_rank),)
+        out_specs = (
+            leading_axis_spec(2, axis_name) if batch is None
+            else axis_spec(3, 1, axis_name)  # (batch, shard-stacked rows, N)
+        )
+
+        def body(*args):
+            *lv, bb = args
+            lv = [x[0] for x in lv]  # squeeze this device's shard slice
+            if batch is None:
+                return run(*lv, bb)
+            return jax.vmap(lambda one: run(*lv, one))(bb)
+
+        sm = shard_map(body, mesh, in_specs, out_specs)
+
+        @jax.jit
+        def _exec(*args):
+            _SHARDED_TRACES.append((sig, shard_axis, batch))
+            *leaves, assemble, b = args
+            flat = sm(*leaves, b)  # (..., n_shards * rows_per_shard, N)
+            return jnp.take(flat, assemble, axis=-2)
+
+        return _exec
+
+    # rhs: replicated plan, column-sharded b, outputs concatenated along N
+    in_specs = tuple(replicated_spec(r) for r in _LEAF_RANKS) + (
+        trailing_axis_spec(b_rank, axis_name),
+    )
+    out_specs = trailing_axis_spec(b_rank, axis_name)
+
+    def body(*args):
+        *lv, bb = args
+        if batch is None:
+            return run(*lv, bb)
+        return jax.vmap(lambda one: run(*lv, one))(bb)
+
+    sm = shard_map(body, mesh, in_specs, out_specs)
+
+    @jax.jit
+    def _exec(*args):
+        _SHARDED_TRACES.append((sig, shard_axis, batch))
+        return sm(*args)
+
+    return _exec
+
+
+def execute_sharded(splan: ShardedPlan, b: jax.Array) -> jax.Array:
+    """Multi-device coordinated SpMM: C = A @ B across ``splan.mesh``.
+
+    Accepts ``(K, N)`` or batched ``(batch, K, N)`` right-hand sides, like
+    :func:`execute`.  Bit-identical row ownership to the single-device
+    executor: every output row is computed by exactly one shard.
+    """
+    _validate_rhs(b, splan.shape)
+    batch = int(b.shape[0]) if b.ndim == 3 else None
+    if splan.shard_axis == "rhs" and b.shape[-1] % splan.n_shards:
+        raise ValueError(
+            f"rhs-sharded plan needs N divisible by n_shards="
+            f"{splan.n_shards}; got N={b.shape[-1]} (re-prepare with "
+            f"shard_axis='rows' or pad B)"
+        )
+    fn = _sharded_executor(
+        splan.sig, splan.mesh, splan.axis_name, splan.shard_axis, batch
+    )
+    if splan.shard_axis == "rows":
+        return fn(*splan.leaves, splan.assemble, b)
+    return fn(*splan.leaves, b)
 
 
 def neutron_spmm(

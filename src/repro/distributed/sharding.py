@@ -43,6 +43,55 @@ class AxisRules:
         return self.fsdp_axes if len(self.fsdp_axes) > 1 else self.fsdp_axes[0]
 
 
+# ---------------------------------------------------------------------------
+# shard_map compat + PartitionSpec helpers (used by the sharded SpMM
+# executor, core/spmm.py: per-shard plan leaves ride a leading mesh axis,
+# RHS-column sharding rides a trailing one)
+# ---------------------------------------------------------------------------
+def shard_map(f, mesh, in_specs, out_specs):
+    """Version-compat shard_map: ``jax.shard_map`` on new releases, the
+    experimental module on 0.4.x (where the public alias does not exist).
+
+    Replication checking is disabled under whichever keyword this jax
+    spells it (``check_rep`` on 0.4.x, ``check_vma`` later): the sharded
+    SpMM bodies wrap pallas_call, which has no replication rule.
+    """
+    import inspect
+
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    kwargs = {"mesh": mesh, "in_specs": in_specs, "out_specs": out_specs}
+    try:
+        params = inspect.signature(sm).parameters
+    except (TypeError, ValueError):  # pragma: no cover - exotic wrappers
+        params = {}
+    for check_kw in ("check_rep", "check_vma"):
+        if check_kw in params:
+            kwargs[check_kw] = False
+            break
+    return sm(f, **kwargs)
+
+
+def axis_spec(rank: int, pos: int, axis: Optional[str]) -> P:
+    """Rank-``rank`` PartitionSpec with ``axis`` at dimension ``pos``."""
+    dims: list = [None] * rank
+    dims[pos] = axis
+    return P(*dims)
+
+
+def leading_axis_spec(rank: int, axis: Optional[str]) -> P:
+    return axis_spec(rank, 0, axis)
+
+
+def trailing_axis_spec(rank: int, axis: Optional[str]) -> P:
+    return axis_spec(rank, rank - 1, axis)
+
+
+def replicated_spec(rank: int) -> P:
+    return P(*([None] * rank))
+
+
 _ACTIVE: Dict[str, Any] = {"rules": None}
 
 

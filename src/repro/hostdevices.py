@@ -1,0 +1,31 @@
+"""Forced host device count for simulated-mesh runs (jax-free module).
+
+The CPU device count is fixed when jax initializes, so multi-device CPU
+coverage requires ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` in
+the environment *before* the first jax import.  This module must therefore
+stay importable without touching jax — it is used in import-order-sensitive
+preambles (benchmarks/collect_sharded_json.py, the mesh parity worker) and
+for building subprocess environments (the ``forced_mesh_run`` fixture).
+"""
+from __future__ import annotations
+
+from typing import MutableMapping
+
+FORCE_FLAG = "xla_force_host_platform_device_count"
+
+
+def force_host_device_count(
+    env: MutableMapping[str, str], n_devices: int = 8
+) -> MutableMapping[str, str]:
+    """Pin CPU and request ``n_devices`` forced host devices in ``env``.
+
+    ``env`` is ``os.environ`` (in-process preamble, pre-jax-import) or a
+    subprocess environment dict.  A pre-existing forced count is kept —
+    callers layering on top of an outer forced-mesh run (e.g. the CI mesh
+    leg) must not fight it.  Returns ``env`` for chaining.
+    """
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    flags = env.get("XLA_FLAGS", "")
+    if FORCE_FLAG not in flags:
+        env["XLA_FLAGS"] = f"{flags} --{FORCE_FLAG}={n_devices}".strip()
+    return env

@@ -23,6 +23,18 @@ Impl = Literal["pallas", "pallas_interpret", "xla"]
 FringeTier = Literal["auto", "resident", "ksharded", "xla"]
 
 
+def effective_chunk(chunk: int | None) -> int:
+    """Per-grid-step nonzero count the pallas fringe kernels actually use.
+
+    The kernels unroll their chunk loop in python, so large XLA-oriented
+    values are clamped to a compile-friendly unroll factor.  Plan builders
+    (``prepare``/``prepare_sharded``) MUST pad the k-bucketed stream with
+    this same value — a bucketed stream is only interpretable with the
+    chunk it was padded under — so the clamp lives in exactly one place.
+    """
+    return min(chunk or 8, 64)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("num_windows", "bm", "bk", "bn", "impl", "assume_unique"),
@@ -50,6 +62,12 @@ def block_stream_spmm(
     make — ``prepare()`` emits one tile per pair by construction) selects
     the ~4x-faster index-scatter + gather densify instead.
     """
+    if b.ndim != 2:
+        raise ValueError(
+            f"block_stream_spmm expects a rank-2 (K, N) operand, got shape "
+            f"{tuple(b.shape)}; batched RHS panels go through "
+            "core.spmm.execute, which vmaps the fused body per path"
+        )
     if impl == "xla":
         # static occupancy = active tiles / total (window, k-block) slots.
         # Dense-ish cores run ~10-20x faster as one densified GEMM than as
@@ -117,6 +135,14 @@ def fringe_spmm(
     "ksharded" degrades to the XLA fallback (bucketing needs host-side
     padding).
     """
+    if b.ndim != 2:
+        raise ValueError(
+            f"fringe_spmm expects a rank-2 (K, N) operand, got shape "
+            f"{tuple(b.shape)}; batched RHS panels go through "
+            "core.spmm.execute, which vmaps the fused body per path"
+        )
+    if chunk is not None and chunk < 1:
+        raise ValueError(f"chunk must be a positive nonzero count, got {chunk}")
     if impl == "xla":
         return ref.ref_gather_spmm(rows, cols, vals, b, num_rows, chunk=chunk)
     if tier == "auto":
@@ -132,7 +158,7 @@ def fringe_spmm(
     if tier == "resident":
         return gather_spmm(
             rows, cols, vals, b,
-            num_rows=num_rows, bn=bn, chunk=min(chunk or 8, 64),
+            num_rows=num_rows, bn=bn, chunk=effective_chunk(chunk),
             interpret=(impl == "pallas_interpret"),
         )
     if tier == "ksharded":

@@ -35,3 +35,22 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 4):
     """Small mesh for CPU tests (requires forced host device count)."""
     return jax.make_mesh((n_data, n_model), ("data", "model"),
                          **_mesh_kwargs(2))
+
+
+def make_spmm_mesh(n_shards: int = 0, axis_name: str = "data"):
+    """1-D data-parallel mesh for the sharded SpMM executor.
+
+    ``n_shards=0`` takes every visible device.  On CPU hosts, more devices
+    are forced with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    (before jax initializes) — the simulated-mesh tests and the sharded
+    benchmark collector both run that way.
+    """
+    avail = len(jax.devices())
+    n = n_shards or avail
+    if n > avail:
+        raise ValueError(
+            f"requested {n} shards but only {avail} device(s) are visible; "
+            "on CPU, force more with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n}"
+        )
+    return jax.make_mesh((n,), (axis_name,), **_mesh_kwargs(1))

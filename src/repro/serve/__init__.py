@@ -1,5 +1,8 @@
-"""Serving: KV/SSM-cache engine with prefill + decode steps."""
-from . import engine
+"""Serving: KV/SSM-cache engine with prefill + decode steps, plus the
+request-batching SpMM service front."""
+from . import engine, spmm_service
 from .engine import ServeConfig, ServeEngine
+from .spmm_service import SpmmService
 
-__all__ = ["engine", "ServeConfig", "ServeEngine"]
+__all__ = ["engine", "spmm_service", "ServeConfig", "ServeEngine",
+           "SpmmService"]

@@ -1,0 +1,177 @@
+"""Batched SpMM serving front: group per-matrix requests into one dispatch.
+
+Serving-style SpMM traffic is many small right-hand sides against a few
+long-lived sparse matrices (GNN inference over a fixed graph, repeated
+feature panels).  ``SpmmService`` keeps one prepared ``NeutronPlan`` per
+registered matrix and drains queued requests through the batched
+``core.spmm.execute`` path: each flush stacks up to ``max_batch`` panels
+into one ``(batch, K, N)`` operand, padded up to a power-of-two bucket so
+the vmapped executor compiles once per ``(plan signature, bucket)`` instead
+of once per ragged batch size.
+
+Multi-device deployments pass a ``ShardedPlan`` via ``register_sharded`` —
+the flush path is identical because ``execute_sharded`` accepts the same
+batched operand.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import spmm
+
+
+def _pow2_at_least(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+def _bucket(batch: int, max_batch: int) -> int:
+    """Smallest power-of-two >= batch, capped at max_batch (itself pow2)."""
+    return min(_pow2_at_least(batch), max_batch)
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    requests: int = 0
+    flushes: int = 0
+    dispatches: int = 0
+    padded_slots: int = 0  # zero panels added to reach a bucket size
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+class SpmmService:
+    """Plan-cached, request-batching SpMM front end."""
+
+    def __init__(self, config: spmm.SpmmConfig = spmm.SpmmConfig(),
+                 max_batch: int = 8):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.config = config
+        # rounded up to a power of two: a non-pow2 cap would add itself as
+        # an extra bucket size, breaking the log2(max_batch)+1 trace bound
+        self.max_batch = _pow2_at_least(int(max_batch))
+        self._plans: Dict[str, Any] = {}  # NeutronPlan | ShardedPlan
+        self._queues: Dict[str, List[Tuple[int, jax.Array]]] = {}
+        self._results: Dict[int, jax.Array] = {}
+        self._next_ticket = 0
+        self.stats = ServiceStats()
+
+    # -- matrix registration ------------------------------------------------
+    def register(
+        self,
+        name: str,
+        rows: np.ndarray,
+        cols: np.ndarray,
+        vals: np.ndarray,
+        shape: Tuple[int, int],
+    ) -> None:
+        """Prepare and cache a plan for a named sparse matrix."""
+        self._check_reregister(name)
+        self._plans[name] = spmm.prepare(rows, cols, vals, shape, self.config)
+        self._queues.setdefault(name, [])
+
+    def register_sharded(self, name: str, splan: spmm.ShardedPlan) -> None:
+        """Serve a matrix through an already-prepared multi-device plan."""
+        self._check_reregister(name)
+        self._plans[name] = splan
+        self._queues.setdefault(name, [])
+
+    def _check_reregister(self, name: str) -> None:
+        # panels queued against the old plan's K would dispatch against the
+        # new one; make the caller drain first
+        if self._queues.get(name):
+            raise ValueError(
+                f"cannot re-register {name!r} with "
+                f"{len(self._queues[name])} pending request(s); flush first"
+            )
+
+    def plan(self, name: str):
+        return self._plans[name]
+
+    # -- request queue ------------------------------------------------------
+    def submit(self, name: str, b: jax.Array) -> int:
+        """Queue one (K, N) request panel; returns a result ticket.
+
+        Everything a dispatch could reject is validated here, while the
+        request is still the caller's problem — a flush-time failure would
+        strand the whole batch."""
+        if name not in self._plans:
+            raise KeyError(f"no matrix registered under {name!r}")
+        plan = self._plans[name]
+        k = plan.shape[1]
+        if b.ndim != 2 or b.shape[0] != k:
+            raise ValueError(
+                f"request for {name!r} must be (K={k}, N), got "
+                f"{tuple(b.shape)}"
+            )
+        if (isinstance(plan, spmm.ShardedPlan) and plan.shard_axis == "rhs"
+                and b.shape[1] % plan.n_shards):
+            raise ValueError(
+                f"request for {name!r} needs N divisible by "
+                f"n_shards={plan.n_shards} (rhs-sharded plan); got "
+                f"N={b.shape[1]}"
+            )
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._queues[name].append((ticket, jnp.asarray(b)))
+        self.stats.requests += 1
+        return ticket
+
+    def pending(self, name: Optional[str] = None) -> int:
+        if name is not None:
+            return len(self._queues.get(name, ()))
+        return sum(len(q) for q in self._queues.values())
+
+    # -- batched execution --------------------------------------------------
+    def _execute(self, plan, stacked: jax.Array) -> jax.Array:
+        if isinstance(plan, spmm.ShardedPlan):
+            return spmm.execute_sharded(plan, stacked)
+        return spmm.execute(plan, stacked)
+
+    def flush(self) -> int:
+        """Drain every queue through batched dispatches; returns the number
+        of requests completed.  Results become available via ``fetch``.
+
+        Requests for one matrix may carry different widths N; panels are
+        grouped by shape before stacking (a mixed-width stack would raise
+        mid-drain).  Requests leave the queue only after their dispatch
+        succeeds, so an unexpected execute failure propagates with every
+        undispatched request still queued — nothing is stranded
+        result-less."""
+        done = 0
+        for name, queue in self._queues.items():
+            plan = self._plans[name]
+            while queue:
+                # FIFO head's shape defines this round's group
+                shape = tuple(queue[0][1].shape)
+                group = [item for item in queue
+                         if tuple(item[1].shape) == shape][: self.max_batch]
+                bucket = _bucket(len(group), self.max_batch)
+                panels = [b for _, b in group]
+                if bucket > len(panels):  # pad to the bucket with zeros so
+                    pad = jnp.zeros_like(panels[0])  # one trace per bucket
+                    panels += [pad] * (bucket - len(panels))
+                out = self._execute(plan, jnp.stack(panels))
+                # dispatch succeeded: now dequeue and record
+                dispatched = {ticket for ticket, _ in group}
+                queue[:] = [it for it in queue if it[0] not in dispatched]
+                self.stats.dispatches += 1
+                self.stats.padded_slots += bucket - len(group)
+                for i, (ticket, _) in enumerate(group):
+                    self._results[ticket] = out[i]
+                done += len(group)
+        self.stats.flushes += 1
+        return done
+
+    def fetch(self, ticket: int) -> jax.Array:
+        """Pop a completed result; raises KeyError until flushed."""
+        return self._results.pop(ticket)

@@ -1,0 +1,145 @@
+"""Degenerate-input hardening: one regression test per audited edge case.
+
+The audit behind this file: ``prepare``/``execute`` over nnz=0, single
+row/column matrices, M/K smaller than one window, zero-dim operands,
+duplicate COO entries, non-f32 value dtypes, and all-fringe/all-core
+splits — plus the input-validation errors that replaced silent
+negative-index aliasing and cryptic out-of-range failures.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import spmm
+
+
+def _run_vs_dense(rows, cols, vals, shape, n=8, impl="xla", **cfg_kwargs):
+    rows = np.asarray(rows, np.int64)
+    cols = np.asarray(cols, np.int64)
+    vals = np.asarray(vals)
+    cfg = spmm.SpmmConfig(impl=impl, **cfg_kwargs)
+    plan = spmm.prepare(rows, cols, vals, shape, cfg)
+    b = np.random.RandomState(0).randn(shape[1], n).astype(np.float32)
+    out = np.asarray(spmm.execute(plan, jnp.asarray(b)))
+    a = np.zeros(shape, np.float64)
+    if rows.size:
+        np.add.at(a, (rows, cols), vals.astype(np.float64))
+    np.testing.assert_allclose(out, (a @ b).astype(np.float32),
+                               rtol=1e-4, atol=1e-4)
+    return plan
+
+
+# --- empty / zero-dim shapes ------------------------------------------------
+def test_nnz_zero():
+    _run_vs_dense([], [], [], (4, 6))
+
+
+def test_zero_rows_matrix():
+    plan = _run_vs_dense([], [], [], (0, 5))
+    assert np.asarray(
+        spmm.execute(plan, jnp.ones((5, 3), jnp.float32))).shape == (0, 3)
+
+
+def test_zero_cols_matrix():
+    _run_vs_dense([], [], [], (5, 0), n=3)
+
+
+def test_zero_width_rhs():
+    plan = _run_vs_dense([0], [0], [1.0], (2, 2))
+    out = spmm.execute(plan, jnp.zeros((2, 0), jnp.float32))
+    assert out.shape == (2, 0)
+
+
+# --- tiny shapes (below one window / one k-block) ---------------------------
+def test_one_by_one():
+    _run_vs_dense([0], [0], [2.0], (1, 1))
+
+
+def test_single_row_matrix():
+    _run_vs_dense([0, 0, 0], [0, 2, 4], [1.0, 2.0, 3.0], (1, 5))
+
+
+def test_single_col_matrix():
+    _run_vs_dense([0, 2, 4], [0, 0, 0], [1.0, 2.0, 3.0], (5, 1))
+
+
+def test_m_and_k_below_one_window():
+    # bm=128/bk=64 defaults: a 3x3 matrix fits in a fraction of one tile
+    _run_vs_dense([0, 1, 2], [0, 1, 2], [1.0, 2.0, 3.0], (3, 3))
+
+
+def test_single_column_rhs():
+    _run_vs_dense([0, 1], [1, 0], [1.0, 2.0], (2, 2), n=1)
+
+
+# --- forced split extremes --------------------------------------------------
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+def test_all_fringe_tiny(impl):
+    _run_vs_dense([0, 0, 1, 1], [0, 1, 0, 1], [1.0, 2.0, 3.0, 4.0], (2, 2),
+                  impl=impl, alpha=1.0)
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+def test_all_core_tiny(impl):
+    _run_vs_dense([0, 0, 1, 1], [0, 1, 0, 1], [1.0, 2.0, 3.0, 4.0], (2, 2),
+                  impl=impl, alpha=1e-12, enable_col_stage=False)
+
+
+# --- value handling ---------------------------------------------------------
+def test_duplicate_coo_entries_accumulate():
+    _run_vs_dense([0, 0, 1, 1, 1], [1, 1, 0, 0, 0],
+                  [1.0, 2.0, 3.0, 4.0, 5.0], (64, 64))
+
+
+@pytest.mark.parametrize("dtype", [np.float64, np.int32])
+def test_value_dtypes_cast_to_f32(dtype):
+    plan = _run_vs_dense([0, 1], [1, 0], np.array([1.5, 2.5]).astype(dtype),
+                         (2, 2))
+    # fringe values are cast once at prepare; kernels never see int/f64
+    assert plan.fringe_vals.dtype == jnp.float32
+    assert plan.fringe_kb_vals.dtype == jnp.float32
+
+
+# --- input validation (silent-corruption regressions) -----------------------
+def test_negative_row_index_rejected():
+    # pre-fix: -1 wrapped python-style and aliased onto the last row
+    with pytest.raises(ValueError, match="row indices out of range"):
+        spmm.prepare(np.array([-1]), np.array([0]),
+                     np.array([1.0], np.float32), (4, 4))
+
+
+def test_out_of_range_col_rejected():
+    with pytest.raises(ValueError, match="col indices out of range"):
+        spmm.prepare(np.array([0]), np.array([9]),
+                     np.array([1.0], np.float32), (4, 4))
+
+
+def test_mismatched_triplet_lengths_rejected():
+    with pytest.raises(ValueError, match="lengths disagree"):
+        spmm.prepare(np.array([0, 1]), np.array([0]),
+                     np.array([1.0], np.float32), (4, 4))
+
+
+def test_non_integer_indices_rejected():
+    with pytest.raises(ValueError, match="integer"):
+        spmm.prepare(np.array([0.0]), np.array([0]),
+                     np.array([1.0], np.float32), (4, 4))
+
+
+def test_bad_rhs_rank_rejected():
+    plan = spmm.prepare(np.array([0]), np.array([0]),
+                        np.array([1.0], np.float32), (2, 2))
+    # pre-fix: a rank-4 operand died as "too many values to unpack"
+    with pytest.raises(ValueError, match="batch"):
+        spmm.execute(plan, jnp.zeros((2, 2, 2, 2), jnp.float32))
+
+
+def test_mismatched_rhs_k_rejected():
+    # pre-fix: a short b zero-padded up to the plan's k_pad inside the
+    # executor and nonzeros beyond b's K silently multiplied zero rows
+    plan = spmm.prepare(np.array([0]), np.array([99]),
+                        np.array([1.0], np.float32), (2, 100))
+    with pytest.raises(ValueError, match="does not match the plan"):
+        spmm.execute(plan, jnp.zeros((96, 4), jnp.float32))
+    with pytest.raises(ValueError, match="does not match the plan"):
+        spmm.execute(plan, jnp.zeros((3, 96, 4), jnp.float32))

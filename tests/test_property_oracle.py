@@ -1,0 +1,199 @@
+"""Property-based oracle suite: prepare→execute ≡ dense matmul.
+
+Random COO matrices across density/shape/dtype, checked against the fp64
+dense reference for every fringe dispatch tier (resident / K-sharded / XLA
+fallback, forced via synthetic VMEM budgets) and both matrix-path variants
+(streaming tile einsum vs densified GEMM, forced via density on either side
+of the occupancy threshold).  Hypothesis draws a seed + shape knobs and the
+arrays come from a seeded RandomState, so examples are cheap to generate and
+seed-stable (``derandomize=True``: the same examples every run, CI-fast).
+
+Without hypothesis installed the ``tests/_hyp`` shim skips the ``@given``
+tests; the pinned panel below runs the identical checker everywhere.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import spmm
+from repro.core.cost_model import fringe_resident_bytes
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+
+BN = 128  # narrow n-blocks keep interpret-mode grids small
+
+
+def _random_coo(seed, m, k, density):
+    rng = np.random.RandomState(seed)
+    mask = rng.rand(m, k) < density
+    rows, cols = np.nonzero(mask)
+    vals = rng.randn(rows.size)
+    return rows.astype(np.int64), cols.astype(np.int64), vals
+
+
+def _force_tier_budget(tier, k_pad, num_rows):
+    """VMEM budget that provably forces the given fringe dispatch tier.
+
+    ``k_pad >= 64`` (one bk block) guarantees ``resident_bytes - 1`` still
+    fits a minimal (8, bn) slice, so the just-below-resident budget always
+    lands on ksharded rather than degrading to xla.
+    """
+    if tier == "resident":
+        return None
+    if tier == "ksharded":
+        return fringe_resident_bytes(k_pad, num_rows, BN) - 1
+    return 16  # xla: nothing fits
+
+
+def _assert_matches_dense(rows, cols, vals, shape, n, cfg, seed=0,
+                          batch=None):
+    plan = spmm.prepare(rows, cols, vals, shape, cfg)
+    rng = np.random.RandomState(seed + 1)
+    if batch is None:
+        b = rng.randn(shape[1], n).astype(np.float32)
+    else:
+        b = rng.randn(batch, shape[1], n).astype(np.float32)
+    out = np.asarray(spmm.execute(plan, jnp.asarray(b)))
+    a = np.zeros(shape, np.float64)
+    if rows.size:
+        np.add.at(a, (rows, cols), vals.astype(np.float64))
+    expect = a @ b.astype(np.float64)
+    scale = np.abs(expect).max() + 1e-9
+    assert np.abs(out - expect).max() / scale < 1e-4
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: full pipeline under the XLA impl (splits + matrix variants)
+# ---------------------------------------------------------------------------
+@given(
+    st.integers(0, 2**31 - 1) if HAVE_HYPOTHESIS else None,
+    st.integers(1, 96) if HAVE_HYPOTHESIS else None,
+    st.integers(1, 96) if HAVE_HYPOTHESIS else None,
+    st.sampled_from([0.0, 0.02, 0.12, 0.5]) if HAVE_HYPOTHESIS else None,
+    st.sampled_from([None, 1.0, 1e-9]) if HAVE_HYPOTHESIS else None,
+    st.integers(1, 40) if HAVE_HYPOTHESIS else None,
+    st.sampled_from([np.float32, np.float64]) if HAVE_HYPOTHESIS else None,
+)
+@settings(max_examples=16, deadline=None, derandomize=True)
+def test_property_xla_pipeline_matches_dense(seed, m, k, density, alpha, n,
+                                             dtype):
+    """All split variants (cost-model / all-fringe / all-core) across random
+    shapes and densities; density drives the matrix path across both the
+    streaming and densified-GEMM occupancy branches."""
+    rows, cols, vals = _random_coo(seed, m, k, density)
+    cfg = spmm.SpmmConfig(impl="xla", alpha=alpha,
+                          enable_col_stage=alpha is None)
+    _assert_matches_dense(rows, cols, vals.astype(dtype), (m, k), n, cfg,
+                          seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: fringe dispatch tiers under pallas interpret mode
+# ---------------------------------------------------------------------------
+@given(
+    st.integers(0, 2**31 - 1) if HAVE_HYPOTHESIS else None,
+    st.integers(1, 40) if HAVE_HYPOTHESIS else None,
+    st.integers(1, 64) if HAVE_HYPOTHESIS else None,
+    st.sampled_from([0.05, 0.25]) if HAVE_HYPOTHESIS else None,
+    st.sampled_from(["resident", "ksharded", "xla"]) if HAVE_HYPOTHESIS
+    else None,
+)
+@settings(max_examples=9, deadline=None, derandomize=True)
+def test_property_fringe_tiers_interpret(seed, m, k, density, tier):
+    """Every fringe tier, forced by a derived VMEM budget, in interpret
+    mode on an all-fringe split."""
+    rows, cols, vals = _random_coo(seed, m, k, density)
+    num_rows = np.unique(rows).size
+    k_pad = ((k + 63) // 64) * 64
+    cfg = spmm.SpmmConfig(
+        impl="pallas_interpret", bn=BN, alpha=1.0,
+        fringe_vmem_budget=_force_tier_budget(tier, k_pad, max(num_rows, 1)),
+    )
+    plan = _assert_matches_dense(rows, cols, vals, (m, k), 24, cfg, seed=seed)
+    if rows.size:
+        assert plan.fringe_tier == tier
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: batched multi-RHS equals per-panel execution
+# ---------------------------------------------------------------------------
+@given(
+    st.integers(0, 2**31 - 1) if HAVE_HYPOTHESIS else None,
+    st.integers(1, 64) if HAVE_HYPOTHESIS else None,
+    st.integers(1, 64) if HAVE_HYPOTHESIS else None,
+    st.integers(1, 5) if HAVE_HYPOTHESIS else None,
+)
+@settings(max_examples=10, deadline=None, derandomize=True)
+def test_property_batched_execute_matches_dense(seed, m, k, batch):
+    rows, cols, vals = _random_coo(seed, m, k, 0.1)
+    cfg = spmm.SpmmConfig(impl="xla")
+    _assert_matches_dense(rows, cols, vals, (m, k), 16, cfg, seed=seed,
+                          batch=batch)
+
+
+# ---------------------------------------------------------------------------
+# pinned panel: the same checker on a fixed grid (runs without hypothesis)
+# ---------------------------------------------------------------------------
+PINNED = [
+    # (seed, m, k, density, alpha, impl, tier-or-None)
+    (0, 64, 64, 0.10, None, "xla", None),
+    (1, 96, 48, 0.02, 1.0, "xla", None),        # all-fringe
+    (2, 96, 48, 0.50, 1e-9, "xla", None),       # all-core, densified GEMM
+    (4, 40, 48, 0.15, 1.0, "pallas_interpret", "resident"),
+    (5, 40, 48, 0.15, 1.0, "pallas_interpret", "ksharded"),
+    (6, 40, 48, 0.15, 1.0, "pallas_interpret", "xla"),
+    (7, 1, 1, 1.00, None, "xla", None),
+    (8, 1, 80, 0.30, None, "xla", None),        # single row
+    (9, 80, 1, 0.30, None, "xla", None),        # single col
+]
+
+
+@pytest.mark.parametrize("seed,m,k,density,alpha,impl,tier", PINNED)
+def test_pinned_oracle_panel(seed, m, k, density, alpha, impl, tier):
+    rows, cols, vals = _random_coo(seed, m, k, density)
+    budget = None
+    if tier is not None:
+        num_rows = max(np.unique(rows).size, 1)
+        k_pad = ((k + 63) // 64) * 64
+        budget = _force_tier_budget(tier, k_pad, num_rows)
+    cfg = spmm.SpmmConfig(impl=impl, alpha=alpha, bn=BN,
+                          enable_col_stage=alpha is None,
+                          fringe_vmem_budget=budget)
+    plan = _assert_matches_dense(rows, cols, vals, (m, k), 24, cfg, seed=seed)
+    if tier is not None and rows.size:
+        assert plan.fringe_tier == tier
+
+
+def _streaming_occupancy_coo():
+    """All-core matrix whose block occupancy sits below the densified-GEMM
+    threshold: one nonzero per row, all in k-block 0, K spanning 5 blocks —
+    occupancy 1/5 < 0.25, so the XLA matrix path stays on the streaming
+    tile einsum (uniform-random columns always light up every block)."""
+    m, k = 300, 320
+    rows = np.arange(m, dtype=np.int64)
+    cols = np.zeros(m, np.int64)
+    vals = np.random.RandomState(3).randn(m)
+    return rows, cols, vals, (m, k)
+
+
+def test_pinned_streaming_matrix_variant():
+    rows, cols, vals, shape = _streaming_occupancy_coo()
+    cfg = spmm.SpmmConfig(impl="xla", alpha=1e-9, enable_col_stage=False)
+    _assert_matches_dense(rows, cols, vals, shape, 24, cfg, seed=3)
+
+
+def test_pinned_matrix_variants_cross_occupancy_threshold():
+    """The two all-core pinned cases really do land on opposite sides of
+    the densified-GEMM occupancy branch (0.25 active-slot fraction)."""
+    dense_plan = spmm.prepare(
+        *_random_coo(2, 96, 48, 0.5), (96, 48),
+        spmm.SpmmConfig(impl="xla", alpha=1e-9, enable_col_stage=False))
+    rows, cols, vals, shape = _streaming_occupancy_coo()
+    sparse_plan = spmm.prepare(
+        rows, cols, vals, shape,
+        spmm.SpmmConfig(impl="xla", alpha=1e-9, enable_col_stage=False))
+    def occupancy(p):
+        nkb = (p.shape[1] + p.config.bk - 1) // p.config.bk
+        return p.stats_dict["num_steps"] / max(p.num_windows * nkb, 1)
+    assert occupancy(dense_plan) >= 0.25
+    assert occupancy(sparse_plan) < 0.25

@@ -1,0 +1,295 @@
+"""Sharded executor: simulated-mesh parity, shard balancing, assembly maps,
+shard-axis selection, and cache/signature behavior on 1-device meshes.
+
+Multi-device coverage comes from two directions: the in-process tests below
+marked with the device-count skip run directly when the suite is launched
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI mesh
+leg), and ``test_forced_mesh_parity_subprocess`` always exercises the full
+1/2/4/8-way panel by spawning a fresh process with the forced flag — so
+single-device local runs still verify multi-device parity.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import spmm
+from repro.core.cost_model import default_cost_model, select_shard_axis
+from repro.core.coordinator import window_costs_from_coo
+from repro.launch.mesh import make_spmm_mesh
+from conftest import make_sparse
+
+N_DEVICES = len(jax.devices())
+needs8 = pytest.mark.skipif(
+    N_DEVICES < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "(covered by the subprocess parity test on 1-device hosts)",
+)
+
+
+def _problem(rng, m=300, k=120, density=0.08, dense_rows=6):
+    a, rows, cols, vals = make_sparse(rng, m, k, density,
+                                      n_dense_rows=dense_rows)
+    return a, rows, cols, vals
+
+
+# ---------------------------------------------------------------------------
+# 1-device mesh: full machinery without forced devices
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shard_axis", ["rows", "rhs", "auto"])
+def test_one_device_mesh_matches_execute(rng, shard_axis):
+    a, rows, cols, vals = _problem(rng)
+    cfg = spmm.SpmmConfig(impl="xla")
+    plan = spmm.prepare(rows, cols, vals, a.shape, cfg)
+    b = jnp.asarray(rng.randn(a.shape[1], 32).astype(np.float32))
+    ref = np.asarray(spmm.execute(plan, b))
+    splan = spmm.prepare_sharded(rows, cols, vals, a.shape, make_spmm_mesh(1),
+                                 cfg, shard_axis=shard_axis)
+    out = np.asarray(spmm.execute_sharded(splan, b))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_one_device_mesh_batched(rng):
+    a, rows, cols, vals = _problem(rng)
+    cfg = spmm.SpmmConfig(impl="xla")
+    plan = spmm.prepare(rows, cols, vals, a.shape, cfg)
+    b3 = jnp.asarray(rng.randn(4, a.shape[1], 16).astype(np.float32))
+    ref = np.asarray(spmm.execute(plan, b3))
+    splan = spmm.prepare_sharded(rows, cols, vals, a.shape, make_spmm_mesh(1),
+                                 cfg, shard_axis="rows")
+    out = np.asarray(spmm.execute_sharded(splan, b3))
+    assert out.shape == (4, a.shape[0], 16)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_sharded_empty_matrix(rng):
+    splan = spmm.prepare_sharded(
+        np.zeros(0, np.int64), np.zeros(0, np.int64), np.zeros(0, np.float32),
+        (40, 24), make_spmm_mesh(1), spmm.SpmmConfig(impl="xla"))
+    b = jnp.ones((24, 8), jnp.float32)
+    assert np.all(np.asarray(spmm.execute_sharded(splan, b)) == 0.0)
+
+
+def test_sharded_rejects_mismatched_rhs_k(rng):
+    a, rows, cols, vals = _problem(rng)
+    splan = spmm.prepare_sharded(rows, cols, vals, a.shape, make_spmm_mesh(1),
+                                 spmm.SpmmConfig(impl="xla"),
+                                 shard_axis="rows")
+    with pytest.raises(ValueError, match="does not match the plan"):
+        spmm.execute_sharded(splan, jnp.zeros((a.shape[1] - 8, 4),
+                                              jnp.float32))
+
+
+def test_sharded_rejects_reorder_cols(rng):
+    a, rows, cols, vals = _problem(rng)
+    with pytest.raises(ValueError, match="reorder_cols"):
+        spmm.prepare_sharded(rows, cols, vals, a.shape, make_spmm_mesh(1),
+                             spmm.SpmmConfig(impl="xla", reorder_cols=True))
+
+
+def test_rhs_axis_one_shard_accepts_any_n(rng):
+    a, rows, cols, vals = _problem(rng)
+    splan = spmm.prepare_sharded(rows, cols, vals, a.shape, make_spmm_mesh(1),
+                                 spmm.SpmmConfig(impl="xla"),
+                                 shard_axis="rhs")
+    b = jnp.ones((a.shape[1], 7), jnp.float32)
+    assert spmm.execute_sharded(splan, b).shape == (a.shape[0], 7)
+
+
+def test_sharded_stats_record_balance(rng):
+    a, rows, cols, vals = _problem(rng)
+    splan = spmm.prepare_sharded(rows, cols, vals, a.shape, make_spmm_mesh(1),
+                                 spmm.SpmmConfig(impl="xla"),
+                                 shard_axis="rows")
+    sd = splan.stats_dict
+    assert sd["n_shards"] == 1
+    assert sd["rows_imbalance"] == pytest.approx(1.0)
+    assert sum(sd["shard_nnz"]) == rows.shape[0]
+    assert sum(sd["shard_rows"]) == a.shape[0]
+
+
+def test_empty_windows_spread_across_shards(rng):
+    """Zero-cost windows must not pile onto one shard via the LPT +0
+    tie-break — that inflates m_loc_max (every shard's padded problem size
+    and the all-gather volume).  8 costed + 8 empty windows over a mesh of
+    1 still exposes the bookkeeping; the load balance assertion uses the
+    recorded per-shard rows on a synthetic 2-shard assignment computed
+    through prepare_sharded's own path on a 1-device mesh."""
+    # alternate nonempty/empty windows: rows only in even windows
+    bm = 128
+    rows_list = []
+    for w in range(0, 16, 2):
+        rows_list.append(np.full(40, w * bm + 3, np.int64))
+    rows = np.concatenate(rows_list)
+    cols = np.tile(np.arange(40, dtype=np.int64), 8)
+    vals = np.ones(rows.size, np.float32)
+    splan = spmm.prepare_sharded(rows, cols, vals, (16 * bm, 64),
+                                 make_spmm_mesh(1),
+                                 spmm.SpmmConfig(impl="xla"),
+                                 shard_axis="rows")
+    # all 16 windows land somewhere, and the padded per-shard row count
+    # covers exactly the whole matrix (no duplication, no loss)
+    assert sum(splan.stats_dict["shard_rows"]) == 16 * bm
+    b = jnp.asarray(np.random.RandomState(0).randn(64, 8).astype(np.float32))
+    plan = spmm.prepare(rows, cols, vals, (16 * bm, 64),
+                        spmm.SpmmConfig(impl="xla"))
+    np.testing.assert_allclose(np.asarray(spmm.execute_sharded(splan, b)),
+                               np.asarray(spmm.execute(plan, b)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@needs8
+def test_empty_windows_balance_padded_rows_in_process(rng):
+    """On a real 8-way mesh: 8 costed + 8 empty windows -> every shard gets
+    one of each (256 padded rows), not one shard with 9 windows."""
+    bm = 128
+    rows = np.concatenate(
+        [np.full(40, w * bm + 3, np.int64) for w in range(0, 16, 2)])
+    cols = np.tile(np.arange(40, dtype=np.int64), 8)
+    vals = np.ones(rows.size, np.float32)
+    splan = spmm.prepare_sharded(rows, cols, vals, (16 * bm, 64),
+                                 make_spmm_mesh(8),
+                                 spmm.SpmmConfig(impl="xla"),
+                                 shard_axis="rows")
+    assert splan.stats_dict["rows_per_shard_padded"] == 2 * bm
+    assert all(r == 2 * bm for r in splan.stats_dict["shard_rows"])
+
+
+# ---------------------------------------------------------------------------
+# shard-axis estimator
+# ---------------------------------------------------------------------------
+def test_window_costs_respect_alpha_override():
+    """A forced split (SpmmConfig.alpha analogue) re-prices windows by the
+    engine that will actually run them."""
+    cm = default_cost_model()
+    rows = np.arange(128, dtype=np.int64).repeat(64)  # one dense-ish window
+    wc_default = window_costs_from_coo(rows, 128, 128, 64, cm)
+    wc_forced = window_costs_from_coo(rows, 128, 128, 64, cm, alpha=1.0)
+    assert wc_default[0] == pytest.approx(cm.cost_matrix(128.0, 64))
+    assert wc_forced[0] == pytest.approx(cm.cost_vector(128.0 * 64))
+
+
+
+def test_window_costs_route_by_alpha_boundary():
+    cm = default_cost_model()
+    # window 0: one nonzero in 128 rows (far below alpha) -> vector cost;
+    # window 1: fully dense -> matrix cost
+    rows = np.concatenate([
+        np.zeros(1, np.int64), 128 + np.arange(128).repeat(256) % 128])
+    wc = window_costs_from_coo(rows, 256, 128, 256, cm)
+    assert wc.shape == (2,)
+    assert wc[0] == pytest.approx(cm.cost_vector(1.0))
+    assert wc[1] == pytest.approx(cm.cost_matrix(128.0, 256))
+
+
+def test_select_shard_axis_prefers_rows_when_balanced():
+    d = select_shard_axis(np.ones(64), 8)
+    assert d.shard_axis == "rows"
+    assert d.rows_imbalance == pytest.approx(1.0)
+
+
+def test_select_shard_axis_falls_to_rhs_on_skew():
+    # one window dominates: LPT cannot balance 8 shards
+    wc = np.ones(8)
+    wc[0] = 100.0
+    d = select_shard_axis(wc, 8)
+    assert d.shard_axis == "rhs"
+    assert d.rows_imbalance > 1.25
+
+
+def test_select_shard_axis_falls_to_rhs_when_too_few_windows():
+    d = select_shard_axis(np.ones(3), 8)
+    assert d.shard_axis == "rhs"
+
+
+def test_select_shard_axis_single_shard_and_empty():
+    assert select_shard_axis(np.ones(4), 1).shard_axis == "rows"
+    assert select_shard_axis(np.zeros(4), 8).shard_axis == "rows"
+
+
+# ---------------------------------------------------------------------------
+# signature / cache identity
+# ---------------------------------------------------------------------------
+def test_sharded_signature_never_aliases_plan_signature(rng):
+    a, rows, cols, vals = _problem(rng)
+    cfg = spmm.SpmmConfig(impl="xla")
+    plan = spmm.prepare(rows, cols, vals, a.shape, cfg)
+    mesh = make_spmm_mesh(1)
+    srows = spmm.prepare_sharded(rows, cols, vals, a.shape, mesh, cfg,
+                                 shard_axis="rows")
+    srhs = spmm.prepare_sharded(rows, cols, vals, a.shape, mesh, cfg,
+                                shard_axis="rhs")
+    sigs = {plan.signature(), srows.signature(), srhs.signature()}
+    assert len(sigs) == 3
+
+
+def test_sharded_executor_traces_once_per_structure(rng):
+    a, rows, cols, vals = _problem(rng)
+    cfg = spmm.SpmmConfig(impl="xla")
+    mesh = make_spmm_mesh(1)
+    splan = spmm.prepare_sharded(rows, cols, vals, a.shape, mesh, cfg,
+                                 shard_axis="rows")
+    b = jnp.asarray(rng.randn(a.shape[1], 24).astype(np.float32))
+    spmm.execute_sharded(splan, b).block_until_ready()
+    before = spmm.sharded_trace_count()
+    spmm.execute_sharded(splan, b).block_until_ready()
+    # re-prepared identical structure reuses the compiled executor
+    splan2 = spmm.prepare_sharded(rows, cols, vals, a.shape, mesh, cfg,
+                                  shard_axis="rows")
+    assert splan2.sig == splan.sig
+    spmm.execute_sharded(splan2, b).block_until_ready()
+    assert spmm.sharded_trace_count() == before
+
+
+# ---------------------------------------------------------------------------
+# multi-device in-process (CI mesh leg) + subprocess parity (everywhere)
+# ---------------------------------------------------------------------------
+@needs8
+@pytest.mark.parametrize("n_shards", [2, 4, 8])
+def test_multi_device_parity_in_process(rng, n_shards):
+    a, rows, cols, vals = _problem(rng, m=1000, k=200, dense_rows=8)
+    cfg = spmm.SpmmConfig(impl="xla")
+    plan = spmm.prepare(rows, cols, vals, a.shape, cfg)
+    b = jnp.asarray(rng.randn(a.shape[1], 32).astype(np.float32))
+    ref = np.asarray(spmm.execute(plan, b))
+    splan = spmm.prepare_sharded(rows, cols, vals, a.shape,
+                                 make_spmm_mesh(n_shards), cfg,
+                                 shard_axis="rows")
+    out = np.asarray(spmm.execute_sharded(splan, b))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+@needs8
+def test_multi_device_empty_shard_in_process(rng):
+    # one 100-row window spread over 2 shards: the second is empty
+    a, rows, cols, vals = _problem(rng, m=100, k=64, dense_rows=2)
+    cfg = spmm.SpmmConfig(impl="xla")
+    plan = spmm.prepare(rows, cols, vals, a.shape, cfg)
+    b = jnp.asarray(rng.randn(64, 16).astype(np.float32))
+    splan = spmm.prepare_sharded(rows, cols, vals, a.shape, make_spmm_mesh(2),
+                                 cfg, shard_axis="rows")
+    assert 0 in splan.stats_dict["shard_rows"]
+    np.testing.assert_allclose(
+        np.asarray(spmm.execute_sharded(splan, b)),
+        np.asarray(spmm.execute(plan, b)), rtol=1e-5, atol=1e-5)
+
+
+@needs8
+def test_rhs_axis_rejects_indivisible_n_in_process(rng):
+    a, rows, cols, vals = _problem(rng)
+    splan = spmm.prepare_sharded(rows, cols, vals, a.shape, make_spmm_mesh(4),
+                                 spmm.SpmmConfig(impl="xla"),
+                                 shard_axis="rhs")
+    with pytest.raises(ValueError, match="divisible"):
+        spmm.execute_sharded(splan, jnp.ones((a.shape[1], 30), jnp.float32))
+
+
+def test_forced_mesh_parity_subprocess(forced_mesh_run):
+    """Full 1/2/4/8-way parity panel in a forced-8-device subprocess (the
+    acceptance-criterion check; runs on single-device hosts too)."""
+    worker = os.path.join(os.path.dirname(__file__),
+                          "_sharded_parity_worker.py")
+    out = forced_mesh_run(worker, n_devices=8)
+    assert "PARITY OK" in out.stdout

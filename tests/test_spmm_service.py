@@ -1,0 +1,159 @@
+"""SpmmService: request batching, bucket padding, plan caching, results."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import spmm
+from repro.launch.mesh import make_spmm_mesh
+from repro.serve import SpmmService
+from conftest import make_sparse
+
+
+def _register(svc, rng, name="g", m=90, k=70):
+    a, rows, cols, vals = make_sparse(rng, m, k, 0.08, n_dense_rows=3)
+    svc.register(name, rows, cols, vals, a.shape)
+    return a
+
+
+def test_flush_returns_correct_results(rng):
+    svc = SpmmService(spmm.SpmmConfig(impl="xla"), max_batch=4)
+    a = _register(svc, rng)
+    panels = [rng.randn(70, 16).astype(np.float32) for _ in range(6)]
+    tickets = [svc.submit("g", p) for p in panels]
+    assert svc.pending("g") == 6
+    assert svc.flush() == 6
+    assert svc.pending() == 0
+    for t, p in zip(tickets, panels):
+        got = np.asarray(svc.fetch(t))
+        np.testing.assert_allclose(got, a @ p, rtol=1e-4, atol=1e-4)
+    with pytest.raises(KeyError):  # fetch pops
+        svc.fetch(tickets[0])
+
+
+def test_bucket_padding_amortizes_traces(rng):
+    """Ragged batch sizes pad up to power-of-two buckets, so flushes with
+    1..max_batch pending requests share at most log2(max_batch)+1 traces."""
+    svc = SpmmService(spmm.SpmmConfig(impl="xla"), max_batch=4)
+    _register(svc, rng)
+    b = rng.randn(70, 8).astype(np.float32)
+    svc.submit("g", b)
+    svc.submit("g", b)
+    svc.submit("g", b)
+    svc.flush()  # 3 requests -> one bucket-4 dispatch, 1 padded slot
+    assert svc.stats.dispatches == 1
+    assert svc.stats.padded_slots == 1
+    before = spmm.fused_trace_count()
+    for _ in range(3):  # any count <= 4 reuses the bucket-4 program
+        svc.submit("g", b)
+    svc.flush()
+    assert spmm.fused_trace_count() == before
+
+
+def test_oversized_queue_splits_into_groups(rng):
+    svc = SpmmService(spmm.SpmmConfig(impl="xla"), max_batch=2)
+    a = _register(svc, rng)
+    panels = [rng.randn(70, 8).astype(np.float32) for _ in range(5)]
+    tickets = [svc.submit("g", p) for p in panels]
+    svc.flush()
+    assert svc.stats.dispatches == 3  # 2 + 2 + 1(padded to 2)
+    for t, p in zip(tickets, panels):
+        np.testing.assert_allclose(np.asarray(svc.fetch(t)), a @ p,
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_mixed_width_requests_flush_correctly(rng):
+    """Panels of different N for one matrix batch per shape group — a mixed
+    stack used to raise mid-drain after dequeue, losing both requests."""
+    svc = SpmmService(spmm.SpmmConfig(impl="xla"), max_batch=4)
+    a = _register(svc, rng)
+    p8 = rng.randn(70, 8).astype(np.float32)
+    p16 = rng.randn(70, 16).astype(np.float32)
+    t8, t16 = svc.submit("g", p8), svc.submit("g", p16)
+    assert svc.flush() == 2
+    np.testing.assert_allclose(np.asarray(svc.fetch(t8)), a @ p8,
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(svc.fetch(t16)), a @ p16,
+                               rtol=1e-4, atol=1e-4)
+    assert svc.stats.dispatches == 2  # one per shape group
+
+
+def test_submit_validates_operand(rng):
+    svc = SpmmService(spmm.SpmmConfig(impl="xla"))
+    _register(svc, rng)
+    with pytest.raises(KeyError):
+        svc.submit("unknown", np.zeros((70, 4), np.float32))
+    with pytest.raises(ValueError, match="must be"):
+        svc.submit("g", np.zeros((71, 4), np.float32))
+
+
+def test_failed_dispatch_keeps_queue_intact(rng):
+    """Requests leave the queue only after a successful dispatch: an
+    execute-time failure must not strand tickets result-less."""
+    svc = SpmmService(spmm.SpmmConfig(impl="xla"), max_batch=4)
+    a = _register(svc, rng)
+    p = rng.randn(70, 8).astype(np.float32)
+    t = svc.submit("g", p)
+    boom = RuntimeError("injected dispatch failure")
+    orig = svc._execute
+    svc._execute = lambda *args: (_ for _ in ()).throw(boom)
+    with pytest.raises(RuntimeError, match="injected"):
+        svc.flush()
+    assert svc.pending("g") == 1  # still queued, not stranded
+    svc._execute = orig
+    svc.flush()
+    np.testing.assert_allclose(np.asarray(svc.fetch(t)), a @ p,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_submit_rejects_indivisible_n_for_rhs_plan(rng):
+    """rhs-sharded divisibility is enforced at submit, while the request is
+    still the caller's problem (a flush-time raise would strand batches)."""
+    svc = SpmmService(spmm.SpmmConfig(impl="xla"), max_batch=4)
+    real = spmm.prepare_sharded(
+        np.array([0], np.int64), np.array([0], np.int64),
+        np.array([1.0], np.float32), (8, 8), make_spmm_mesh(1),
+        spmm.SpmmConfig(impl="xla"), shard_axis="rhs")
+    import dataclasses
+    svc.register_sharded("g", dataclasses.replace(real, n_shards=4))
+    with pytest.raises(ValueError, match="divisible"):
+        svc.submit("g", np.zeros((8, 30), np.float32))
+    svc.submit("g", np.zeros((8, 32), np.float32))  # divisible: accepted
+
+
+def test_reregister_with_pending_requests_rejected(rng):
+    svc = SpmmService(spmm.SpmmConfig(impl="xla"))
+    a = _register(svc, rng)
+    svc.submit("g", rng.randn(70, 8).astype(np.float32))
+    with pytest.raises(ValueError, match="pending"):
+        _register(svc, rng, m=50, k=40)
+
+
+def test_non_pow2_max_batch_rounds_up(rng):
+    """The log2(max_batch)+1 trace bound requires pow2 buckets; a non-pow2
+    cap would add itself as an extra compiled batch size."""
+    svc = SpmmService(spmm.SpmmConfig(impl="xla"), max_batch=6)
+    assert svc.max_batch == 8
+    a = _register(svc, rng)
+    b = rng.randn(70, 8).astype(np.float32)
+    ts = [svc.submit("g", b) for _ in range(6)]
+    svc.flush()  # 6 requests pad to one bucket-8 dispatch
+    assert svc.stats.dispatches == 1
+    assert svc.stats.padded_slots == 2
+    for t in ts:
+        np.testing.assert_allclose(np.asarray(svc.fetch(t)), a @ b,
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_sharded_plan_backend(rng):
+    """The same service front drains through a multi-device plan."""
+    a, rows, cols, vals = make_sparse(rng, 90, 70, 0.08, n_dense_rows=3)
+    cfg = spmm.SpmmConfig(impl="xla")
+    splan = spmm.prepare_sharded(rows, cols, vals, a.shape, make_spmm_mesh(1),
+                                 cfg, shard_axis="rows")
+    svc = SpmmService(cfg, max_batch=2)
+    svc.register_sharded("g", splan)
+    p = rng.randn(70, 12).astype(np.float32)
+    t = svc.submit("g", p)
+    svc.flush()
+    np.testing.assert_allclose(np.asarray(svc.fetch(t)), a @ p,
+                               rtol=1e-4, atol=1e-4)
