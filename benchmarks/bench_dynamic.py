@@ -1,0 +1,105 @@
+"""Dynamic-sparsity benchmarks: update throughput + amortized prepare.
+
+Three rows per dataset:
+- ``dynamic_value_update``  — one retrace-free ``update_values`` of ~1% of
+  the nonzeros plus the following ``execute`` (the serving-cycle cost of a
+  weight refresh);
+- ``dynamic_struct_update`` — one structural mutation batch through the
+  ``DynamicPlan`` sidecar plus ``execute``;
+- ``full_reprepare``        — the cost the subsystem replaces: a full
+  ``prepare`` plus ``execute`` for the same mutation.
+
+``derived`` reports the amortization ratio (full re-prepare cycle time /
+incremental cycle time) — the figure of merit for serving evolving graphs.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spmm
+from repro.dynamic import DynamicPlan, GraphDelta, update_values
+from .common import emit, load_dataset
+
+DATASETS = ["cora", "ogbn-arxiv", "reddit"]
+N = 64
+
+
+def _best_of(fn, repeats=3, warmup=1):
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def run(max_dim: int = 1024) -> None:
+    rng = np.random.RandomState(0)
+    for name in DATASETS:
+        rows, cols, vals, shape = load_dataset(name, max_dim=max_dim)
+        cfg = spmm.SpmmConfig(impl="xla")
+        b = jnp.asarray(rng.randn(shape[1], N).astype(np.float32))
+        nnz = rows.size
+        d = max(1, nnz // 100)
+        idx = rng.choice(nnz, d, replace=False)
+
+        plan = spmm.prepare(rows, cols, vals, shape, cfg)
+        jax.block_until_ready(spmm.execute(plan, b))
+
+        state = {"plan": plan}
+
+        def value_cycle():
+            state["plan"] = update_values(
+                state["plan"], idx, rng.randn(d)
+            )
+            jax.block_until_ready(spmm.execute(state["plan"], b))
+
+        us_value = _best_of(value_cycle)
+
+        def reprepare_cycle():
+            v2 = vals.copy()
+            v2[idx] = rng.randn(d)
+            p = spmm.prepare(rows, cols, v2, shape, cfg)
+            jax.block_until_ready(spmm.execute(p, b))
+
+        us_full = _best_of(reprepare_cycle)
+
+        # structural: insert a fresh batch of absent edges each cycle (the
+        # sidecar grows, which is exactly the serving behavior to price)
+        dp = DynamicPlan(plan, auto_compact=False)
+        jax.block_until_ready(dp.execute(b))
+        taken = set(zip(rows.tolist(), cols.tolist()))
+
+        def fresh_edges(n):
+            out = []
+            while len(out) < n:
+                r = int(rng.randint(shape[0]))
+                c = int(rng.randint(shape[1]))
+                if (r, c) not in taken:
+                    taken.add((r, c))
+                    out.append((r, c))
+            rr, cc = map(np.asarray, zip(*out))
+            return rr, cc
+
+        def struct_cycle():
+            rr, cc = fresh_edges(d)
+            dp.update(GraphDelta.inserts(rr, cc, rng.randn(d)))
+            jax.block_until_ready(dp.execute(b))
+
+        us_struct = _best_of(struct_cycle)
+
+        emit(f"dynamic_value_update/{name}", us_value,
+             f"amortization={us_full / us_value:.1f}x nnz={nnz} delta={d}")
+        emit(f"dynamic_struct_update/{name}", us_struct,
+             f"amortization={us_full / us_struct:.1f}x "
+             f"delta_nnz={dp.delta_nnz}")
+        emit(f"full_reprepare/{name}", us_full, f"nnz={nnz}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -20,6 +20,7 @@ SUITES = [
     "bench_roofline",       # EXPERIMENTS.md §Roofline feed
     "bench_fused",          # fused single-dispatch executor vs two-dispatch
     "bench_sharded",        # multi-device sharded executor scaling
+    "bench_dynamic",        # dynamic updates vs full re-prepare
 ]
 
 

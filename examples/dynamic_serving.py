@@ -1,0 +1,73 @@
+"""Dynamic serving walkthrough: a mutation stream over a live SpmmService.
+
+Drives ``SpmmService.update_matrix`` with a ``data.graphs.mutate`` edge
+stream — weight refreshes ride the retrace-free value fast path, edge
+inserts/deletes accumulate in the delta sidecar until the cost model folds
+them in — and shows the persistent plan registry warm-starting a "restarted"
+service without re-running ``prepare()``.
+
+    PYTHONPATH=src python examples/dynamic_serving.py
+"""
+import tempfile
+
+import numpy as np
+
+from repro.core import SpmmConfig
+from repro.core.spmm import fused_trace_count, prepare_call_count
+from repro.data import graphs
+from repro.dynamic import PlanRegistry
+from repro.serve import SpmmService
+
+
+def main():
+    spec = graphs.PAPER_DATASETS["ogbn-arxiv"]
+    rows, cols, vals = graphs.generate(spec)
+    shape = (spec.m, spec.k)
+    rng = np.random.RandomState(0)
+
+    with tempfile.TemporaryDirectory() as root:
+        registry = PlanRegistry(root)
+        svc = SpmmService(SpmmConfig(impl="xla"), max_batch=4,
+                          registry=registry)
+        svc.register("graph", rows, cols, vals, shape)  # prepares + persists
+        print(f"registered: nnz={rows.size}, registry={registry.names()}")
+
+        # serve a few panels, mutating the graph between flushes
+        b = rng.randn(shape[1], 64).astype(np.float32)
+        traces0 = fused_trace_count()
+        stream = graphs.mutate(rows, cols, vals, shape, steps=5,
+                               insert_frac=0.01, delete_frac=0.01,
+                               update_frac=0.05, seed=1)
+        for step, delta in enumerate(stream):
+            stats = svc.update_matrix("graph", delta)
+            ticket = svc.submit("graph", b)
+            svc.flush(name="graph")
+            out = svc.fetch(ticket)
+            dplan = svc.plan("graph")
+            print(f"step {step}: +{delta.ins_rows.size} edges "
+                  f"-{delta.del_rows.size} edges "
+                  f"~{delta.upd_rows.size} weights | "
+                  f"fast-path={stats['fast_path']} "
+                  f"sidecar={dplan.delta_nnz} "
+                  f"compacted={stats['compacted']} | "
+                  f"C[0,0]={float(out[0, 0]):+.3f}")
+        print(f"executor traces added by 5 mutation steps: "
+              f"{fused_trace_count() - traces0} (sidecar capacity "
+              "doublings only — weight refreshes never recompile)")
+
+        # "restart": a fresh service warm-starts from disk — zero prepares
+        svc2 = SpmmService(SpmmConfig(impl="xla"), max_batch=4,
+                           registry=registry)
+        prepares = prepare_call_count()
+        svc2.warm_start("graph")
+        ticket = svc2.submit("graph", b)
+        svc2.flush()
+        out2 = svc2.fetch(ticket)
+        print(f"warm start: prepare() calls during restore: "
+              f"{prepare_call_count() - prepares}, "
+              f"C[0,0]={float(out2[0, 0]):+.3f} (matches the mutated "
+              "matrix, served immediately)")
+
+
+if __name__ == "__main__":
+    main()

@@ -238,6 +238,69 @@ def select_shard_axis(
     )
 
 
+# --- dynamic-delta compaction policy ----------------------------------------
+# Structural mutations accumulate in a COO sidecar executed on the vector
+# path (dynamic/delta.py).  That is the right home for a *small* delta — the
+# fringe kernel's cost is proportional to NNZ and the base plan stays intact
+# — but the sidecar is unordered/unreordered work, so once it grows past a
+# fraction of the base matrix (or its predicted vector-path cost starts to
+# dominate the plan's own execution) folding it into a fresh prepare() wins
+# back the coordinated split.  The same engine rates that price the
+# matrix/vector split price this trigger.
+DELTA_MAX_FRACTION = 0.25   # delta nnz / base nnz before a forced fold
+DELTA_MAX_SLOWDOWN = 1.25   # predicted (base+delta)/base exec cost ratio
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionDecision:
+    compact: bool
+    delta_fraction: float   # delta nnz / base nnz
+    est_slowdown: float     # predicted exec-cost ratio with the sidecar
+    reason: str
+
+
+def should_compact(
+    cm: EngineCostModel,
+    *,
+    base_nnz: int,
+    delta_nnz: int,
+    core_rows: int,
+    fringe_nnz: int,
+    k: int,
+    max_delta_fraction: float = DELTA_MAX_FRACTION,
+    max_slowdown: float = DELTA_MAX_SLOWDOWN,
+) -> CompactionDecision:
+    """Decide whether a delta sidecar should fold into a fresh plan.
+
+    ``core_rows`` is the matrix-path packed row count (num_windows * bm) and
+    ``fringe_nnz`` the base plan's vector-path nonzeros; together they give
+    the cost-model estimate of the base execution the sidecar rides on.
+    """
+    fraction = delta_nnz / max(base_nnz, 1)
+    base_cost = cm.cost_matrix(core_rows, k) + cm.cost_vector(fringe_nnz)
+    slowdown = (
+        (base_cost + cm.cost_vector(delta_nnz)) / base_cost
+        if base_cost > 0 else float("inf")
+    )
+    if delta_nnz == 0:
+        return CompactionDecision(False, 0.0, 1.0, "empty delta")
+    if fraction > max_delta_fraction:
+        return CompactionDecision(
+            True, fraction, slowdown,
+            f"delta nnz fraction {fraction:.3f} > {max_delta_fraction:.2f}",
+        )
+    if slowdown > max_slowdown:
+        return CompactionDecision(
+            True, fraction, slowdown,
+            f"predicted fringe-path slowdown {slowdown:.2f} > "
+            f"{max_slowdown:.2f}",
+        )
+    return CompactionDecision(
+        False, fraction, slowdown,
+        f"delta within budget ({fraction:.3f}, {slowdown:.2f})",
+    )
+
+
 def select_fringe_tier(
     k: int, num_rows: int, bn: int, vmem_budget: Optional[int] = None
 ) -> tuple:

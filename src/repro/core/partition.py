@@ -43,6 +43,13 @@ class PartitionResult:
     row_threshold: float
     col_threshold: float
 
+    # provenance: position of each core/fringe triplet in the caller's input
+    # arrays (parallel to core_*/fringe_*).  The dynamic-update subsystem
+    # inverts these into COO->slot maps at prepare() time; None when the
+    # split came from a migration that did not carry indices.
+    core_idx: Optional[np.ndarray] = None
+    fringe_idx: Optional[np.ndarray] = None
+
     @property
     def core_nnz(self) -> int:
         return int(self.core_rows.shape[0])
@@ -79,6 +86,7 @@ def partition_rows_cols(
     rows = np.asarray(rows, np.int64)
     cols = np.asarray(cols, np.int64)
     vals = np.asarray(vals)
+    idx = np.arange(rows.shape[0], dtype=np.int64)
     a = cost_model.alpha if alpha is None else float(alpha)
 
     # --- stage 1: row extraction (Eq. 4/5) ---
@@ -90,10 +98,12 @@ def partition_rows_cols(
     f_rows = [rows[nz_sparse_row]]
     f_cols = [cols[nz_sparse_row]]
     f_vals = [vals[nz_sparse_row]]
+    f_idx = [idx[nz_sparse_row]]
 
     d_rows = rows[~nz_sparse_row]
     d_cols = cols[~nz_sparse_row]
     d_vals = vals[~nz_sparse_row]
+    d_idx = idx[~nz_sparse_row]
 
     # --- stage 2: column extraction within the dense rows ---
     col_thres = 0.0
@@ -106,15 +116,18 @@ def partition_rows_cols(
         f_rows.append(d_rows[nz_sparse_col])
         f_cols.append(d_cols[nz_sparse_col])
         f_vals.append(d_vals[nz_sparse_col])
+        f_idx.append(d_idx[nz_sparse_col])
         d_rows = d_rows[~nz_sparse_col]
         d_cols = d_cols[~nz_sparse_col]
         d_vals = d_vals[~nz_sparse_col]
+        d_idx = d_idx[~nz_sparse_col]
 
     fringe_rows = np.concatenate(f_rows) if f_rows else np.zeros(0, np.int64)
     fringe_cols = np.concatenate(f_cols) if f_cols else np.zeros(0, np.int64)
     fringe_vals = (
         np.concatenate(f_vals) if f_vals else np.zeros(0, vals.dtype)
     )
+    fringe_idx = np.concatenate(f_idx) if f_idx else np.zeros(0, np.int64)
 
     core_row_ids = (
         np.flatnonzero(np.bincount(d_rows, minlength=m))
@@ -133,6 +146,8 @@ def partition_rows_cols(
         alpha=a,
         row_threshold=float(row_thres),
         col_threshold=float(col_thres),
+        core_idx=d_idx,
+        fringe_idx=fringe_idx,
     )
 
 
@@ -146,6 +161,7 @@ def migrate_core_to_fringe(
     (paper §5.3: decompose sparse tiles back into index-value lists).
     """
     move = np.isin(row_window[part.core_rows], window_ids)
+    has_idx = part.core_idx is not None and part.fringe_idx is not None
     return dataclasses.replace(
         part,
         core_rows=part.core_rows[~move],
@@ -155,6 +171,11 @@ def migrate_core_to_fringe(
         fringe_rows=np.concatenate([part.fringe_rows, part.core_rows[move]]),
         fringe_cols=np.concatenate([part.fringe_cols, part.core_cols[move]]),
         fringe_vals=np.concatenate([part.fringe_vals, part.core_vals[move]]),
+        core_idx=part.core_idx[~move] if has_idx else None,
+        fringe_idx=(
+            np.concatenate([part.fringe_idx, part.core_idx[move]])
+            if has_idx else None
+        ),
     )
 
 
@@ -163,6 +184,7 @@ def migrate_fringe_to_core(part: PartitionResult, row_ids: np.ndarray) -> Partit
     (paper §5.3: merge denser rows/segments into matrix tiles)."""
     move = np.isin(part.fringe_rows, row_ids)
     new_core_rows = np.concatenate([part.core_rows, part.fringe_rows[move]])
+    has_idx = part.core_idx is not None and part.fringe_idx is not None
     return dataclasses.replace(
         part,
         core_rows=new_core_rows,
@@ -172,4 +194,9 @@ def migrate_fringe_to_core(part: PartitionResult, row_ids: np.ndarray) -> Partit
         fringe_rows=part.fringe_rows[~move],
         fringe_cols=part.fringe_cols[~move],
         fringe_vals=part.fringe_vals[~move],
+        core_idx=(
+            np.concatenate([part.core_idx, part.fringe_idx[move]])
+            if has_idx else None
+        ),
+        fringe_idx=part.fringe_idx[~move] if has_idx else None,
     )

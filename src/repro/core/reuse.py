@@ -108,6 +108,51 @@ class ReusePlan:
         return self.est_b_blocks_naive / max(self.est_b_blocks_loaded, 1)
 
 
+def _capacity_boundaries(
+    oc: np.ndarray,
+    entry_window: np.ndarray,
+    entry_starts: np.ndarray,
+    blocks_flat: np.ndarray,
+    cap: int,
+) -> np.ndarray:
+    """Segment boundaries under a distinct-B working-set bound.
+
+    Greedy maximal segments: each boundary starts where extending the
+    current segment by one more window would push its distinct-block count
+    past ``cap`` (or the cluster changes).  Loops once per *segment* —
+    within one, the distinct-count scan is a vectorized first-occurrence
+    cumsum, so the cost is O(segments * segment-entries), not
+    O(windows * blocks) of interpreted set algebra.
+    """
+    nw = oc.shape[0]
+    cluster_bounds = np.flatnonzero(
+        np.concatenate([[True], oc[1:] != oc[:-1]])
+    ).tolist() + [nw]
+    boundaries = []
+    for ci in range(len(cluster_bounds) - 1):
+        cs, ce = cluster_bounds[ci], cluster_bounds[ci + 1]
+        start = cs
+        while start < ce:
+            boundaries.append(start)
+            lo, hi = entry_starts[start], entry_starts[ce]
+            seg_blocks = blocks_flat[lo:hi]
+            if seg_blocks.size == 0:  # all-empty windows: one segment
+                break
+            # distinct-count after each window of the candidate segment
+            first = np.zeros(seg_blocks.size, np.int64)
+            first[np.unique(seg_blocks, return_index=True)[1]] = 1
+            cum = np.cumsum(first)
+            # count at window w = cum at that window's last entry (windows
+            # with no entries inherit the previous count)
+            ends = entry_starts[start + 1:ce + 1] - lo
+            counts = np.concatenate([[0], cum])[ends]
+            fits = np.flatnonzero(counts <= cap)
+            # always include the segment's first window, even alone > cap
+            nxt = start + (int(fits[-1]) + 1 if fits.size else 1)
+            start = max(nxt, start + 1)
+    return np.asarray(sorted(set(boundaries)), np.int64)
+
+
 def plan_window_order(
     block_cols: np.ndarray,
     num_blocks: np.ndarray,
@@ -120,51 +165,64 @@ def plan_window_order(
 
     ``capacity_blocks`` bounds the distinct-B working set per cluster
     (paper: <=80% of L2); clusters exceeding it are split into chunks.
+
+    Runs as numpy segment ops end to end — no per-window python sets.  The
+    old interpreted scan was O(windows * blocks) on every ``prepare``,
+    which the dynamic-delta compaction path now re-enters repeatedly.
     """
     nw = block_cols.shape[0]
     if nw == 0:
         return ReusePlan(np.zeros(0, np.int64), 0, 0, 0)
+    num_blocks = np.asarray(num_blocks, np.int64)
+    cluster_of_window = np.asarray(cluster_of_window)
     lead = np.where(num_blocks > 0, block_cols[:, 0], -1)
     order = np.lexsort((lead, cluster_of_window))
 
+    # flatten every window's block list in scan order: entry e belongs to
+    # scan position entry_window[e] and names B block blocks_flat[e]
+    oc = cluster_of_window[order]
+    ob_counts = num_blocks[order]
+    total = int(ob_counts.sum())
+    entry_starts = np.concatenate([[0], np.cumsum(ob_counts)])
+    entry_window = np.repeat(np.arange(nw), ob_counts)
+    col_idx = np.arange(total) - np.repeat(
+        entry_starts[:-1], ob_counts
+    )
+    blocks_flat = block_cols[order[entry_window], col_idx]
+
     # segment the scan order: cluster boundaries, plus capacity splits
-    boundaries = {0}
     if capacity_blocks is not None:
         cap = max(1, int(capacity_blocks * capacity_frac))
-        seen: set = set()
-        prev_cluster = cluster_of_window[order[0]]
-        for i, w in enumerate(order):
-            blocks = set(block_cols[w, : num_blocks[w]].tolist())
-            if cluster_of_window[w] != prev_cluster or len(seen | blocks) > cap:
-                boundaries.add(i)
-                seen = set()
-                prev_cluster = cluster_of_window[w]
-            seen |= blocks
+        boundaries = _capacity_boundaries(
+            oc, entry_window, entry_starts, blocks_flat, cap
+        )
     else:
-        for i in range(1, nw):
-            if cluster_of_window[order[i]] != cluster_of_window[order[i - 1]]:
-                boundaries.add(i)
+        boundaries = np.flatnonzero(
+            np.concatenate([[True], oc[1:] != oc[:-1]])
+        )
+    is_boundary = np.zeros(nw, bool)
+    is_boundary[boundaries] = True
 
-    # estimate copy-elision efficiency: a B block is loaded when the slot-0
-    # block id changes between consecutive grid steps of the scan order;
-    # residency (and elision) resets at every segment boundary
+    # copy elision: window i's leading block load is elided iff it equals
+    # the previous window's lead (−1 for an empty window — never matches)
+    # and i does not start a segment
+    ol = lead[order]
+    prev_lead = np.concatenate([[-1], ol[:-1]])
+    elided = int(np.count_nonzero(
+        (~is_boundary) & (ob_counts > 0) & (ol == prev_lead)
+    ))
     naive = int(num_blocks.sum())
-    loaded = 0
+    loaded = naive - elided
+
+    # working set: max distinct blocks touched by any segment — unique
+    # (segment, block) pairs bucket-counted per segment
     ws = 0
-    cur_ws: set = set()
-    prev_lead = -1
-    for i, w in enumerate(order):
-        if i in boundaries:
-            ws = max(ws, len(cur_ws))
-            cur_ws = set()
-            prev_lead = -1
-        blocks = block_cols[w, : num_blocks[w]].tolist()
-        cur_ws.update(blocks)
-        for j, b in enumerate(blocks):
-            if not (j == 0 and b == prev_lead):
-                loaded += 1
-        prev_lead = blocks[0] if blocks else -1
-    ws = max(ws, len(cur_ws))
+    if total:
+        seg_of_pos = np.cumsum(is_boundary) - 1
+        seg_of_entry = seg_of_pos[entry_window]
+        span = int(blocks_flat.max()) + 1
+        pairs = np.unique(seg_of_entry * span + blocks_flat)
+        ws = int(np.bincount(pairs // span).max())
     return ReusePlan(
         window_order=order.astype(np.int64),
         est_b_blocks_loaded=loaded,

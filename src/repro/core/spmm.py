@@ -19,6 +19,12 @@ devices, each shard runs the fused body on its own padded sub-plan under
 — assembly is a gather over the all-gathered packed rows, never a
 scatter-add.  ``NeutronSpMM`` wraps an adaptive epoch loop with runtime
 migration.
+
+Dynamic sparsity: every prepared plan carries host-side COO->slot inverse
+maps (``UpdateMaps``) that let ``dynamic.delta.update_values`` patch values
+in the device-resident arrays without re-preparing or retracing, and
+``execute_with_delta`` extends the fused gather merge with a structural
+delta sidecar (``dynamic.delta.DeltaFringe``) — see ``src/repro/dynamic``.
 """
 from __future__ import annotations
 
@@ -47,6 +53,26 @@ from .cost_model import (
 )
 
 
+# Plan-format version: the leading element of every plan signature.  Bump it
+# whenever the static plan layout changes (leaf set, bucketing scheme, merge
+# semantics) so (a) executor caches never alias plans built by different
+# layouts within one process, and (b) the persistent plan registry
+# (dynamic/registry.py) can refuse plans serialized under an older layout
+# instead of misinterpreting their arrays.
+PLAN_FORMAT_VERSION = 1
+
+_PREPARE_CALL_COUNT = 0  # incremented per prepare() call (test hook)
+
+
+def prepare_call_count() -> int:
+    """Number of ``prepare()`` calls since process start.
+
+    Test hook for the warm-start guarantees: a service restoring plans from
+    the on-disk registry must serve without re-running preprocessing.
+    """
+    return _PREPARE_CALL_COUNT
+
+
 @dataclasses.dataclass(frozen=True)
 class SpmmConfig:
     bm: int = 128
@@ -63,6 +89,93 @@ class SpmmConfig:
     fringe_chunk: Optional[int] = None     # nonzeros per fringe grid step
     fringe_vmem_budget: Optional[int] = None  # override dispatch-tier budget
     seed: int = 0
+
+
+PATH_CORE = 0
+PATH_FRINGE = 1
+
+
+@dataclasses.dataclass
+class UpdateMaps:
+    """Host-side COO->slot inverse maps, built once at ``prepare()`` time.
+
+    For every input nonzero ``j`` the maps record which device-resident plan
+    slot its value landed in, so the dynamic-update subsystem
+    (``dynamic.delta.update_values``) can scatter new values directly into
+    the prepared arrays — no re-prepare, no retrace.  ``vals`` tracks the
+    *current* value of each nonzero (updates advance it), which the
+    structural-delta layer also uses to negate deleted base entries.
+    """
+
+    shape: Tuple[int, int]
+    rows: np.ndarray             # (nnz,) int64 original COO rows
+    cols: np.ndarray             # (nnz,) int64 original COO cols
+    vals: np.ndarray             # (nnz,) current values (input dtype)
+    path: np.ndarray             # (nnz,) int8 PATH_CORE | PATH_FRINGE
+    core_lin: np.ndarray         # (nnz,) int64 flat slot in flat_values, -1
+    fringe_pos: np.ndarray       # (nnz,) int64 packed fringe slot, -1
+    kb_pos: np.ndarray           # (nnz,) int64 k-bucketed stream slot, -1
+    # slot->contributors CSR (duplicates accumulate into one tile cell, so a
+    # touched slot is recomputed from every contributor in input order — the
+    # same sequential fp32 accumulation prepare() performs, hence updated
+    # plans stay bit-identical to a fresh prepare)
+    core_lin_sorted: np.ndarray     # core slots sorted
+    core_members_sorted: np.ndarray  # nnz ids sorted by (slot, input order)
+    # (row, col) -> nnz id lookup (first occurrence wins for duplicates)
+    key_sorted: np.ndarray
+    key_order: np.ndarray
+
+    @property
+    def nnz(self) -> int:
+        return int(self.rows.shape[0])
+
+    def lookup(self, rows: np.ndarray, cols: np.ndarray) -> np.ndarray:
+        """nnz ids of the given (row, col) pairs; -1 where absent."""
+        keys = np.asarray(rows, np.int64) * self.shape[1] + np.asarray(
+            cols, np.int64
+        )
+        pos = np.searchsorted(self.key_sorted, keys)
+        pos = np.minimum(pos, max(self.key_sorted.size - 1, 0))
+        if self.key_sorted.size == 0:
+            return np.full(keys.shape, -1, np.int64)
+        found = self.key_sorted[pos] == keys
+        return np.where(found, self.key_order[pos], -1)
+
+
+@dataclasses.dataclass
+class ShardedUpdateMaps:
+    """COO->slot inverse maps for a rows-sharded plan.
+
+    Global nonzero ``j`` lives in shard ``shard_of_nnz[j]`` at position
+    ``local_of_nnz[j]`` of that shard's input arrays; ``shard_maps[s]`` are
+    the shard-local :class:`UpdateMaps` into the (prefix-preserving padded)
+    stacked leaves.  The global ``rows/cols/vals`` mirror serves the
+    structural-delta layer and compaction.
+    """
+
+    shape: Tuple[int, int]
+    rows: np.ndarray
+    cols: np.ndarray
+    vals: np.ndarray
+    shard_of_nnz: np.ndarray
+    local_of_nnz: np.ndarray
+    shard_maps: Tuple[UpdateMaps, ...]
+    key_sorted: np.ndarray
+    key_order: np.ndarray
+
+    @property
+    def nnz(self) -> int:
+        return int(self.rows.shape[0])
+
+    lookup = UpdateMaps.lookup
+
+
+def _build_key_index(
+    rows: np.ndarray, cols: np.ndarray, k: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    key = rows.astype(np.int64) * k + cols
+    order = np.argsort(key, kind="stable")
+    return key[order], order
 
 
 @jax.tree_util.register_pytree_node_class
@@ -99,6 +212,11 @@ class NeutronPlan:
     # budget (cost_model.select_fringe_tier): "resident" | "ksharded" | "xla"
     fringe_tier: str = "resident"
     fringe_bk: int = 0           # k-block size of the ksharded tier (0 else)
+    # host-side COO->slot inverse maps for dynamic value updates.  Not a
+    # pytree leaf and not aux data (numpy payloads are unhashable): a plan
+    # round-tripped through tree operations comes back with maps=None and
+    # simply loses updatability, never correctness.
+    update_maps: Optional[UpdateMaps] = None
 
     def tree_flatten(self):
         leaves = (
@@ -139,10 +257,13 @@ class NeutronPlan:
 
         Includes the vector-path dispatch tier and its k-block size: two
         plans differing only in tier (e.g. from different VMEM budgets)
-        must not alias one cached executor.
+        must not alias one cached executor.  The leading element is
+        ``PLAN_FORMAT_VERSION`` so executors (and the persistent registry,
+        which keys entries by signature) never cross plan-layout versions.
         """
         cfg = self.config
         return (
+            PLAN_FORMAT_VERSION,
             self.shape, cfg.bm, cfg.bk, cfg.bn, cfg.impl, cfg.reorder_cols,
             cfg.fringe_chunk, self.num_windows,
             int(self.step_window.shape[0]), int(self.fringe_rows.shape[0]),
@@ -197,14 +318,17 @@ def _validate_coo(
 def _bucket_fringe_kblocks(
     pr: np.ndarray, pc: np.ndarray, pv: np.ndarray,
     k_pad: int, fringe_bk: int, chunk_eff: int,
-) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Relayout packed fringe COO for the K-sharded streaming kernel.
 
     Nonzeros sorted by (k-block, row, col), per-bucket padded to a chunk
     multiple with zero-value entries, columns made k-block-local; empty
     k-blocks get no chunks (their B slices are never fetched).  Shared by
     ``prepare`` and ``prepare_sharded`` (which re-buckets every shard with
-    one mesh-wide bk so all shards run the same kernel).
+    one mesh-wide bk so all shards run the same kernel).  The trailing
+    return is ``pos_of_packed``: the bucketed-stream slot of each packed
+    fringe entry, inverted into the plan's COO->slot update maps so dynamic
+    value updates can patch the bucketed stream in place.
     """
     nkb_f = (k_pad + fringe_bk - 1) // fringe_bk
     kb = pc.astype(np.int64) // fringe_bk
@@ -225,7 +349,49 @@ def _bucket_fringe_kblocks(
     kb_chunk = np.repeat(
         np.arange(nkb_f, dtype=np.int32), padded // chunk_eff
     )
-    return kb_chunk, kb_rows, kb_cols, kb_vals
+    pos_of_packed = np.empty(kbs.size, np.int64)
+    pos_of_packed[order_kb] = dest
+    return kb_chunk, kb_rows, kb_cols, kb_vals, pos_of_packed
+
+
+def _build_update_maps(
+    rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+    shape: Tuple[int, int], part, core_lin: np.ndarray,
+    fringe_pos: np.ndarray, kb_pos_of_packed: Optional[np.ndarray],
+) -> UpdateMaps:
+    """Invert prepare()'s packing into per-nonzero COO->slot maps."""
+    nnz = rows.shape[0]
+    path = np.full(nnz, PATH_FRINGE, np.int8)
+    core_lin_of = np.full(nnz, -1, np.int64)
+    fringe_pos_of = np.full(nnz, -1, np.int64)
+    kb_pos_of = np.full(nnz, -1, np.int64)
+    core_idx = (
+        part.core_idx if part.core_idx is not None
+        else np.zeros(0, np.int64)
+    )
+    fringe_idx = (
+        part.fringe_idx if part.fringe_idx is not None
+        else np.zeros(0, np.int64)
+    )
+    if core_idx.size:
+        path[core_idx] = PATH_CORE
+        core_lin_of[core_idx] = core_lin
+    if fringe_idx.size:
+        fringe_pos_of[fringe_idx] = fringe_pos
+        if kb_pos_of_packed is not None:
+            kb_pos_of[fringe_idx] = kb_pos_of_packed[fringe_pos]
+    # stable sort keeps input order within a slot — the accumulation order
+    # np.add.at used when the slot was first written
+    cm_order = np.argsort(core_lin, kind="stable")
+    key_sorted, key_order = _build_key_index(rows, cols, shape[1])
+    return UpdateMaps(
+        shape=tuple(shape), rows=rows, cols=cols, vals=vals.copy(),
+        path=path, core_lin=core_lin_of, fringe_pos=fringe_pos_of,
+        kb_pos=kb_pos_of,
+        core_lin_sorted=core_lin[cm_order],
+        core_members_sorted=core_idx[cm_order],
+        key_sorted=key_sorted, key_order=key_order,
+    )
 
 
 def prepare(
@@ -239,6 +405,8 @@ def prepare(
     """Host-side preprocessing (one-time; amortized across epochs)."""
     m, k = shape
     rows, cols, vals = _validate_coo(rows, cols, vals, shape)
+    global _PREPARE_CALL_COUNT
+    _PREPARE_CALL_COUNT += 1
     cm = cost_model or default_cost_model(n_cols=config.bn)
     t0 = time.perf_counter()
 
@@ -325,10 +493,12 @@ def prepare(
         flat = np.zeros(total * config.bm * config.bk, np.float32)
         np.add.at(flat, lin, part.core_vals.astype(np.float32))
         flat_values = flat.reshape(total, config.bm, config.bk)
+        core_lin = lin
     else:  # degenerate all-fringe matrix: one zero tile keeps shapes static
         step_window = np.zeros(1, np.int32)
         step_col = np.zeros(1, np.int32)
         flat_values = np.zeros((1, config.bm, config.bk), np.float32)
+        core_lin = np.zeros(0, np.int64)
 
     # map packed core rows -> original ids
     core_row_map = np.full(nw * config.bm, -1, np.int64)
@@ -349,11 +519,14 @@ def prepare(
         # kernels accumulate in fp32; int/f64 input values are cast once
         # here instead of per-dispatch (and jnp would silently keep ints)
         pv = f_vals[order].astype(np.float32)
+        fringe_pos = np.empty(order.size, np.int64)
+        fringe_pos[order] = np.arange(order.size)  # fringe entry -> slot
     else:
         fringe_row_ids = np.zeros(1, np.int64)
         pr = np.zeros(1, np.int32)
         pc = np.zeros(1, np.int32)
         pv = np.zeros(1, np.float32)
+        fringe_pos = np.zeros(0, np.int64)
 
     # 4b) vector-path dispatch tier: a VMEM-budget estimate picks the fringe
     # kernel (resident single-panel / K-sharded streaming / XLA fallback) so
@@ -372,14 +545,15 @@ def prepare(
     # plans skip the bucketing sort/scatter passes (tier is still recorded)
     if fringe_tier == "ksharded" and f_rows.size and config.impl != "xla":
         chunk_eff = ops.effective_chunk(config.fringe_chunk)
-        kb_chunk, kb_rows, kb_cols, kb_vals = _bucket_fringe_kblocks(
-            pr, pc, pv, k_pad, fringe_bk, chunk_eff
+        kb_chunk, kb_rows, kb_cols, kb_vals, kb_pos_of_packed = (
+            _bucket_fringe_kblocks(pr, pc, pv, k_pad, fringe_bk, chunk_eff)
         )
     else:
         kb_chunk = np.zeros(1, np.int32)
         kb_rows = np.zeros(1, np.int32)
         kb_cols = np.zeros(1, np.int32)
         kb_vals = np.zeros(1, np.float32)
+        kb_pos_of_packed = None
 
     # inverse row maps for the scatter-free merge: C's row r gathers from
     # packed matrix row gather_src_matrix[r] and/or packed fringe row
@@ -392,6 +566,10 @@ def prepare(
         gather_src_vector[fringe_row_ids] = np.arange(
             fringe_row_ids.size, dtype=np.int32
         )
+    update_maps = _build_update_maps(
+        rows, cols, vals, shape, part, core_lin, fringe_pos,
+        kb_pos_of_packed,
+    )
     t_pack = time.perf_counter() - t0
     stats = (
         ("alpha", float(part.alpha)),
@@ -431,6 +609,7 @@ def prepare(
         stats=stats,
         fringe_tier=fringe_tier,
         fringe_bk=int(fringe_bk),
+        update_maps=update_maps,
     )
 
 
@@ -516,8 +695,8 @@ def _fused_run(sig: Tuple):
     sharded executor all wrap this one function, so every dispatch flavor
     runs identical math.
     """
-    (shape, bm, bk, bn, impl, reorder_cols, fringe_chunk, num_windows,
-     _num_steps, _nnz_f, n_fringe_rows, has_core, has_fringe,
+    (_version, shape, bm, bk, bn, impl, reorder_cols, fringe_chunk,
+     num_windows, _num_steps, _nnz_f, n_fringe_rows, has_core, has_fringe,
      fringe_tier, fringe_bk, _n_chunks, _nnz_kb) = sig
     m, k = shape
 
@@ -574,6 +753,14 @@ def _batched_executor(sig: Tuple, batch: int):
     return jax.jit(run)
 
 
+# positions of the value-carrying leaves in _plan_leaves order — the slots
+# dynamic value updates scatter into (dynamic/delta.py patches the sharded
+# stacked leaves by these indices)
+LEAF_FLAT_VALUES = 2
+LEAF_FRINGE_VALS = 5
+LEAF_KB_VALS = 12
+
+
 def _plan_leaves(plan: NeutronPlan) -> Tuple[jax.Array, ...]:
     """Executor-body args in ``_fused_run`` order (without b)."""
     return (
@@ -583,6 +770,110 @@ def _plan_leaves(plan: NeutronPlan) -> Tuple[jax.Array, ...]:
         plan.fringe_kb_chunk, plan.fringe_kb_rows,
         plan.fringe_kb_cols, plan.fringe_kb_vals,
     )
+
+
+# --- structural-delta merge extension --------------------------------------
+# A DeltaFringe sidecar (dynamic/delta.py) carries inserts/deletes that the
+# base plan's static structure cannot absorb, as a capacity-padded COO
+# executed through the same fringe tier dispatch.  Its contribution joins
+# the gather merge *inside* the fused jitted program: one dispatch still.
+_N_DELTA_LEAVES = 8  # d_rows, d_cols, d_vals, d_gsrc, kb_chunk/rows/cols/vals
+
+
+@functools.lru_cache(maxsize=None)
+def _delta_contrib_run(m: int, bk_cfg: int, bn: int, impl,
+                       reorder_cols: bool, fringe_chunk, dsig: Tuple):
+    """Delta-sidecar contribution body: (delta leaves, col_perm, b) -> (M, N)."""
+    _tag, _cap, num_rows, tier, dbk, _nch, _nkb = dsig
+
+    def contrib(d_rows, d_cols, d_vals, d_gsrc, kbc, kbr, kbcol, kbv,
+                col_perm, b):
+        n = b.shape[1]
+        bp = _permute_pad_b(b, col_perm, reorder_cols, bk_cfg, bn)
+        packed = ops.delta_fringe_spmm(
+            d_rows, d_cols, d_vals, bp,
+            num_rows=num_rows, bn=bn, impl=impl, chunk=fringe_chunk,
+            tier=tier, bk=dbk,
+            kb_chunk=kbc, kb_rows=kbr, kb_cols=kbcol, kb_vals=kbv,
+        )[:, :n]
+        return _gather_rows(packed, d_gsrc)
+
+    return contrib
+
+
+@functools.lru_cache(maxsize=None)
+def _delta_executor(sig: Tuple, dsig: Tuple, batch: Optional[int]):
+    """Fused base-plan + delta-sidecar executor, one jitted program.
+
+    Cached per (plan signature, delta signature, batch): delta capacity
+    grows in powers of two, so a stream of updates retraces only on
+    capacity doublings, never per mutation.
+    """
+    run = _fused_run(sig)
+    (_version, shape, _bm, bk, bn, impl, reorder_cols, fringe_chunk,
+     *_rest) = sig
+    contrib = _delta_contrib_run(
+        shape[0], bk, bn, impl, reorder_cols, fringe_chunk, dsig
+    )
+
+    def body(*args):
+        leaves = args[:_N_PLAN_LEAVES]
+        dleaves = args[_N_PLAN_LEAVES:_N_PLAN_LEAVES + _N_DELTA_LEAVES]
+        b = args[-1]
+        col_perm = leaves[6]
+        return run(*leaves, b) + contrib(*dleaves, col_perm, b)
+
+    if batch is None:
+        return jax.jit(body)
+    vb = jax.vmap(
+        body, in_axes=(None,) * (_N_PLAN_LEAVES + _N_DELTA_LEAVES) + (0,)
+    )
+    return jax.jit(vb)
+
+
+@functools.lru_cache(maxsize=None)
+def _delta_only_executor(m: int, bk_cfg: int, bn: int, impl,
+                         fringe_chunk, dsig: Tuple, batch: Optional[int]):
+    """Standalone delta contribution (used to extend ``execute_sharded``,
+    whose shard_map program is not re-entered per delta state)."""
+    contrib = _delta_contrib_run(m, bk_cfg, bn, impl, False, fringe_chunk,
+                                 dsig)
+
+    def body(*args):
+        *dleaves, col_perm, b = args
+        return contrib(*dleaves, col_perm, b)
+
+    if batch is None:
+        return jax.jit(body)
+    vb = jax.vmap(body, in_axes=(None,) * (_N_DELTA_LEAVES + 1) + (0,))
+    return jax.jit(vb)
+
+
+def execute_with_delta(plan: NeutronPlan, delta, b: jax.Array) -> jax.Array:
+    """C = (A_base + A_delta) @ B in one fused dispatch.
+
+    ``delta`` is a ``dynamic.delta.DeltaFringe`` (duck-typed here: anything
+    with ``.leaves`` — the 8 capacity-padded sidecar arrays — and ``.sig``).
+    The sidecar joins the gather merge additively inside the same jitted
+    program as the base plan's two engine paths.
+    """
+    _validate_rhs(b, plan.shape)
+    batch = int(b.shape[0]) if b.ndim == 3 else None
+    fn = _delta_executor(plan.signature(), delta.sig, batch)
+    return fn(*_plan_leaves(plan), *delta.leaves, b)
+
+
+def execute_delta_contribution(
+    shape: Tuple[int, int], config: SpmmConfig, delta, b: jax.Array
+) -> jax.Array:
+    """The delta sidecar's own (M, N) [or (batch, M, N)] contribution."""
+    batch = int(b.shape[0]) if b.ndim == 3 else None
+    fn = _delta_only_executor(
+        shape[0], config.bk, config.bn, config.impl, config.fringe_chunk,
+        delta.sig, batch,
+    )
+    col_perm = jnp.arange(shape[1], dtype=jnp.int32)
+    return fn(*delta.leaves, col_perm, b)
 
 
 def execute(plan: NeutronPlan, b: jax.Array) -> jax.Array:
@@ -654,6 +945,8 @@ class ShardedPlan:
     shape: Tuple[int, int]
     config: SpmmConfig
     stats: Tuple
+    # host-side COO->slot maps for dynamic value updates (see UpdateMaps)
+    update_maps: Optional[ShardedUpdateMaps] = None
 
     @property
     def stats_dict(self) -> Dict:
@@ -725,11 +1018,20 @@ def prepare_sharded(
 
     if shard_axis == "rhs":
         plan = prepare(rows, cols, vals, shape, config, cm)
+        um = plan.update_maps
+        smaps = ShardedUpdateMaps(
+            shape=tuple(shape), rows=um.rows, cols=um.cols, vals=um.vals,
+            shard_of_nnz=np.zeros(um.nnz, np.int64),
+            local_of_nnz=np.arange(um.nnz, dtype=np.int64),
+            shard_maps=(um,),
+            key_sorted=um.key_sorted, key_order=um.key_order,
+        )
         return ShardedPlan(
             leaves=_plan_leaves(plan), sig=plan.signature(), mesh=mesh,
             axis_name=axis_name, shard_axis="rhs", n_shards=n_shards,
             assemble=None, shape=tuple(shape), config=config,
             stats=base_stats + (("nnz", int(rows.shape[0])),),
+            update_maps=smaps,
         )
 
     # --- rows axis: LPT-balanced window lists -> per-shard sub-problems ---
@@ -771,6 +1073,7 @@ def prepare_sharded(
     sub_cfg = dataclasses.replace(config, fringe_vmem_budget=0)
     row_window = rows // config.bm if rows.size else rows
     plans: List[NeutronPlan] = []
+    shard_idx: List[np.ndarray] = []  # global nnz ids per shard
     for s in range(n_shards):
         mask = (
             shard_of_window[row_window] == s if rows.size
@@ -779,6 +1082,7 @@ def prepare_sharded(
         local_rows = (
             local_window_start[row_window[mask]] + rows[mask] % config.bm
         )
+        shard_idx.append(np.flatnonzero(mask))
         plans.append(prepare(
             local_rows, cols[mask], vals[mask], (m_loc_max, k), sub_cfg, cm
         ))
@@ -808,7 +1112,7 @@ def prepare_sharded(
         else:
             kb_streams.append((
                 np.zeros(1, np.int32), np.zeros(1, np.int32),
-                np.zeros(1, np.int32), np.zeros(1, np.float32),
+                np.zeros(1, np.int32), np.zeros(1, np.float32), None,
             ))
     nch_max = max(s[0].shape[0] for s in kb_streams)
     nnzkb_max = max(s[1].shape[0] for s in kb_streams)
@@ -827,7 +1131,7 @@ def prepare_sharded(
         # are -1 (no contribution)
         leaves = [np.asarray(x) for x in _plan_leaves(p)]
         sw, sc, fv, fr, fc, fvv, cp, gm, gv = leaves[:9]
-        kbc, kbr, kbcol, kbv = kb
+        kbc, kbr, kbcol, kbv = kb[:4]
         padded = (
             _pad_to(sw, t_max, nw_max), _pad_to(sc, t_max),
             _pad_to(fv, t_max, 0.0),
@@ -843,9 +1147,37 @@ def prepare_sharded(
     leaves = tuple(jnp.asarray(np.stack(col)) for col in stacked)
 
     sig = (
+        PLAN_FORMAT_VERSION,
         (m_loc_max, k), cfg.bm, cfg.bk, cfg.bn, cfg.impl, cfg.reorder_cols,
         cfg.fringe_chunk, nw_kernel, t_max, nnzf_max, nfr_max,
         has_core, has_fringe, u_tier, int(u_bk), nch_max, nnzkb_max,
+    )
+
+    # COO->slot maps: shard-local sub-plan maps (padding is prefix-
+    # preserving, so their slots stay valid in the stacked leaves), with
+    # kb_pos rebucketed under the mesh-uniform tier chosen above
+    shard_of_nnz = (
+        shard_of_window[row_window] if rows.size else np.zeros(0, np.int64)
+    )
+    local_of_nnz = np.zeros(rows.shape[0], np.int64)
+    shard_maps = []
+    for s, (p, kb) in enumerate(zip(plans, kb_streams)):
+        local_of_nnz[shard_idx[s]] = np.arange(shard_idx[s].size)
+        um = p.update_maps
+        if kb[4] is not None:
+            kb_pos = np.where(
+                um.fringe_pos >= 0,
+                kb[4][np.clip(um.fringe_pos, 0, None)], -1,
+            )
+        else:
+            kb_pos = np.full(um.nnz, -1, np.int64)
+        shard_maps.append(dataclasses.replace(um, kb_pos=kb_pos))
+    key_sorted, key_order = _build_key_index(rows, cols, k)
+    smaps = ShardedUpdateMaps(
+        shape=tuple(shape), rows=rows, cols=cols, vals=vals.copy(),
+        shard_of_nnz=shard_of_nnz, local_of_nnz=local_of_nnz,
+        shard_maps=tuple(shard_maps),
+        key_sorted=key_sorted, key_order=key_order,
     )
 
     # original row r lives in shard shard_of_window[r//bm] at local slot
@@ -872,7 +1204,7 @@ def prepare_sharded(
         leaves=leaves, sig=sig, mesh=mesh, axis_name=axis_name,
         shard_axis="rows", n_shards=n_shards,
         assemble=jnp.asarray(assemble), shape=tuple(shape), config=config,
-        stats=stats,
+        stats=stats, update_maps=smaps,
     )
 
 

@@ -10,11 +10,14 @@ configurable scale so every benchmark table has a corresponding workload:
 - ``banded``: diagonal-band FEM-style matrices (F1/Fault_639-like, high
   empty-tile fraction at 128-granularity)
 - ``PAPER_DATASETS``: scaled-down stand-ins for the paper's Table 2 rows.
+- ``mutate``: a seeded mutation-stream generator (edge inserts/deletes +
+  weight updates) driving the dynamic-sparsity subsystem's serving tests
+  and benchmarks.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, Iterator, Tuple
 
 import numpy as np
 
@@ -95,6 +98,83 @@ PAPER_DATASETS: Dict[str, GraphSpec] = {
     "amazon":      GraphSpec("amazon", 32768, 32768, 12.0, "power_law", 1.2, 11),
     "mycielskian": GraphSpec("mycielskian", 8192, 8192, 380.0, "rmat", 1.0, 12),
 }
+
+
+def mutate(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+    shape: Tuple[int, int],
+    steps: int = 10,
+    insert_frac: float = 0.02,
+    delete_frac: float = 0.02,
+    update_frac: float = 0.05,
+    seed: int = 0,
+) -> Iterator["GraphDelta"]:  # noqa: F821 (forward ref; imported lazily)
+    """Yield a seeded stream of ``dynamic.GraphDelta`` mutation batches.
+
+    Each step inserts ``insert_frac * nnz`` absent edges, deletes
+    ``delete_frac * nnz`` live edges, and re-weights ``update_frac * nnz``
+    live edges — tracking the evolving structure so deletes always target
+    live entries and inserts always target holes (the invariants
+    ``DynamicPlan.update`` enforces).  Fractions are of the *current* nnz,
+    so long streams stay balanced instead of draining the graph.
+    """
+    from ..dynamic.delta import GraphDelta  # data stays import-light
+
+    m, k = shape
+    rng = np.random.RandomState(seed)
+    live: Dict[int, float] = {
+        int(r) * k + int(c): float(v)
+        for r, c, v in zip(rows, cols, vals)
+    }
+    for _ in range(steps):
+        nnz = max(len(live), 1)
+        n_ins = int(round(insert_frac * nnz))
+        n_del = min(int(round(delete_frac * nnz)), max(len(live) - 1, 0))
+        n_upd = min(int(round(update_frac * nnz)), len(live))
+
+        live_keys = np.fromiter(live, np.int64, count=len(live))
+        del_keys = rng.choice(live_keys, n_del, replace=False) if n_del \
+            else np.zeros(0, np.int64)
+        remaining = np.setdiff1d(live_keys, del_keys)
+        upd_keys = (
+            rng.choice(remaining, min(n_upd, remaining.size), replace=False)
+            if remaining.size and n_upd else np.zeros(0, np.int64)
+        )
+        ins_keys: list = []
+        taken = set(live)
+        attempts = 0
+        while len(ins_keys) < n_ins and attempts < 100:  # dense-matrix guard
+            attempts += 1
+            cand = rng.randint(0, m, n_ins) * np.int64(k) + rng.randint(
+                0, k, n_ins
+            )
+            for key in cand:
+                key = int(key)
+                if key not in taken:
+                    taken.add(key)
+                    ins_keys.append(key)
+                    if len(ins_keys) == n_ins:
+                        break
+        ins_keys = np.asarray(ins_keys, np.int64)
+        ins_vals = rng.randn(ins_keys.size)
+        upd_vals = rng.randn(upd_keys.size)
+
+        for key in del_keys:
+            del live[int(key)]
+        for key, v in zip(upd_keys, upd_vals):
+            live[int(key)] = float(v)
+        for key, v in zip(ins_keys, ins_vals):
+            live[int(key)] = float(v)
+
+        yield GraphDelta(
+            ins_rows=ins_keys // k, ins_cols=ins_keys % k,
+            ins_vals=ins_vals,
+            del_rows=del_keys // k, del_cols=del_keys % k,
+            upd_rows=upd_keys // k, upd_cols=upd_keys % k,
+            upd_vals=upd_vals,
+        )
 
 
 def dataset_stats(rows: np.ndarray, cols: np.ndarray, shape) -> Dict[str, float]:

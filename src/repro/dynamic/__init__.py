@@ -1,0 +1,16 @@
+"""Dynamic-sparsity subsystem: incremental plan maintenance over evolving
+graphs — retrace-free value updates, a structural delta sidecar with
+cost-model compaction, and a persistent plan registry for warm-started
+serving."""
+from . import delta, registry
+from .delta import (
+    DeltaFringe, DynamicPlan, GraphDelta, build_delta_fringe, update_values,
+)
+from .registry import PlanRegistry, RegistryError, coo_fingerprint
+
+__all__ = [
+    "delta", "registry",
+    "DeltaFringe", "DynamicPlan", "GraphDelta", "build_delta_fringe",
+    "update_values",
+    "PlanRegistry", "RegistryError", "coo_fingerprint",
+]

@@ -1,0 +1,725 @@
+"""Incremental plan maintenance over evolving sparse matrices.
+
+NeutronSparse amortizes heavy host preprocessing (cost-model split,
+global-local reorder, tile-stream packing) over many executions of a fixed
+matrix.  This module keeps a prepared plan valid under mutation instead of
+forcing a full re-``prepare`` per change, in three layers:
+
+1. **Value-only fast path** — :func:`update_values` scatters new nonzero
+   values straight into the device-resident plan arrays (flat tile stream,
+   packed fringe, k-bucketed stream) through the COO->slot inverse maps
+   ``prepare()`` builds (:class:`repro.core.spmm.UpdateMaps`).  Every static
+   shape is preserved, so the cached fused executor is reused as-is: no
+   re-prepare, no retrace.  Touched tile cells are recomputed host-side with
+   the same sequential fp32 accumulation order ``prepare()`` used, so the
+   updated plan is *bit-identical* to a fresh prepare of the new values.
+
+2. **Structural delta sidecar** — :class:`DynamicPlan` accumulates edge
+   inserts/deletes in a capacity-padded COO :class:`DeltaFringe` executed
+   through the existing fringe tier dispatch (``ops.delta_fringe_spmm``)
+   and merged additively into the fused gather merge
+   (``core.spmm.execute_with_delta``).  Deletes are value-negations against
+   the base plan, so the base arrays never change shape.  Capacity grows in
+   powers of two: a mutation stream retraces logarithmically, not per edge.
+
+3. **Cost-model compaction** — once the sidecar crosses the
+   ``cost_model.should_compact`` thresholds (delta-nnz fraction or
+   predicted fringe-path slowdown), the delta folds into a fresh
+   ``prepare()`` and the sidecar resets.
+
+All three layers work over both ``NeutronPlan`` and ``ShardedPlan`` (the
+sharded fast path scatters into the per-shard stacked leaves; the sidecar
+contribution is added outside the ``shard_map`` program).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import spmm
+from ..core.cost_model import (
+    CompactionDecision, DELTA_MAX_FRACTION, DELTA_MAX_SLOWDOWN,
+    EngineCostModel, default_cost_model, select_fringe_tier, should_compact,
+)
+from ..kernels import ops
+
+PlanLike = Union[spmm.NeutronPlan, spmm.ShardedPlan]
+
+
+def _as_1d(a, dtype) -> np.ndarray:
+    out = np.asarray(a, dtype)
+    if out.ndim != 1:
+        raise ValueError(f"expected a 1-D array, got shape {out.shape}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# layer 1: value-only fast path
+# ---------------------------------------------------------------------------
+
+
+def _recompute_core_slots(
+    maps: spmm.UpdateMaps, touched_ids: np.ndarray, cur: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact new contents of every tile cell touched by the given nonzeros.
+
+    Duplicates accumulate into one cell, so each touched flat slot is
+    recomputed from *all* its contributors in input order — replaying the
+    sequential fp32 ``np.add.at`` that first filled it.  (A scatter-*add* of
+    value deltas would not be bit-exact: ``a + (b - a) != b`` in fp32 once
+    magnitudes diverge.)
+    """
+    touched = np.unique(maps.core_lin[touched_ids])
+    lo = np.searchsorted(maps.core_lin_sorted, touched, "left")
+    hi = np.searchsorted(maps.core_lin_sorted, touched, "right")
+    counts = hi - lo
+    total = int(counts.sum())
+    starts = np.cumsum(counts) - counts
+    flatpos = (
+        np.arange(total) - np.repeat(starts, counts) + np.repeat(lo, counts)
+    )
+    members = maps.core_members_sorted[flatpos]
+    slot_of_member = np.repeat(np.arange(touched.size), counts)
+    sums = np.zeros(touched.size, np.float32)
+    np.add.at(sums, slot_of_member, cur[members].astype(np.float32))
+    return touched, sums
+
+
+def _split_paths(
+    maps: spmm.UpdateMaps, ids: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    ids = np.unique(ids)
+    is_fringe = maps.path[ids] == spmm.PATH_FRINGE
+    return ids[~is_fringe], ids[is_fringe]
+
+
+def _validate_update(maps, indices, new_values) -> Tuple[np.ndarray, np.ndarray]:
+    indices = _as_1d(indices, np.int64)
+    new_values = np.asarray(new_values)
+    if new_values.shape != indices.shape:
+        raise ValueError(
+            f"indices and new_values disagree: {indices.shape} vs "
+            f"{new_values.shape}"
+        )
+    if indices.size and (
+        int(indices.min()) < 0 or int(indices.max()) >= maps.nnz
+    ):
+        raise ValueError(
+            f"nonzero indices out of range [0, {maps.nnz}): "
+            f"[{int(indices.min())}, {int(indices.max())}]"
+        )
+    return indices, new_values
+
+
+def update_values(plan: PlanLike, indices, new_values) -> PlanLike:
+    """Retrace-free value update: set nonzero ``indices`` to ``new_values``.
+
+    ``indices`` address the COO triplets originally passed to ``prepare``
+    (or ``prepare_sharded``).  Returns a plan of the same type whose
+    signature — and therefore cached executor — is unchanged, and whose
+    arrays are bit-identical to re-preparing with the updated values.
+    """
+    if isinstance(plan, spmm.ShardedPlan):
+        return _update_values_sharded(plan, indices, new_values)
+    maps = plan.update_maps
+    if maps is None:
+        raise ValueError(
+            "plan carries no update maps (built by prepare(); lost when a "
+            "plan round-trips through pytree flatten) — re-prepare to "
+            "re-enable dynamic updates"
+        )
+    indices, new_values = _validate_update(maps, indices, new_values)
+    cur = maps.vals.copy()
+    cur[indices] = new_values.astype(cur.dtype, copy=False)
+
+    replacements: Dict[str, jax.Array] = {}
+    core_ids, fringe_ids = _split_paths(maps, indices)
+    if fringe_ids.size:
+        pos = maps.fringe_pos[fringe_ids]
+        v32 = jnp.asarray(cur[fringe_ids].astype(np.float32))
+        replacements["fringe_vals"] = plan.fringe_vals.at[
+            jnp.asarray(pos)
+        ].set(v32)
+        kb = maps.kb_pos[fringe_ids]
+        if kb.size and kb[0] >= 0:  # plan carries a real k-bucketed stream
+            replacements["fringe_kb_vals"] = plan.fringe_kb_vals.at[
+                jnp.asarray(kb)
+            ].set(v32)
+    if core_ids.size:
+        touched, sums = _recompute_core_slots(maps, core_ids, cur)
+        flat = plan.flat_values.reshape(-1).at[jnp.asarray(touched)].set(
+            jnp.asarray(sums)
+        )
+        replacements["flat_values"] = flat.reshape(plan.flat_values.shape)
+
+    return dataclasses.replace(
+        plan, update_maps=dataclasses.replace(maps, vals=cur), **replacements
+    )
+
+
+def _update_values_sharded(
+    splan: spmm.ShardedPlan, indices, new_values
+) -> spmm.ShardedPlan:
+    maps = splan.update_maps
+    if maps is None:
+        raise ValueError(
+            "sharded plan carries no update maps — re-prepare_sharded to "
+            "enable dynamic updates"
+        )
+    indices, new_values = _validate_update(maps, indices, new_values)
+    cur = maps.vals.copy()
+    cur[indices] = new_values.astype(cur.dtype, copy=False)
+
+    stacked = splan.shard_axis == "rows"
+    leaves = list(splan.leaves)
+    new_shard_maps = list(maps.shard_maps)
+    for s in np.unique(maps.shard_of_nnz[indices]):
+        sel = indices[maps.shard_of_nnz[indices] == s]
+        um = maps.shard_maps[s]
+        lcur = um.vals.copy()
+        lcur[maps.local_of_nnz[sel]] = cur[sel].astype(
+            lcur.dtype, copy=False
+        )
+        core_ids, fringe_ids = _split_paths(um, maps.local_of_nnz[sel])
+        if fringe_ids.size:
+            pos = jnp.asarray(um.fringe_pos[fringe_ids])
+            v32 = jnp.asarray(lcur[fringe_ids].astype(np.float32))
+            lf = spmm.LEAF_FRINGE_VALS
+            leaves[lf] = (
+                leaves[lf].at[s, pos].set(v32) if stacked
+                else leaves[lf].at[pos].set(v32)
+            )
+            kb = um.kb_pos[fringe_ids]
+            if kb.size and kb[0] >= 0:
+                lk = spmm.LEAF_KB_VALS
+                kbj = jnp.asarray(kb)
+                leaves[lk] = (
+                    leaves[lk].at[s, kbj].set(v32) if stacked
+                    else leaves[lk].at[kbj].set(v32)
+                )
+        if core_ids.size:
+            touched, sums = _recompute_core_slots(um, core_ids, lcur)
+            lv = spmm.LEAF_FLAT_VALUES
+            orig = leaves[lv]
+            if stacked:
+                flat = orig.reshape(orig.shape[0], -1)
+                flat = flat.at[s, jnp.asarray(touched)].set(jnp.asarray(sums))
+            else:
+                flat = orig.reshape(-1).at[jnp.asarray(touched)].set(
+                    jnp.asarray(sums)
+                )
+            leaves[lv] = flat.reshape(orig.shape)
+        new_shard_maps[s] = dataclasses.replace(um, vals=lcur)
+
+    new_maps = dataclasses.replace(
+        maps, vals=cur, shard_maps=tuple(new_shard_maps)
+    )
+    return dataclasses.replace(
+        splan, leaves=tuple(leaves), update_maps=new_maps
+    )
+
+
+# ---------------------------------------------------------------------------
+# layer 2: structural delta sidecar
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphDelta:
+    """One batch of mutations against an evolving sparse matrix.
+
+    ``ins_*`` add nonzeros (adding to an existing entry accumulates, like
+    COO duplicates), ``del_*`` remove structural entries, ``upd_*`` set the
+    value of existing entries.  All arrays are host numpy and may be empty.
+    Within one batch, deletes apply first, then inserts, then updates (see
+    ``DynamicPlan.update``).
+    """
+
+    ins_rows: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
+    ins_cols: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
+    ins_vals: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.float64))
+    del_rows: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
+    del_cols: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
+    upd_rows: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
+    upd_cols: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
+    upd_vals: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.float64))
+
+    def __post_init__(self):
+        for name in ("ins_rows", "ins_cols", "del_rows", "del_cols",
+                     "upd_rows", "upd_cols"):
+            object.__setattr__(self, name, _as_1d(getattr(self, name),
+                                                  np.int64))
+        for name in ("ins_vals", "upd_vals"):
+            object.__setattr__(
+                self, name, np.asarray(getattr(self, name), np.float64)
+            )
+        if self.ins_rows.shape != self.ins_cols.shape or (
+                self.ins_rows.shape != self.ins_vals.shape):
+            raise ValueError("insert triplet lengths disagree")
+        if self.del_rows.shape != self.del_cols.shape:
+            raise ValueError("delete pair lengths disagree")
+        if self.upd_rows.shape != self.upd_cols.shape or (
+                self.upd_rows.shape != self.upd_vals.shape):
+            raise ValueError("update triplet lengths disagree")
+
+    @classmethod
+    def inserts(cls, rows, cols, vals) -> "GraphDelta":
+        return cls(ins_rows=rows, ins_cols=cols, ins_vals=vals)
+
+    @classmethod
+    def deletes(cls, rows, cols) -> "GraphDelta":
+        return cls(del_rows=rows, del_cols=cols)
+
+    @classmethod
+    def updates(cls, rows, cols, vals) -> "GraphDelta":
+        return cls(upd_rows=rows, upd_cols=cols, upd_vals=vals)
+
+    @property
+    def size(self) -> int:
+        return int(self.ins_rows.size + self.del_rows.size
+                   + self.upd_rows.size)
+
+
+def _pad_to(a: np.ndarray, n: int) -> np.ndarray:
+    if a.shape[0] >= n:
+        return a[:n]
+    return np.concatenate(
+        [a, np.zeros((n - a.shape[0],) + a.shape[1:], a.dtype)]
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaFringe:
+    """Capacity-padded COO sidecar, shaped for the fringe tier dispatch.
+
+    ``leaves`` are the 8 device arrays ``core.spmm.execute_with_delta``
+    appends to the fused program: packed rows / k-block-relative state
+    exactly mirror a plan's fringe, and padding entries (row 0, col 0,
+    value 0) are accumulate-inert.  ``sig`` keys the cached executor; it
+    changes only when ``capacity`` grows (powers of two).
+    """
+
+    leaves: Tuple[jax.Array, ...]
+    sig: Tuple
+    capacity: int
+    count: int
+    tier: str
+    bk: int
+
+
+def build_delta_fringe(
+    d_rows: np.ndarray,
+    d_cols: np.ndarray,
+    d_vals: np.ndarray,
+    shape: Tuple[int, int],
+    config: spmm.SpmmConfig,
+    capacity: Optional[int] = None,
+) -> DeltaFringe:
+    """Materialize a delta COO into a capacity-padded sidecar stream."""
+    m, k = shape
+    d_rows = _as_1d(d_rows, np.int64)
+    d_cols = _as_1d(d_cols, np.int64)
+    d_vals = np.asarray(d_vals)
+    count = int(d_rows.size)
+    cap = max(8, ops.pow2_at_least(count), int(capacity or 0))
+
+    if count:
+        order = np.argsort(d_rows * np.int64(k) + d_cols, kind="stable")
+        sr = d_rows[order]
+        first = np.concatenate([[True], sr[1:] != sr[:-1]])
+        row_ids = sr[first]
+        pr = (np.cumsum(first) - 1).astype(np.int32)
+        pc = d_cols[order].astype(np.int32)
+        pv = d_vals[order].astype(np.float32)
+    else:
+        row_ids = np.zeros(0, np.int64)
+        pr = np.zeros(0, np.int32)
+        pc = np.zeros(0, np.int32)
+        pv = np.zeros(0, np.float32)
+    pr, pc, pv = _pad_to(pr, cap), _pad_to(pc, cap), _pad_to(pv, cap)
+    gsrc = np.full(m, -1, np.int32)
+    if row_ids.size:
+        gsrc[row_ids] = np.arange(row_ids.size, dtype=np.int32)
+
+    # the sidecar flows through the same VMEM-budget tier selection as a
+    # plan fringe; the packed-row bound is the capacity (static per sig)
+    k_pad = ((k + config.bk - 1) // config.bk) * config.bk
+    tier, dbk = select_fringe_tier(
+        k_pad, cap, config.bn, vmem_budget=config.fringe_vmem_budget
+    )
+    chunk_eff = ops.effective_chunk(config.fringe_chunk)
+    if tier == "ksharded" and config.impl != "xla":
+        kbc, kbr, kbcol, kbv, _pos = spmm._bucket_fringe_kblocks(
+            pr, pc, pv, k_pad, dbk, chunk_eff
+        )
+        # deterministic shapes per capacity: each nonempty bucket wastes
+        # < chunk slots, so cap * chunk bounds the bucketed stream; pad
+        # chunks target k-block 0 with zero values (accumulate-inert)
+        kb_cap = cap * chunk_eff
+        kbc = _pad_to(kbc, kb_cap // chunk_eff)
+        kbr = _pad_to(kbr, kb_cap)
+        kbcol = _pad_to(kbcol, kb_cap)
+        kbv = _pad_to(kbv, kb_cap)
+    else:
+        kbc = np.zeros(1, np.int32)
+        kbr = np.zeros(1, np.int32)
+        kbcol = np.zeros(1, np.int32)
+        kbv = np.zeros(1, np.float32)
+
+    leaves = tuple(jnp.asarray(x) for x in (
+        pr, pc, pv, gsrc, kbc, kbr, kbcol, kbv
+    ))
+    sig = ("delta", cap, cap, tier, int(dbk),
+           int(kbc.shape[0]), int(kbr.shape[0]))
+    return DeltaFringe(leaves=leaves, sig=sig, capacity=cap, count=count,
+                       tier=tier, bk=int(dbk))
+
+
+# ---------------------------------------------------------------------------
+# layer 2+3: dynamic plan with compaction
+# ---------------------------------------------------------------------------
+
+
+class DynamicPlan:
+    """A prepared plan that stays valid while its matrix evolves.
+
+    Wraps a ``NeutronPlan`` or ``ShardedPlan`` (which must carry update
+    maps) and routes mutations to the cheapest layer that preserves
+    correctness: value updates on existing structure scatter in place
+    (retrace-free), structural inserts/deletes accumulate in the
+    :class:`DeltaFringe` sidecar, and the cost model folds the sidecar into
+    a fresh prepare once it would start to dominate.
+    """
+
+    def __init__(
+        self,
+        plan: PlanLike,
+        cost_model: Optional[EngineCostModel] = None,
+        max_delta_fraction: float = DELTA_MAX_FRACTION,
+        max_slowdown: float = DELTA_MAX_SLOWDOWN,
+        auto_compact: bool = True,
+    ):
+        if plan.update_maps is None:
+            raise ValueError(
+                "DynamicPlan needs a plan with update maps (built by "
+                "prepare()/prepare_sharded())"
+            )
+        if plan.config.reorder_cols:
+            raise ValueError(
+                "DynamicPlan does not support reorder_cols=True: sidecar "
+                "columns address the un-permuted operand"
+            )
+        self.plan = plan
+        self.cost_model = cost_model or default_cost_model(
+            n_cols=plan.config.bn
+        )
+        self.max_delta_fraction = float(max_delta_fraction)
+        self.max_slowdown = float(max_slowdown)
+        self.auto_compact = bool(auto_compact)
+        # logical overlay: key -> target value (None = deleted base entry).
+        # The sidecar stream is derived from this against base values.
+        self._overlay: Dict[int, Optional[float]] = {}
+        self._delta: Optional[DeltaFringe] = None
+        self._capacity = 0
+        self.compactions = 0
+        self.last_decision: Optional[CompactionDecision] = None
+        # compaction-decision inputs are constant between compactions;
+        # computing them per update batch would make every O(delta) update
+        # pay an O(base-nnz) host scan
+        self._refresh_base_costs()
+
+    def _refresh_base_costs(self) -> None:
+        self._base_fringe_nnz = self._fringe_nnz()
+        self._base_core_rows = self._core_rows()
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.plan.shape
+
+    @property
+    def config(self) -> spmm.SpmmConfig:
+        return self.plan.config
+
+    @property
+    def maps(self):
+        return self.plan.update_maps
+
+    @property
+    def delta_nnz(self) -> int:
+        return len(self._overlay)
+
+    @property
+    def is_sharded(self) -> bool:
+        return isinstance(self.plan, spmm.ShardedPlan)
+
+    def to_coo(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Current logical matrix as (rows, cols, vals) host triplets."""
+        maps = self.maps
+        k = self.shape[1]
+        keys = maps.rows * np.int64(k) + maps.cols
+        if self._overlay:
+            okeys = np.fromiter(self._overlay, np.int64,
+                                count=len(self._overlay))
+            keep = ~np.isin(keys, okeys)
+        else:
+            okeys = np.zeros(0, np.int64)
+            keep = np.ones(keys.size, bool)
+        rows = [maps.rows[keep]]
+        cols = [maps.cols[keep]]
+        vals = [maps.vals[keep].astype(np.float64)]
+        live = [(key, t) for key, t in self._overlay.items()
+                if t is not None]
+        if live:
+            lk = np.array([key for key, _ in live], np.int64)
+            rows.append(lk // k)
+            cols.append(lk % k)
+            vals.append(np.array([t for _, t in live], np.float64))
+        return (np.concatenate(rows), np.concatenate(cols),
+                np.concatenate(vals))
+
+    # -- mutation -----------------------------------------------------------
+    def _base_key_sums(self, keys: np.ndarray) -> np.ndarray:
+        """Total base value per key (duplicates accumulate)."""
+        maps = self.maps
+        lo = np.searchsorted(maps.key_sorted, keys, "left")
+        hi = np.searchsorted(maps.key_sorted, keys, "right")
+        out = np.zeros(keys.size, np.float64)
+        for i in range(keys.size):  # delta-sized, not matrix-sized
+            out[i] = float(
+                maps.vals[maps.key_order[lo[i]:hi[i]]].astype(
+                    np.float64
+                ).sum()
+            )
+        return out
+
+    def _dup_ids(self, key: int) -> np.ndarray:
+        """All base nnz ids of one (row, col) key, in input order."""
+        maps = self.maps
+        lo = np.searchsorted(maps.key_sorted, key, "left")
+        hi = np.searchsorted(maps.key_sorted, key, "right")
+        return maps.key_order[lo:hi]  # stable sort: already input order
+
+    def update(self, delta: GraphDelta) -> Dict[str, int]:
+        """Apply one mutation batch; returns routing stats.
+
+        Atomic: the whole batch is staged against copies (the overlay dict
+        and a pending fast-path value map), so a validation error — delete
+        of an absent entry, update of a deleted one — raises before ANY
+        state changes.  Within a batch the categories apply in a defined
+        order — deletes, then inserts, then updates — so a replace-style
+        batch (delete + insert of one key) reinstates with the new value,
+        and an insert + update of one new key lands on the update.
+        Duplicate base triplets are treated as one logical entry: an update
+        sets the duplicates' *sum* to the new value (first occurrence
+        carries it, the rest go to zero), and inserts targeting one entry
+        twice in a batch accumulate.
+        """
+        maps = self.maps
+        m, k = self.shape
+        for name, (r, c) in (
+            ("insert", (delta.ins_rows, delta.ins_cols)),
+            ("delete", (delta.del_rows, delta.del_cols)),
+            ("update", (delta.upd_rows, delta.upd_cols)),
+        ):
+            if r.size and (
+                r.min() < 0 or r.max() >= m or c.min() < 0 or c.max() >= k
+            ):
+                raise ValueError(
+                    f"{name} indices out of range for shape {self.shape}"
+                )
+
+        # --- stage: no self.* mutation until the whole batch validates ---
+        overlay = dict(self._overlay)
+        pending: Dict[int, float] = {}  # nnz id -> staged new value
+
+        def set_logical(key: int, value: float) -> None:
+            """Fast path: make the duplicate-sum of ``key`` equal value."""
+            dups = self._dup_ids(key)
+            pending[int(dups[0])] = value
+            for d in dups[1:]:
+                pending[int(d)] = 0.0
+
+        def logical_value(key: int) -> float:
+            dups = self._dup_ids(key)
+            return float(sum(
+                pending.get(int(d), float(maps.vals[d])) for d in dups
+            ))
+
+        # deletes first: remove a logical entry
+        ids = maps.lookup(delta.del_rows, delta.del_cols)
+        for j in range(delta.del_rows.size):
+            key = int(delta.del_rows[j]) * k + int(delta.del_cols[j])
+            if key in overlay:
+                if overlay[key] is None:
+                    raise ValueError(
+                        f"entry ({delta.del_rows[j]}, {delta.del_cols[j]}) "
+                        "already deleted"
+                    )
+                if ids[j] >= 0:   # reinstated base entry -> deleted again
+                    overlay[key] = None
+                else:             # sidecar-only insert evaporates
+                    del overlay[key]
+            elif ids[j] >= 0:
+                overlay[key] = None
+            else:
+                raise ValueError(
+                    f"delete of absent entry "
+                    f"({delta.del_rows[j]}, {delta.del_cols[j]})"
+                )
+
+        # inserts: add a value (accumulates onto existing entries)
+        ids = maps.lookup(delta.ins_rows, delta.ins_cols)
+        for j in range(delta.ins_rows.size):
+            key = int(delta.ins_rows[j]) * k + int(delta.ins_cols[j])
+            v = float(delta.ins_vals[j])
+            if key in overlay:
+                t = overlay[key]
+                overlay[key] = v if t is None else t + v
+            elif ids[j] >= 0:
+                set_logical(key, logical_value(key) + v)
+            else:
+                overlay[key] = v
+
+        # updates last: set the value of an existing logical entry (which a
+        # same-batch insert may just have created)
+        ids = maps.lookup(delta.upd_rows, delta.upd_cols)
+        for j in range(delta.upd_rows.size):
+            key = int(delta.upd_rows[j]) * k + int(delta.upd_cols[j])
+            v = float(delta.upd_vals[j])
+            if key in overlay:
+                if overlay[key] is None:
+                    raise ValueError(
+                        f"update of deleted entry "
+                        f"({delta.upd_rows[j]}, {delta.upd_cols[j]})"
+                    )
+                overlay[key] = v
+            elif ids[j] >= 0:
+                set_logical(key, v)
+            else:
+                raise ValueError(
+                    f"update of absent entry "
+                    f"({delta.upd_rows[j]}, {delta.upd_cols[j]}); use an "
+                    "insert"
+                )
+
+        # --- commit: batch validated end to end ---
+        if pending:
+            self.plan = update_values(
+                self.plan,
+                np.fromiter(pending, np.int64, count=len(pending)),
+                np.asarray(list(pending.values())),
+            )
+        structural = overlay != self._overlay
+        self._overlay = overlay
+        if structural:
+            self._delta = None  # rematerialized lazily at next execute
+
+        stats = {
+            "fast_path": len(pending),
+            "delta_nnz": self.delta_nnz,
+            "compacted": 0,
+        }
+        self.last_decision = should_compact(
+            self.cost_model,
+            base_nnz=self.maps.nnz,
+            delta_nnz=self.delta_nnz,
+            core_rows=self._base_core_rows,
+            fringe_nnz=self._base_fringe_nnz,
+            k=k,
+            max_delta_fraction=self.max_delta_fraction,
+            max_slowdown=self.max_slowdown,
+        )
+        if self.auto_compact and self.last_decision.compact:
+            self.compact()
+            stats["compacted"] = 1
+            stats["delta_nnz"] = 0
+        return stats
+
+    def _core_rows(self) -> int:
+        if isinstance(self.plan, spmm.NeutronPlan):
+            return self.plan.num_windows * self.plan.config.bm
+        return self.plan.shape[0]  # conservative matrix-path bound
+
+    def _fringe_nnz(self) -> int:
+        maps = self.maps
+        if isinstance(maps, spmm.ShardedUpdateMaps):
+            return int(sum(
+                int((um.path == spmm.PATH_FRINGE).sum())
+                for um in maps.shard_maps
+            ))
+        return int((maps.path == spmm.PATH_FRINGE).sum())
+
+    def compact(self) -> None:
+        """Fold the delta sidecar into a fresh prepared plan."""
+        rows, cols, vals = self.to_coo()
+        old = self.plan
+        if isinstance(old, spmm.ShardedPlan):
+            self.plan = spmm.prepare_sharded(
+                rows, cols, vals, self.shape, old.mesh, old.config,
+                self.cost_model, shard_axis=old.shard_axis,
+                axis_name=old.axis_name,
+            )
+        else:
+            self.plan = spmm.prepare(
+                rows, cols, vals, self.shape, old.config, self.cost_model
+            )
+        self._overlay = {}
+        self._delta = None
+        # capacity resets with the fold: keeping the historical maximum
+        # would pad every post-compaction sidecar (and its fringe dispatch)
+        # to the pre-fold delta size forever — compaction re-prepares and
+        # retraces anyway, so the capacity ratchet has nothing to save
+        self._capacity = 0
+        self.compactions += 1
+        self._refresh_base_costs()
+
+    # -- execution ----------------------------------------------------------
+    def _materialize(self) -> DeltaFringe:
+        if self._delta is not None:
+            return self._delta
+        maps = self.maps
+        k = self.shape[1]
+        keys = np.fromiter(self._overlay, np.int64,
+                           count=len(self._overlay))
+        targets = [self._overlay[int(key)] for key in keys]
+        base = self._base_key_sums(keys)
+        in_base = maps.lookup(keys // k, keys % k) >= 0
+        vals = np.array([
+            (-base[i] if t is None
+             else (t - base[i] if in_base[i] else t))
+            for i, t in enumerate(targets)
+        ], np.float64)
+        self._delta = build_delta_fringe(
+            keys // k, keys % k, vals, self.shape, self.config,
+            capacity=self._capacity,
+        )
+        self._capacity = self._delta.capacity  # grow-only: bounded retraces
+        return self._delta
+
+    def execute(self, b: jax.Array) -> jax.Array:
+        """C = A_current @ B, merging base plan and delta sidecar."""
+        base = self.plan
+        sharded = isinstance(base, spmm.ShardedPlan)
+        if not self._overlay:
+            return (spmm.execute_sharded(base, b) if sharded
+                    else spmm.execute(base, b))
+        delta = self._materialize()
+        if sharded:
+            out = spmm.execute_sharded(base, b)
+            return out + spmm.execute_delta_contribution(
+                base.shape, base.config, delta, b
+            )
+        return spmm.execute_with_delta(base, delta, b)

@@ -1,0 +1,281 @@
+"""Persistent plan registry: serve warm without re-running ``prepare()``.
+
+Plans (and their dynamic delta state) serialize to disk under the same
+atomic manifest + sharded-``.npy`` layout as ``checkpoint/`` — writes go to
+a temp directory and ``os.replace`` into place, so a crash mid-save never
+corrupts the latest entry.  Layout:
+
+    root/<name>/step_000000NN/
+      manifest.json        leaf shapes/dtypes/shard counts + plan metadata
+      leaf_flat_values.s0.npy ...   plan leaves
+      maps_vals.s0.npy ...          COO->slot update maps
+      delta_keys.s0.npy ...         structural-overlay state
+
+Entries are keyed by matrix name and validated on load against (a) the
+registry format version, (b) the plan-format version baked into every plan
+signature (``core.spmm.PLAN_FORMAT_VERSION``), and (c) the signature
+recomputed from the restored plan.  Any mismatch, truncated shard, or
+malformed manifest raises :class:`RegistryError` — a clean failure the
+caller answers with a fresh ``prepare()`` (see ``load_or_prepare``), never
+a wrong answer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import re
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import checkpoint
+from ..core import spmm
+from .delta import DynamicPlan
+
+REGISTRY_FORMAT_VERSION = 1
+
+# NeutronPlan pytree leaves, serialized by field name
+_LEAF_NAMES = (
+    "step_window", "step_col", "flat_values", "core_row_map",
+    "fringe_rows", "fringe_cols", "fringe_vals", "fringe_row_ids",
+    "col_perm", "gather_src_matrix", "gather_src_vector",
+    "fringe_kb_chunk", "fringe_kb_rows", "fringe_kb_cols", "fringe_kb_vals",
+)
+_MAPS_NAMES = (
+    "rows", "cols", "vals", "path", "core_lin", "fringe_pos", "kb_pos",
+    "core_lin_sorted", "core_members_sorted", "key_sorted", "key_order",
+)
+
+
+class RegistryError(RuntimeError):
+    """A registry entry is missing, corrupt, or format-incompatible."""
+
+
+def coo_fingerprint(
+    rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+    shape: Tuple[int, int], config: spmm.SpmmConfig,
+) -> str:
+    """Content hash binding a registry entry to its source matrix + config.
+
+    Dtypes are canonicalized (int64 indices, float64 values) so the hash of
+    a plan's evolved ``to_coo()`` state matches a caller re-registering the
+    same logical matrix from narrower host arrays.
+    """
+    h = hashlib.sha256()
+    for a, dtype in ((rows, np.int64), (cols, np.int64),
+                     (vals, np.float64)):
+        arr = np.ascontiguousarray(np.asarray(a, dtype))
+        h.update(arr.tobytes())
+    h.update(repr(tuple(shape)).encode())
+    h.update(repr(config).encode())
+    return h.hexdigest()
+
+
+def _safe_name(name: str) -> str:
+    if not re.fullmatch(r"[A-Za-z0-9._-]+", name):
+        raise ValueError(
+            f"registry names must be filesystem-safe "
+            f"([A-Za-z0-9._-]+), got {name!r}"
+        )
+    return name
+
+
+class PlanRegistry:
+    """On-disk registry of prepared plans keyed by matrix name."""
+
+    def __init__(self, root: str, keep: int = 2):
+        self.root = root
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+
+    def names(self) -> List[str]:
+        return sorted(
+            d for d in os.listdir(self.root)
+            if os.path.isdir(os.path.join(self.root, d))
+        )
+
+    def has(self, name: str) -> bool:
+        d = os.path.join(self.root, _safe_name(name))
+        return os.path.isdir(d) and checkpoint.latest_step(d) is not None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, name: str, dplan: DynamicPlan) -> str:
+        """Persist a dynamic plan (base arrays, update maps, delta state)."""
+        _safe_name(name)
+        if dplan.is_sharded:
+            raise RegistryError(
+                "sharded plans embed live mesh/device state and are not "
+                "serializable; re-prepare_sharded on restart (the COO and "
+                "config are what the registry would store anyway)"
+            )
+        plan = dplan.plan
+        maps = plan.update_maps
+        tree: Dict[str, np.ndarray] = {}
+        for lname, leaf in zip(_LEAF_NAMES, plan.tree_flatten()[0]):
+            tree[f"leaf_{lname}"] = np.asarray(leaf)
+        for mname in _MAPS_NAMES:
+            tree[f"maps_{mname}"] = np.asarray(getattr(maps, mname))
+        overlay = dplan._overlay
+        keys = np.fromiter(overlay, np.int64, count=len(overlay))
+        has_target = np.array(
+            [overlay[int(key)] is not None for key in keys], bool
+        )
+        targets = np.array(
+            [overlay[int(key)] if overlay[int(key)] is not None else 0.0
+             for key in keys], np.float64,
+        )
+        tree["delta_keys"] = keys
+        tree["delta_has_target"] = has_target
+        tree["delta_targets"] = targets
+
+        rows, cols, vals = dplan.to_coo()
+        meta = {
+            "registry_format_version": REGISTRY_FORMAT_VERSION,
+            "plan_format_version": spmm.PLAN_FORMAT_VERSION,
+            "name": name,
+            "shape": list(plan.shape),
+            "config": dataclasses.asdict(plan.config),
+            "stats": [list(kv) for kv in plan.stats],
+            "fringe_tier": plan.fringe_tier,
+            "fringe_bk": plan.fringe_bk,
+            "signature": repr(plan.signature()),
+            "coo_hash": coo_fingerprint(
+                rows, cols, vals, plan.shape, plan.config
+            ),
+            "compactions": dplan.compactions,
+        }
+        d = os.path.join(self.root, _safe_name(name))
+        step = (checkpoint.latest_step(d) or 0) + 1
+        return checkpoint.save(
+            d, step, tree, meta=meta, num_shards=1, keep=self.keep
+        )
+
+    # -- load ---------------------------------------------------------------
+    def _read_entry(self, name: str) -> Tuple[Dict, Dict[str, np.ndarray]]:
+        d = os.path.join(self.root, _safe_name(name))
+        step = checkpoint.latest_step(d)
+        if step is None:
+            raise RegistryError(f"no registry entry for {name!r}")
+        entry = os.path.join(d, f"step_{step:09d}")
+        try:
+            with open(os.path.join(entry, "manifest.json")) as f:
+                manifest = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            raise RegistryError(
+                f"unreadable manifest for {name!r}: {e}"
+            ) from e
+        meta = manifest.get("meta", {})
+        if meta.get("registry_format_version") != REGISTRY_FORMAT_VERSION:
+            raise RegistryError(
+                f"{name!r} was saved under registry format "
+                f"{meta.get('registry_format_version')}, this build reads "
+                f"{REGISTRY_FORMAT_VERSION}"
+            )
+        if meta.get("plan_format_version") != spmm.PLAN_FORMAT_VERSION:
+            raise RegistryError(
+                f"{name!r} was saved under plan format "
+                f"{meta.get('plan_format_version')}, this build is "
+                f"{spmm.PLAN_FORMAT_VERSION}"
+            )
+        arrays: Dict[str, np.ndarray] = {}
+        try:
+            for lname, info in manifest["leaves"].items():
+                chunks = [
+                    np.load(os.path.join(entry, f"{lname}.s{i}.npy"),
+                            allow_pickle=False)
+                    for i in range(info["shards"])
+                ]
+                arr = (np.concatenate(chunks, axis=0) if len(chunks) > 1
+                       else chunks[0])
+                if list(arr.shape) != list(info["shape"]) or (
+                        str(arr.dtype) != info["dtype"]):
+                    raise RegistryError(
+                        f"shard data for {name!r}/{lname} does not match "
+                        f"its manifest (got {arr.shape}/{arr.dtype}, "
+                        f"manifest says {info['shape']}/{info['dtype']})"
+                    )
+                arrays[lname] = arr
+        except RegistryError:
+            raise
+        except (OSError, ValueError, KeyError, EOFError) as e:
+            raise RegistryError(
+                f"corrupt or truncated registry entry for {name!r}: {e}"
+            ) from e
+        return meta, arrays
+
+    def load(self, name: str, **dynamic_kwargs) -> DynamicPlan:
+        """Restore a plan as a :class:`DynamicPlan` without any prepare()."""
+        meta, arrays = self._read_entry(name)
+        try:
+            cfg = spmm.SpmmConfig(**meta["config"])
+            stats = tuple(tuple(kv) for kv in meta["stats"])
+            shape = tuple(meta["shape"])
+            maps = spmm.UpdateMaps(
+                shape=shape,
+                **{n: arrays[f"maps_{n}"] for n in _MAPS_NAMES},
+            )
+            leaves = tuple(
+                jnp.asarray(arrays[f"leaf_{n}"]) for n in _LEAF_NAMES
+            )
+            plan = spmm.NeutronPlan(
+                *leaves, shape=shape, config=cfg, stats=stats,
+                fringe_tier=meta["fringe_tier"],
+                fringe_bk=int(meta["fringe_bk"]),
+                update_maps=maps,
+            )
+        except (KeyError, TypeError, ValueError) as e:
+            raise RegistryError(
+                f"registry entry for {name!r} does not reconstruct a "
+                f"plan: {e}"
+            ) from e
+        if repr(plan.signature()) != meta.get("signature"):
+            raise RegistryError(
+                f"restored plan signature for {name!r} disagrees with the "
+                "manifest — refusing to serve a structurally inconsistent "
+                "plan"
+            )
+        dplan = DynamicPlan(plan, **dynamic_kwargs)
+        keys = arrays["delta_keys"]
+        has_target = arrays["delta_has_target"]
+        targets = arrays["delta_targets"]
+        dplan._overlay = {
+            int(key): (float(targets[i]) if has_target[i] else None)
+            for i, key in enumerate(keys)
+        }
+        dplan.compactions = int(meta.get("compactions", 0))
+        return dplan
+
+    def stored_coo_hash(self, name: str) -> str:
+        meta, _ = self._read_entry(name)
+        return meta["coo_hash"]
+
+    def load_or_prepare(
+        self,
+        name: str,
+        rows: np.ndarray,
+        cols: np.ndarray,
+        vals: np.ndarray,
+        shape: Tuple[int, int],
+        config: spmm.SpmmConfig = spmm.SpmmConfig(),
+        **dynamic_kwargs,
+    ) -> DynamicPlan:
+        """Warm-start from disk when the stored entry matches this matrix;
+        otherwise prepare fresh and persist.  Corruption falls back to
+        re-prepare — a damaged registry can cost time, never correctness.
+        """
+        fp = coo_fingerprint(rows, cols, vals, shape, config)
+        if self.has(name):
+            try:
+                meta, _ = self._read_entry(name)
+                if meta.get("coo_hash") == fp:
+                    return self.load(name, **dynamic_kwargs)
+            except RegistryError:
+                pass  # fall through to a fresh prepare
+        dplan = DynamicPlan(
+            spmm.prepare(rows, cols, vals, shape, config), **dynamic_kwargs
+        )
+        self.save(name, dplan)
+        return dplan

@@ -23,6 +23,16 @@ Impl = Literal["pallas", "pallas_interpret", "xla"]
 FringeTier = Literal["auto", "resident", "ksharded", "xla"]
 
 
+def pow2_at_least(n: int) -> int:
+    """Smallest power of two >= n (shared by the serving batch buckets and
+    the dynamic delta-sidecar capacity growth — both bound retraces by
+    quantizing runtime-varying sizes to powers of two)."""
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
 def effective_chunk(chunk: int | None) -> int:
     """Per-grid-step nonzero count the pallas fringe kernels actually use.
 
@@ -174,3 +184,49 @@ def fringe_spmm(
             interpret=(impl == "pallas_interpret"),
         )
     return ref.ref_gather_spmm(rows, cols, vals, b, num_rows, chunk=chunk)
+
+
+def delta_fringe_spmm(
+    rows: jax.Array,
+    cols: jax.Array,
+    vals: jax.Array,
+    b: jax.Array,
+    *,
+    num_rows: int,
+    bn: int = 256,
+    impl: Impl = "xla",
+    chunk: int | None = None,
+    tier: FringeTier = "xla",
+    bk: int = 0,
+    kb_chunk: jax.Array | None = None,
+    kb_rows: jax.Array | None = None,
+    kb_cols: jax.Array | None = None,
+    kb_vals: jax.Array | None = None,
+) -> jax.Array:
+    """Dispatch a dynamic *delta sidecar* through the fringe tier machinery.
+
+    A delta stream (dynamic/delta.py) is a capacity-padded COO: mutations
+    accumulate in place and padding entries are (row 0, col 0, value 0.0) —
+    accumulate-inert in every tier, exactly like the sharded executor's
+    fringe padding.  The stream is rebuilt host-side per mutation batch but
+    its *shapes* only change when capacity doubles, so the executors that
+    embed this dispatch retrace logarithmically in delta size.  Shares every
+    kernel with the plan-driven path: the sidecar is just one more fringe,
+    coordinated by the same VMEM-tier selection.
+    """
+    if rows.shape != cols.shape or rows.shape != vals.shape:
+        raise ValueError(
+            f"delta stream triplets disagree: rows={tuple(rows.shape)} "
+            f"cols={tuple(cols.shape)} vals={tuple(vals.shape)}"
+        )
+    if tier == "ksharded" and impl != "xla" and kb_rows is None:
+        raise ValueError(
+            "delta tier='ksharded' needs the k-bucketed sidecar stream; "
+            "dynamic.delta.DeltaFringe builds it at materialization time"
+        )
+    return fringe_spmm(
+        rows, cols, vals, b,
+        num_rows=num_rows, bn=bn, impl=impl, chunk=chunk, tier=tier, bk=bk,
+        kb_chunk=kb_chunk, kb_rows=kb_rows, kb_cols=kb_cols,
+        kb_vals=kb_vals,
+    )

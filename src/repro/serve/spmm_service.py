@@ -2,12 +2,24 @@
 
 Serving-style SpMM traffic is many small right-hand sides against a few
 long-lived sparse matrices (GNN inference over a fixed graph, repeated
-feature panels).  ``SpmmService`` keeps one prepared ``NeutronPlan`` per
-registered matrix and drains queued requests through the batched
-``core.spmm.execute`` path: each flush stacks up to ``max_batch`` panels
-into one ``(batch, K, N)`` operand, padded up to a power-of-two bucket so
-the vmapped executor compiles once per ``(plan signature, bucket)`` instead
-of once per ragged batch size.
+feature panels).  ``SpmmService`` keeps one prepared plan per registered
+matrix and drains queued requests through the batched ``core.spmm.execute``
+path: each flush stacks up to ``max_batch`` panels into one ``(batch, K,
+N)`` operand, padded up to a power-of-two bucket so the vmapped executor
+compiles once per ``(plan signature, bucket)`` instead of once per ragged
+batch size.
+
+Dynamic graphs: every registered matrix is wrapped in a
+``dynamic.DynamicPlan``, so ``update_matrix(name, delta)`` applies edge
+inserts/deletes/value changes between flushes — value changes scatter into
+the device-resident plan (retrace-free), structural changes ride the delta
+sidecar until the cost model folds them in.  ``update_matrix`` drains that
+matrix's queue first, so requests always execute against the matrix state
+they were submitted under.
+
+Persistence: pass a ``dynamic.PlanRegistry`` and ``register`` warm-starts
+from disk when the stored entry matches the given COO (no ``prepare()``
+run); ``warm_start`` restores by name alone.  Updates re-persist the plan.
 
 Multi-device deployments pass a ``ShardedPlan`` via ``register_sharded`` —
 the flush path is identical because ``execute_sharded`` accepts the same
@@ -23,18 +35,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import spmm
-
-
-def _pow2_at_least(n: int) -> int:
-    b = 1
-    while b < n:
-        b *= 2
-    return b
+from ..dynamic import DynamicPlan, GraphDelta, PlanRegistry
+from ..kernels.ops import pow2_at_least
 
 
 def _bucket(batch: int, max_batch: int) -> int:
     """Smallest power-of-two >= batch, capped at max_batch (itself pow2)."""
-    return min(_pow2_at_least(batch), max_batch)
+    return min(pow2_at_least(batch), max_batch)
 
 
 @dataclasses.dataclass
@@ -43,6 +50,8 @@ class ServiceStats:
     flushes: int = 0
     dispatches: int = 0
     padded_slots: int = 0  # zero panels added to reach a bucket size
+    updates: int = 0       # update_matrix calls applied
+    warm_starts: int = 0   # registrations served from the registry
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -52,14 +61,22 @@ class SpmmService:
     """Plan-cached, request-batching SpMM front end."""
 
     def __init__(self, config: spmm.SpmmConfig = spmm.SpmmConfig(),
-                 max_batch: int = 8):
+                 max_batch: int = 8,
+                 registry: Optional[PlanRegistry] = None,
+                 persist_updates: bool = True):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.config = config
+        # registry.save serializes the whole plan (O(matrix), blocking disk
+        # I/O) — durable-by-default, but heavy mutation streams over large
+        # matrices can set persist_updates=False to persist only on
+        # registration and compaction (when base arrays actually change)
+        self.persist_updates = persist_updates
         # rounded up to a power of two: a non-pow2 cap would add itself as
         # an extra bucket size, breaking the log2(max_batch)+1 trace bound
-        self.max_batch = _pow2_at_least(int(max_batch))
-        self._plans: Dict[str, Any] = {}  # NeutronPlan | ShardedPlan
+        self.max_batch = pow2_at_least(int(max_batch))
+        self.registry = registry
+        self._plans: Dict[str, Any] = {}  # DynamicPlan | ShardedPlan
         self._queues: Dict[str, List[Tuple[int, jax.Array]]] = {}
         self._results: Dict[int, jax.Array] = {}
         self._next_ticket = 0
@@ -74,15 +91,42 @@ class SpmmService:
         vals: np.ndarray,
         shape: Tuple[int, int],
     ) -> None:
-        """Prepare and cache a plan for a named sparse matrix."""
+        """Prepare (or restore from the registry) a plan for a matrix."""
         self._check_reregister(name)
-        self._plans[name] = spmm.prepare(rows, cols, vals, shape, self.config)
+        if self.config.reorder_cols:
+            # DynamicPlan rejects reorder_cols (sidecar columns address the
+            # un-permuted operand); such matrices still serve — as static
+            # plans, with update_matrix unavailable
+            dplan: Any = spmm.prepare(rows, cols, vals, shape, self.config)
+        elif self.registry is not None:
+            before = spmm.prepare_call_count()
+            dplan = self.registry.load_or_prepare(
+                name, rows, cols, vals, shape, self.config
+            )
+            if spmm.prepare_call_count() == before:
+                self.stats.warm_starts += 1
+        else:
+            dplan = DynamicPlan(
+                spmm.prepare(rows, cols, vals, shape, self.config)
+            )
+        self._plans[name] = dplan
+        self._queues.setdefault(name, [])
+
+    def warm_start(self, name: str) -> None:
+        """Restore a matrix purely from the registry (no COO, no prepare)."""
+        if self.registry is None:
+            raise ValueError("warm_start needs a service registry")
+        self._check_reregister(name)
+        self._plans[name] = self.registry.load(name)
+        self.stats.warm_starts += 1
         self._queues.setdefault(name, [])
 
     def register_sharded(self, name: str, splan: spmm.ShardedPlan) -> None:
         """Serve a matrix through an already-prepared multi-device plan."""
         self._check_reregister(name)
-        self._plans[name] = splan
+        self._plans[name] = (
+            DynamicPlan(splan) if splan.update_maps is not None else splan
+        )
         self._queues.setdefault(name, [])
 
     def _check_reregister(self, name: str) -> None:
@@ -97,6 +141,36 @@ class SpmmService:
     def plan(self, name: str):
         return self._plans[name]
 
+    def _inner_plan(self, name: str):
+        p = self._plans[name]
+        return p.plan if isinstance(p, DynamicPlan) else p
+
+    # -- dynamic updates ----------------------------------------------------
+    def update_matrix(self, name: str, delta: GraphDelta) -> Dict[str, int]:
+        """Apply a mutation batch to a registered matrix.
+
+        Pending requests for that matrix are flushed first (they were
+        submitted against the pre-update matrix), other queues are left
+        alone, and — when a registry is attached — the updated plan state
+        is re-persisted so a restart resumes from the mutated matrix.
+        """
+        if name not in self._plans:
+            raise KeyError(f"no matrix registered under {name!r}")
+        dplan = self._plans[name]
+        if not isinstance(dplan, DynamicPlan):
+            raise ValueError(
+                f"{name!r} was registered without update maps; re-register "
+                "through register()/register_sharded with a maps-carrying "
+                "plan to enable updates"
+            )
+        self.flush(name=name)
+        stats = dplan.update(delta)
+        self.stats.updates += 1
+        if self.registry is not None and not dplan.is_sharded and (
+                self.persist_updates or stats["compacted"]):
+            self.registry.save(name, dplan)
+        return stats
+
     # -- request queue ------------------------------------------------------
     def submit(self, name: str, b: jax.Array) -> int:
         """Queue one (K, N) request panel; returns a result ticket.
@@ -106,7 +180,7 @@ class SpmmService:
         strand the whole batch."""
         if name not in self._plans:
             raise KeyError(f"no matrix registered under {name!r}")
-        plan = self._plans[name]
+        plan = self._inner_plan(name)
         k = plan.shape[1]
         if b.ndim != 2 or b.shape[0] != k:
             raise ValueError(
@@ -133,13 +207,17 @@ class SpmmService:
 
     # -- batched execution --------------------------------------------------
     def _execute(self, plan, stacked: jax.Array) -> jax.Array:
+        if isinstance(plan, DynamicPlan):
+            return plan.execute(stacked)
         if isinstance(plan, spmm.ShardedPlan):
             return spmm.execute_sharded(plan, stacked)
         return spmm.execute(plan, stacked)
 
-    def flush(self) -> int:
-        """Drain every queue through batched dispatches; returns the number
-        of requests completed.  Results become available via ``fetch``.
+    def flush(self, name: Optional[str] = None) -> int:
+        """Drain queues through batched dispatches; returns the number of
+        requests completed.  ``name`` drains a single matrix's queue —
+        dynamic updates to one matrix never force dispatching every queue.
+        Results become available via ``fetch``.
 
         Requests for one matrix may carry different widths N; panels are
         grouped by shape before stacking (a mixed-width stack would raise
@@ -147,9 +225,15 @@ class SpmmService:
         succeeds, so an unexpected execute failure propagates with every
         undispatched request still queued — nothing is stranded
         result-less."""
+        if name is not None and name not in self._queues:
+            raise KeyError(f"no matrix registered under {name!r}")
+        selected = (
+            self._queues.items() if name is None
+            else [(name, self._queues[name])]
+        )
         done = 0
-        for name, queue in self._queues.items():
-            plan = self._plans[name]
+        for qname, queue in selected:
+            plan = self._plans[qname]
             while queue:
                 # FIFO head's shape defines this round's group
                 shape = tuple(queue[0][1].shape)
@@ -173,5 +257,18 @@ class SpmmService:
         return done
 
     def fetch(self, ticket: int) -> jax.Array:
-        """Pop a completed result; raises KeyError until flushed."""
-        return self._results.pop(ticket)
+        """Pop a completed result (each ticket is fetchable exactly once).
+
+        Raises a KeyError that says *why* the ticket has no result:
+        never issued, still queued (flush first), or already fetched."""
+        if ticket in self._results:
+            return self._results.pop(ticket)
+        if any(t == ticket for q in self._queues.values() for t, _ in q):
+            raise KeyError(
+                f"ticket {ticket} is still queued; call flush() first"
+            )
+        if 0 <= ticket < self._next_ticket:
+            raise KeyError(
+                f"ticket {ticket} was already fetched (results pop once)"
+            )
+        raise KeyError(f"unknown ticket {ticket} (never issued)")

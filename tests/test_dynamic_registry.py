@@ -1,0 +1,255 @@
+"""Persistent plan registry: warm-start, delta state, corruption handling.
+
+The robustness contract: a damaged or stale registry entry may cost a
+re-``prepare()`` (``load_or_prepare`` falls back), but it must never be
+silently served — truncated shards, mangled manifests, and format-version
+drift all raise a clean :class:`RegistryError` first.
+"""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import spmm
+from repro.dynamic import (
+    DynamicPlan, GraphDelta, PlanRegistry, RegistryError,
+)
+from repro.dynamic import registry as registry_mod
+from repro.serve import SpmmService
+from conftest import make_sparse
+
+CFG = spmm.SpmmConfig(impl="xla")
+
+
+def _graph(rng, m=80, k=64):
+    a, rows, cols, vals = make_sparse(rng, m, k, 0.08, n_dense_rows=3)
+    return a, rows, cols, vals
+
+
+def _entry_dir(root, name):
+    d = os.path.join(root, name)
+    steps = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+    return os.path.join(d, steps[-1])
+
+
+def test_registry_round_trip_without_prepare(rng, tmp_path):
+    a, rows, cols, vals = _graph(rng)
+    reg = PlanRegistry(str(tmp_path))
+    dp = DynamicPlan(spmm.prepare(rows, cols, vals, a.shape, CFG))
+    b = jnp.asarray(rng.randn(64, 12).astype(np.float32))
+    want = np.asarray(dp.execute(b))
+    reg.save("g", dp)
+
+    before = spmm.prepare_call_count()
+    restored = reg.load("g")
+    assert spmm.prepare_call_count() == before  # no prepare() on restore
+    assert np.array_equal(np.asarray(restored.execute(b)), want)
+    # restored plans stay updatable (maps round-tripped)
+    idx = rng.choice(rows.size, 5, replace=False)
+    nv = rng.randn(5)
+    restored.update(GraphDelta.updates(rows[idx], cols[idx], nv))
+    vals2 = vals.copy().astype(np.float64)
+    vals2[idx] = nv
+    ref = spmm.prepare(rows, cols, vals2, a.shape, CFG)
+    assert np.array_equal(np.asarray(restored.plan.fringe_vals),
+                          np.asarray(ref.fringe_vals))
+
+
+def test_registry_round_trips_delta_state(rng, tmp_path):
+    a, rows, cols, vals = _graph(rng)
+    reg = PlanRegistry(str(tmp_path))
+    dp = DynamicPlan(spmm.prepare(rows, cols, vals, a.shape, CFG),
+                     auto_compact=False)
+    dense = np.zeros(a.shape, np.float64)
+    np.add.at(dense, (rows, cols), vals)
+    zr, zc = np.nonzero(dense == 0)
+    pick = rng.choice(zr.size, 7, replace=False)
+    iv = rng.randn(7)
+    dp.update(GraphDelta.inserts(zr[pick], zc[pick], iv))
+    dense[zr[pick], zc[pick]] += iv
+    dp.update(GraphDelta.deletes(rows[:3], cols[:3]))
+    dense[rows[:3], cols[:3]] = 0
+    reg.save("g", dp)
+
+    restored = reg.load("g")
+    assert restored.delta_nnz == dp.delta_nnz
+    b = jnp.asarray(rng.randn(64, 8).astype(np.float32))
+    out = np.asarray(restored.execute(b))
+    expect = dense @ np.asarray(b, np.float64)
+    scale = np.abs(expect).max() + 1e-9
+    assert np.abs(out - expect).max() / scale < 1e-4
+
+
+def test_load_or_prepare_warm_and_cold(rng, tmp_path):
+    a, rows, cols, vals = _graph(rng)
+    reg = PlanRegistry(str(tmp_path))
+    dp = reg.load_or_prepare("g", rows, cols, vals, a.shape, CFG)
+    assert reg.has("g")
+    before = spmm.prepare_call_count()
+    warm = reg.load_or_prepare("g", rows, cols, vals, a.shape, CFG)
+    assert spmm.prepare_call_count() == before  # warm: no prepare
+    b = jnp.asarray(rng.randn(64, 8).astype(np.float32))
+    assert np.array_equal(np.asarray(warm.execute(b)),
+                          np.asarray(dp.execute(b)))
+    # a different matrix under the same name must NOT reuse the entry
+    vals2 = vals.copy()
+    vals2[0] += 1.0
+    cold = reg.load_or_prepare("g", rows, cols, vals2, a.shape, CFG)
+    assert spmm.prepare_call_count() > before
+    a2 = a.astype(np.float64).copy()
+    a2[rows[0], cols[0]] += 1.0
+    out = np.asarray(cold.execute(b))
+    expect = a2 @ np.asarray(b, np.float64)
+    assert np.abs(out - expect).max() / (np.abs(expect).max() + 1e-9) < 1e-4
+
+
+def test_truncated_shard_raises_then_falls_back(rng, tmp_path):
+    """A truncated shard file is a clean RegistryError, and load_or_prepare
+    answers it with a fresh prepare — never a wrong answer."""
+    a, rows, cols, vals = _graph(rng)
+    reg = PlanRegistry(str(tmp_path))
+    reg.save("g", DynamicPlan(spmm.prepare(rows, cols, vals, a.shape, CFG)))
+    entry = _entry_dir(str(tmp_path), "g")
+    victim = os.path.join(entry, "leaf_flat_values.s0.npy")
+    size = os.path.getsize(victim)
+    with open(victim, "r+b") as f:
+        f.truncate(size // 2)
+    with pytest.raises(RegistryError, match="corrupt|truncated"):
+        reg.load("g")
+    before = spmm.prepare_call_count()
+    dp = reg.load_or_prepare("g", rows, cols, vals, a.shape, CFG)
+    assert spmm.prepare_call_count() > before  # fell back to prepare
+    b = jnp.asarray(rng.randn(64, 8).astype(np.float32))
+    out = np.asarray(dp.execute(b))
+    expect = a.astype(np.float64) @ np.asarray(b, np.float64)
+    assert np.abs(out - expect).max() / (np.abs(expect).max() + 1e-9) < 1e-4
+
+
+def test_shape_mismatched_shard_is_rejected(rng, tmp_path):
+    """A shard that np.load accepts but that disagrees with its manifest
+    (e.g. a partial write of a valid smaller array) is still rejected."""
+    a, rows, cols, vals = _graph(rng)
+    reg = PlanRegistry(str(tmp_path))
+    reg.save("g", DynamicPlan(spmm.prepare(rows, cols, vals, a.shape, CFG)))
+    entry = _entry_dir(str(tmp_path), "g")
+    np.save(os.path.join(entry, "maps_vals.s0.npy"),
+            np.zeros(3, np.float32))
+    with pytest.raises(RegistryError, match="does not match its manifest"):
+        reg.load("g")
+
+
+def test_corrupt_manifest_raises(rng, tmp_path):
+    a, rows, cols, vals = _graph(rng)
+    reg = PlanRegistry(str(tmp_path))
+    reg.save("g", DynamicPlan(spmm.prepare(rows, cols, vals, a.shape, CFG)))
+    entry = _entry_dir(str(tmp_path), "g")
+    with open(os.path.join(entry, "manifest.json"), "w") as f:
+        f.write("{not json")
+    with pytest.raises(RegistryError, match="manifest"):
+        reg.load("g")
+
+
+def test_format_version_mismatch_raises(rng, tmp_path):
+    a, rows, cols, vals = _graph(rng)
+    reg = PlanRegistry(str(tmp_path))
+    reg.save("g", DynamicPlan(spmm.prepare(rows, cols, vals, a.shape, CFG)))
+    entry = _entry_dir(str(tmp_path), "g")
+    mpath = os.path.join(entry, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["meta"]["plan_format_version"] = -1
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(RegistryError, match="plan format"):
+        reg.load("g")
+
+
+def test_missing_entry_and_bad_names(tmp_path):
+    reg = PlanRegistry(str(tmp_path))
+    with pytest.raises(RegistryError, match="no registry entry"):
+        reg.load("nope")
+    with pytest.raises(ValueError, match="filesystem-safe"):
+        reg.save("../evil", None)
+
+
+def test_sharded_plans_refuse_serialization(rng, tmp_path):
+    from repro.launch.mesh import make_spmm_mesh
+
+    a, rows, cols, vals = _graph(rng)
+    splan = spmm.prepare_sharded(rows, cols, vals, a.shape,
+                                 make_spmm_mesh(1), CFG, shard_axis="rows")
+    reg = PlanRegistry(str(tmp_path))
+    with pytest.raises(RegistryError, match="not serializable"):
+        reg.save("g", DynamicPlan(splan))
+
+
+def test_service_warm_starts_from_registry(rng, tmp_path):
+    """The acceptance path: a new service process restores from disk
+    without calling prepare() and serves correct results immediately."""
+    a, rows, cols, vals = _graph(rng)
+    b = rng.randn(64, 8).astype(np.float32)
+
+    reg = PlanRegistry(str(tmp_path))
+    svc1 = SpmmService(CFG, max_batch=4, registry=reg)
+    svc1.register("g", rows, cols, vals, a.shape)
+    t = svc1.submit("g", b)
+    svc1.flush()
+    want = np.asarray(svc1.fetch(t))
+
+    # "restart": a fresh service over the same registry
+    svc2 = SpmmService(CFG, max_batch=4, registry=reg)
+    before = spmm.prepare_call_count()
+    svc2.register("g", rows, cols, vals, a.shape)
+    assert spmm.prepare_call_count() == before  # warm start, no prepare
+    assert svc2.stats.warm_starts == 1
+    t2 = svc2.submit("g", b)
+    svc2.flush()
+    assert np.array_equal(np.asarray(svc2.fetch(t2)), want)
+
+    # name-only restore (no COO in hand at startup)
+    svc3 = SpmmService(CFG, max_batch=4, registry=reg)
+    before = spmm.prepare_call_count()
+    svc3.warm_start("g")
+    assert spmm.prepare_call_count() == before
+    t3 = svc3.submit("g", b)
+    svc3.flush()
+    assert np.array_equal(np.asarray(svc3.fetch(t3)), want)
+
+
+def test_service_updates_persist_across_restart(rng, tmp_path):
+    a, rows, cols, vals = _graph(rng)
+    b = rng.randn(64, 8).astype(np.float32)
+    reg = PlanRegistry(str(tmp_path))
+    svc1 = SpmmService(CFG, max_batch=4, registry=reg)
+    svc1.register("g", rows, cols, vals, a.shape)
+    dense = np.zeros(a.shape, np.float64)
+    np.add.at(dense, (rows, cols), vals)
+    zr, zc = np.nonzero(dense == 0)
+    pick = rng.choice(zr.size, 5, replace=False)
+    iv = rng.randn(5)
+    svc1.update_matrix("g", GraphDelta.inserts(zr[pick], zc[pick], iv))
+    dense[zr[pick], zc[pick]] += iv
+
+    svc2 = SpmmService(CFG, max_batch=4, registry=reg)
+    before = spmm.prepare_call_count()
+    svc2.warm_start("g")
+    assert spmm.prepare_call_count() == before
+    t = svc2.submit("g", b)
+    svc2.flush()
+    out = np.asarray(svc2.fetch(t))
+    expect = dense @ np.asarray(b, np.float64)
+    assert np.abs(out - expect).max() / (np.abs(expect).max() + 1e-9) < 1e-4
+
+
+def test_registry_retention_keeps_newest(rng, tmp_path):
+    a, rows, cols, vals = _graph(rng)
+    reg = PlanRegistry(str(tmp_path), keep=2)
+    dp = DynamicPlan(spmm.prepare(rows, cols, vals, a.shape, CFG))
+    for _ in range(4):
+        reg.save("g", dp)
+    d = os.path.join(str(tmp_path), "g")
+    steps = [x for x in os.listdir(d) if x.startswith("step_")]
+    assert len(steps) == 2  # checkpoint-style GC
+    reg.load("g")  # newest entry still loads

@@ -4,6 +4,8 @@ import numpy as np
 import pytest
 
 from repro.core import spmm
+from repro.data import graphs
+from repro.dynamic import GraphDelta
 from repro.launch.mesh import make_spmm_mesh
 from repro.serve import SpmmService
 from conftest import make_sparse
@@ -157,3 +159,110 @@ def test_sharded_plan_backend(rng):
     svc.flush()
     np.testing.assert_allclose(np.asarray(svc.fetch(t)), a @ p,
                                rtol=1e-4, atol=1e-4)
+
+
+def test_per_matrix_flush_leaves_other_queues(rng):
+    """flush(name=...) drains one queue; other matrices stay pending, so a
+    dynamic update to one matrix never forces dispatching every queue."""
+    svc = SpmmService(spmm.SpmmConfig(impl="xla"), max_batch=4)
+    a = _register(svc, rng, name="g1")
+    a2 = _register(svc, rng, name="g2", m=50, k=40)
+    t1 = svc.submit("g1", rng.randn(70, 8).astype(np.float32))
+    t2 = svc.submit("g2", rng.randn(40, 8).astype(np.float32))
+    assert svc.flush(name="g1") == 1
+    assert svc.pending("g1") == 0
+    assert svc.pending("g2") == 1  # untouched
+    svc.fetch(t1)
+    with pytest.raises(KeyError, match="still queued"):
+        svc.fetch(t2)
+    with pytest.raises(KeyError, match="no matrix registered"):
+        svc.flush(name="unknown")
+    svc.flush(name="g2")
+    svc.fetch(t2)
+
+
+def test_fetch_raises_clear_keyerrors(rng):
+    svc = SpmmService(spmm.SpmmConfig(impl="xla"), max_batch=4)
+    _register(svc, rng)
+    t = svc.submit("g", rng.randn(70, 8).astype(np.float32))
+    with pytest.raises(KeyError, match="still queued"):
+        svc.fetch(t)
+    svc.flush()
+    svc.fetch(t)
+    with pytest.raises(KeyError, match="already fetched"):
+        svc.fetch(t)
+    with pytest.raises(KeyError, match="never issued"):
+        svc.fetch(999)
+
+
+def test_update_matrix_serves_mutated_results(rng):
+    """update_matrix flushes that matrix's pre-update requests, applies the
+    delta, and later submits see the mutated matrix."""
+    svc = SpmmService(spmm.SpmmConfig(impl="xla"), max_batch=4)
+    a = _register(svc, rng)
+    dense = a.astype(np.float64).copy()
+    p = rng.randn(70, 8).astype(np.float32)
+    t_pre = svc.submit("g", p)
+
+    rows, cols = np.nonzero(a)
+    zr, zc = np.nonzero(a == 0)
+    pick = rng.choice(zr.size, 6, replace=False)
+    iv = rng.randn(6)
+    delta = GraphDelta(
+        ins_rows=zr[pick], ins_cols=zc[pick], ins_vals=iv,
+        del_rows=rows[:4], del_cols=cols[:4],
+    )
+    stats = svc.update_matrix("g", delta)
+    assert stats["delta_nnz"] >= 0
+    # the pre-update request was drained against the OLD matrix
+    np.testing.assert_allclose(np.asarray(svc.fetch(t_pre)), dense @ p,
+                               rtol=1e-4, atol=1e-4)
+    dense[zr[pick], zc[pick]] += iv
+    dense[rows[:4], cols[:4]] = 0
+    t_post = svc.submit("g", p)
+    svc.flush()
+    np.testing.assert_allclose(np.asarray(svc.fetch(t_post)), dense @ p,
+                               rtol=1e-4, atol=1e-4)
+    assert svc.stats.updates == 1
+    with pytest.raises(KeyError):
+        svc.update_matrix("nope", delta)
+
+
+def test_reorder_cols_config_still_serves(rng):
+    """reorder_cols plans can't carry a delta sidecar, but registering and
+    serving them must keep working (update_matrix is what's unavailable)."""
+    svc = SpmmService(spmm.SpmmConfig(impl="xla", reorder_cols=True),
+                      max_batch=2)
+    a = _register(svc, rng)
+    p = rng.randn(70, 8).astype(np.float32)
+    t = svc.submit("g", p)
+    svc.flush()
+    np.testing.assert_allclose(np.asarray(svc.fetch(t)), a @ p,
+                               rtol=1e-4, atol=1e-4)
+    with pytest.raises(ValueError, match="update"):
+        svc.update_matrix("g", GraphDelta.deletes([0], [0]))
+
+
+def test_update_matrix_over_mutation_stream(rng):
+    """Drive the service with data.graphs.mutate — the dynamic-serving
+    workload end to end, checked against a dense mirror every step."""
+    svc = SpmmService(spmm.SpmmConfig(impl="xla"), max_batch=4)
+    a = _register(svc, rng)
+    dense = a.astype(np.float64).copy()
+    rows, cols = np.nonzero(a)
+    vals = a[rows, cols]
+    p = rng.randn(70, 8).astype(np.float32)
+    for delta in graphs.mutate(rows, cols, vals, a.shape, steps=4,
+                               insert_frac=0.04, delete_frac=0.03,
+                               update_frac=0.08, seed=5):
+        svc.update_matrix("g", delta)
+        for r, c, v in zip(delta.ins_rows, delta.ins_cols, delta.ins_vals):
+            dense[r, c] += v
+        for r, c in zip(delta.del_rows, delta.del_cols):
+            dense[r, c] = 0.0
+        for r, c, v in zip(delta.upd_rows, delta.upd_cols, delta.upd_vals):
+            dense[r, c] = v
+        t = svc.submit("g", p)
+        svc.flush(name="g")
+        np.testing.assert_allclose(np.asarray(svc.fetch(t)), dense @ p,
+                                   rtol=1e-4, atol=1e-4)
