@@ -1,14 +1,31 @@
-"""NeutronSparse core: coordination-first SpMM for tile-centric accelerators."""
-from . import coordinator, cost_model, formats, partition, reorder, reuse, spmm
-from .cost_model import EngineCostModel, default_cost_model
-from .spmm import (
-    NeutronPlan, NeutronSpMM, ShardedPlan, SpmmConfig, execute,
-    execute_sharded, neutron_spmm, prepare, prepare_sharded,
+"""NeutronSparse core: coordination-first SpMM for tile-centric accelerators.
+
+The execution entry points (``execute``/``execute_sharded``/``neutron_spmm``)
+are implemented in the ``repro.exec`` pipeline and forwarded lazily here —
+importing the core package never pulls the executor (or any upper) layer.
+"""
+from . import (
+    coordinator, cost_model, formats, partition, plan_ir, reorder, reuse,
+    spmm,
 )
+from .cost_model import EngineCostModel, default_cost_model
+from .plan_ir import NeutronPlan, ShardedPlan, SpmmConfig
+from .spmm import prepare, prepare_sharded
+
+# NeutronSpMM lives in exec.api too: forwarding it lazily (not eagerly)
+# keeps `import repro.core` from pulling the executor layer in at all
+_SPMM_FORWARDS = ("execute", "execute_sharded", "neutron_spmm", "NeutronSpMM")
+
+
+def __getattr__(name: str):
+    if name in _SPMM_FORWARDS:
+        return getattr(spmm, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 __all__ = [
-    "coordinator", "cost_model", "formats", "partition", "reorder", "reuse",
-    "spmm", "EngineCostModel", "default_cost_model", "NeutronPlan",
-    "NeutronSpMM", "ShardedPlan", "SpmmConfig", "execute", "execute_sharded",
-    "neutron_spmm", "prepare", "prepare_sharded",
+    "coordinator", "cost_model", "formats", "partition", "plan_ir",
+    "reorder", "reuse", "spmm", "EngineCostModel", "default_cost_model",
+    "NeutronPlan", "NeutronSpMM", "ShardedPlan", "SpmmConfig", "execute",
+    "execute_sharded", "neutron_spmm", "prepare", "prepare_sharded",
 ]

@@ -1,0 +1,727 @@
+"""Plan IR: the pytree-centric representation every execution layer shares.
+
+This module owns the *static* side of NeutronSparse execution — the leaf
+layout, signatures, padding rules, and COO->slot inverse maps of the three
+plan families:
+
+- :class:`NeutronPlan` — a single-device prepared plan (flat tile stream for
+  the matrix engine, packed fringe COO + optional k-bucketed stream for the
+  vector engine, inverse row maps for the scatter-free gather merge);
+- :class:`ShardedPlan` — per-shard ``NeutronPlan`` leaves stacked along a
+  leading mesh axis (``shard_axis="rows"``) or one replicated plan with the
+  RHS column-sharded (``shard_axis="rhs"``);
+- :class:`DeltaFringe` / :class:`ShardedDeltaFringe` — the capacity-padded
+  structural-delta sidecar the dynamic subsystem merges additively into the
+  fused program (the sharded form routes every delta row to its owning
+  shard so the merge happens *inside* the ``shard_map`` body).
+
+The executor pipeline (``repro.exec``) consumes only what is defined here:
+``plan_leaves`` ordering, ``LEAF_RANKS``, signature tuples, and the padding
+invariants (padded tile steps carry zero values into a dedicated extra
+window; padded fringe/kb entries are accumulate-inert; padded gather slots
+are -1).  Plan *construction* lives in ``core.spmm``; this module has no
+knowledge of meshes beyond leaf stacking and never imports upward
+(``exec``/``dynamic``/``serve`` — enforced by ``tools/check_layers.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from .cost_model import select_fringe_tier
+
+# Plan-format version: the leading element of every plan signature.  Bump it
+# whenever the static plan layout changes (leaf set, bucketing scheme, merge
+# semantics) so (a) executor caches never alias plans built by different
+# layouts within one process, and (b) the persistent plan registry
+# (dynamic/registry.py) can refuse plans serialized under an older layout
+# instead of misinterpreting their arrays.
+PLAN_FORMAT_VERSION = 1
+
+PATH_CORE = 0
+PATH_FRINGE = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class SpmmConfig:
+    bm: int = 128
+    bk: int = 64
+    bn: int = 256
+    alpha: Optional[float] = None          # override Eq. 3 threshold
+    enable_global_reorder: bool = True
+    enable_local_reorder: bool = True
+    reorder_cols: bool = False             # requires caller to pre-permute B
+    enable_col_stage: bool = True          # stage-2 column extraction
+    enable_reuse_order: bool = True
+    max_clusters: int = 64
+    impl: ops.Impl = "xla"
+    fringe_chunk: Optional[int] = None     # nonzeros per fringe grid step
+    fringe_vmem_budget: Optional[int] = None  # override dispatch-tier budget
+    seed: int = 0
+    # capacity of the process-wide executor cache (repro.exec): plans built
+    # with a set value adjust the cache when they execute; None keeps the
+    # current (default generous) capacity
+    executor_cache_capacity: Optional[int] = None
+
+
+@dataclasses.dataclass
+class UpdateMaps:
+    """Host-side COO->slot inverse maps, built once at ``prepare()`` time.
+
+    For every input nonzero ``j`` the maps record which device-resident plan
+    slot its value landed in, so the dynamic-update subsystem
+    (``dynamic.delta.update_values``) can scatter new values directly into
+    the prepared arrays — no re-prepare, no retrace.  ``vals`` tracks the
+    *current* value of each nonzero (updates advance it), which the
+    structural-delta layer also uses to negate deleted base entries.
+    """
+
+    shape: Tuple[int, int]
+    rows: np.ndarray             # (nnz,) int64 original COO rows
+    cols: np.ndarray             # (nnz,) int64 original COO cols
+    vals: np.ndarray             # (nnz,) current values (input dtype)
+    path: np.ndarray             # (nnz,) int8 PATH_CORE | PATH_FRINGE
+    core_lin: np.ndarray         # (nnz,) int64 flat slot in flat_values, -1
+    fringe_pos: np.ndarray       # (nnz,) int64 packed fringe slot, -1
+    kb_pos: np.ndarray           # (nnz,) int64 k-bucketed stream slot, -1
+    # slot->contributors CSR (duplicates accumulate into one tile cell, so a
+    # touched slot is recomputed from every contributor in input order — the
+    # same sequential fp32 accumulation prepare() performs, hence updated
+    # plans stay bit-identical to a fresh prepare)
+    core_lin_sorted: np.ndarray     # core slots sorted
+    core_members_sorted: np.ndarray  # nnz ids sorted by (slot, input order)
+    # (row, col) -> nnz id lookup (first occurrence wins for duplicates)
+    key_sorted: np.ndarray
+    key_order: np.ndarray
+
+    @property
+    def nnz(self) -> int:
+        return int(self.rows.shape[0])
+
+    def lookup(self, rows: np.ndarray, cols: np.ndarray) -> np.ndarray:
+        """nnz ids of the given (row, col) pairs; -1 where absent."""
+        keys = np.asarray(rows, np.int64) * self.shape[1] + np.asarray(
+            cols, np.int64
+        )
+        pos = np.searchsorted(self.key_sorted, keys)
+        pos = np.minimum(pos, max(self.key_sorted.size - 1, 0))
+        if self.key_sorted.size == 0:
+            return np.full(keys.shape, -1, np.int64)
+        found = self.key_sorted[pos] == keys
+        return np.where(found, self.key_order[pos], -1)
+
+
+@dataclasses.dataclass
+class ShardedUpdateMaps:
+    """COO->slot inverse maps for a rows-sharded plan.
+
+    Global nonzero ``j`` lives in shard ``shard_of_nnz[j]`` at position
+    ``local_of_nnz[j]`` of that shard's input arrays; ``shard_maps[s]`` are
+    the shard-local :class:`UpdateMaps` into the (prefix-preserving padded)
+    stacked leaves.  The global ``rows/cols/vals`` mirror serves the
+    structural-delta layer and compaction.
+    """
+
+    shape: Tuple[int, int]
+    rows: np.ndarray
+    cols: np.ndarray
+    vals: np.ndarray
+    shard_of_nnz: np.ndarray
+    local_of_nnz: np.ndarray
+    shard_maps: Tuple[UpdateMaps, ...]
+    key_sorted: np.ndarray
+    key_order: np.ndarray
+
+    @property
+    def nnz(self) -> int:
+        return int(self.rows.shape[0])
+
+    lookup = UpdateMaps.lookup
+
+
+def build_key_index(
+    rows: np.ndarray, cols: np.ndarray, k: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    key = rows.astype(np.int64) * k + cols
+    order = np.argsort(key, kind="stable")
+    return key[order], order
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class NeutronPlan:
+    """Prepared execution plan (jax pytree; shapes static per plan)."""
+
+    # matrix path: flat active-tile stream (window-major under reuse order)
+    step_window: jax.Array   # (T,) int32
+    step_col: jax.Array      # (T,) int32
+    flat_values: jax.Array   # (T, bm, bk)
+    core_row_map: jax.Array  # (num_windows*bm,) int32 -> original row (-1 pad)
+    # vector path: packed row-sorted fringe COO
+    fringe_rows: jax.Array   # (nnz_f,) int32 packed ids
+    fringe_cols: jax.Array   # (nnz_f,) int32
+    fringe_vals: jax.Array   # (nnz_f,)
+    fringe_row_ids: jax.Array  # (n_fringe_rows,) int32 original ids
+    col_perm: jax.Array      # (K,) int32 — B row perm (identity unless reorder_cols)
+    # scatter-free merge: inverse row maps (original row -> packed slot or -1)
+    gather_src_matrix: jax.Array  # (M,) int32 -> packed matrix-path row
+    gather_src_vector: jax.Array  # (M,) int32 -> packed vector-path row
+    # K-sharded streaming tier: fringe COO re-bucketed by k-block (sorted by
+    # (k-block, row, col), per-bucket chunk-padded, columns k-block-local);
+    # 1-element dummies unless fringe_tier == "ksharded"
+    fringe_kb_chunk: jax.Array  # (num_chunks,) int32, chunk -> k-block id
+    fringe_kb_rows: jax.Array   # (num_chunks*chunk,) int32
+    fringe_kb_cols: jax.Array   # (num_chunks*chunk,) int32
+    fringe_kb_vals: jax.Array   # (num_chunks*chunk,)
+
+    shape: Tuple[int, int]
+    config: SpmmConfig
+    stats: Tuple  # immutable (key, value) pairs
+    # vector-path kernel dispatch tier chosen at prepare time from the VMEM
+    # budget (cost_model.select_fringe_tier): "resident" | "ksharded" | "xla"
+    fringe_tier: str = "resident"
+    fringe_bk: int = 0           # k-block size of the ksharded tier (0 else)
+    # host-side COO->slot inverse maps for dynamic value updates.  Not a
+    # pytree leaf and not aux data (numpy payloads are unhashable): a plan
+    # round-tripped through tree operations comes back with maps=None and
+    # simply loses updatability, never correctness.
+    update_maps: Optional[UpdateMaps] = None
+
+    def tree_flatten(self):
+        leaves = (
+            self.step_window, self.step_col, self.flat_values, self.core_row_map,
+            self.fringe_rows, self.fringe_cols, self.fringe_vals,
+            self.fringe_row_ids, self.col_perm,
+            self.gather_src_matrix, self.gather_src_vector,
+            self.fringe_kb_chunk, self.fringe_kb_rows,
+            self.fringe_kb_cols, self.fringe_kb_vals,
+        )
+        return leaves, (
+            self.shape, self.config, self.stats,
+            self.fringe_tier, self.fringe_bk,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, *aux)
+
+    @property
+    def num_windows(self) -> int:
+        return self.core_row_map.shape[0] // self.config.bm
+
+    @property
+    def stats_dict(self) -> Dict:
+        return dict(self.stats)
+
+    @property
+    def has_core(self) -> bool:
+        return bool(self.stats_dict["core_nnz"])
+
+    @property
+    def has_fringe(self) -> bool:
+        return bool(self.stats_dict["fringe_nnz"])
+
+    def signature(self) -> Tuple:
+        """Static structure key: plans sharing it reuse one jitted executor.
+
+        Includes the vector-path dispatch tier and its k-block size: two
+        plans differing only in tier (e.g. from different VMEM budgets)
+        must not alias one cached executor.  The leading element is
+        ``PLAN_FORMAT_VERSION`` so executors (and the persistent registry,
+        which keys entries by signature) never cross plan-layout versions.
+        """
+        cfg = self.config
+        return (
+            PLAN_FORMAT_VERSION,
+            self.shape, cfg.bm, cfg.bk, cfg.bn, cfg.impl, cfg.reorder_cols,
+            cfg.fringe_chunk, self.num_windows,
+            int(self.step_window.shape[0]), int(self.fringe_rows.shape[0]),
+            int(self.fringe_row_ids.shape[0]), self.has_core, self.has_fringe,
+            self.fringe_tier, self.fringe_bk,
+            int(self.fringe_kb_chunk.shape[0]),
+            int(self.fringe_kb_rows.shape[0]),
+        )
+
+
+@dataclasses.dataclass
+class ShardedPlan:
+    """Prepared multi-device execution plan.
+
+    ``shard_axis == "rows"``: plan leaves are stacked along a leading shard
+    dim; device s executes shard s's sub-plan and emits its packed
+    ``(rows_per_shard, N)`` block; ``assemble`` maps original rows into the
+    all-gathered stack.  ``shard_axis == "rhs"``: one replicated plan, B
+    columns sharded (the cost model picks this when the row-window
+    distribution is too skewed to balance, or there are fewer windows than
+    devices).
+    """
+
+    leaves: Tuple[jax.Array, ...]   # fused-body args (stacked iff "rows")
+    sig: Tuple                      # mesh-uniform per-shard signature
+    mesh: Any
+    axis_name: str
+    shard_axis: str                 # "rows" | "rhs"
+    n_shards: int
+    assemble: Optional[jax.Array]   # (M,) int32 into stacked rows ("rows")
+    shape: Tuple[int, int]
+    config: SpmmConfig
+    stats: Tuple
+    # host-side COO->slot maps for dynamic value updates (see UpdateMaps)
+    update_maps: Optional[ShardedUpdateMaps] = None
+    # padded per-shard row count ("rows" axis; 0 for "rhs").  assemble[r] ==
+    # shard_of(r) * rows_per_shard + local_of(r): the dynamic layer uses
+    # this to route delta-sidecar rows to their owning shards.
+    rows_per_shard: int = 0
+
+    @property
+    def stats_dict(self) -> Dict:
+        return dict(self.stats)
+
+    def signature(self) -> Tuple:
+        """Static structure key; never collides with NeutronPlan.signature()
+        (distinct leading tag + arity), so sharded executors share the same
+        cache machinery as the fused ones without aliasing."""
+        return (
+            "sharded", self.shard_axis, self.n_shards, self.axis_name,
+            tuple(self.mesh.devices.shape), self.sig,
+        )
+
+
+# --- executor-body leaf ordering -------------------------------------------
+# Every executor flavor takes the same 13 plan leaves (then optionally the 8
+# delta-sidecar leaves, then b); the pipeline builds PartitionSpecs from the
+# per-leaf ranks below.
+
+N_PLAN_LEAVES = 13   # executor-body plan args (everything before b)
+LEAF_RANKS = (1, 1, 3, 1, 1, 1, 1, 1, 1, 1, 1, 1, 1)
+
+# positions of the value-carrying leaves in plan_leaves order — the slots
+# dynamic value updates scatter into (dynamic/delta.py patches the sharded
+# stacked leaves by these indices)
+LEAF_FLAT_VALUES = 2
+LEAF_FRINGE_VALS = 5
+LEAF_KB_VALS = 12
+LEAF_COL_PERM = 6
+
+N_DELTA_LEAVES = 8   # d_rows, d_cols, d_vals, d_gsrc, kb_chunk/rows/cols/vals
+DELTA_LEAF_RANKS = (1, 1, 1, 1, 1, 1, 1, 1)
+
+
+def plan_leaves(plan: NeutronPlan) -> Tuple[jax.Array, ...]:
+    """Executor-body args in fused-body order (without b)."""
+    return (
+        plan.step_window, plan.step_col, plan.flat_values,
+        plan.fringe_rows, plan.fringe_cols, plan.fringe_vals,
+        plan.col_perm, plan.gather_src_matrix, plan.gather_src_vector,
+        plan.fringe_kb_chunk, plan.fringe_kb_rows,
+        plan.fringe_kb_cols, plan.fringe_kb_vals,
+    )
+
+
+# --- validation -------------------------------------------------------------
+
+
+def validate_coo(
+    rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+    shape: Tuple[int, int],
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Reject malformed COO input with a descriptive error.
+
+    Out-of-range indices previously surfaced as cryptic bincount/fancy-index
+    failures, and *negative* indices silently wrapped around python-style —
+    aliasing nonzeros onto the wrong rows without any error at all.
+    """
+    m, k = shape
+    rows = np.asarray(rows)
+    cols = np.asarray(cols)
+    vals = np.asarray(vals)
+    if not (rows.ndim == cols.ndim == vals.ndim == 1):
+        raise ValueError(
+            f"COO triplets must be 1-D; got rows.ndim={rows.ndim} "
+            f"cols.ndim={cols.ndim} vals.ndim={vals.ndim}"
+        )
+    if not (rows.shape == cols.shape == vals.shape):
+        raise ValueError(
+            f"COO triplet lengths disagree: rows={rows.shape[0]} "
+            f"cols={cols.shape[0]} vals={vals.shape[0]}"
+        )
+    for name, arr in (("rows", rows), ("cols", cols)):
+        if not np.issubdtype(arr.dtype, np.integer):
+            raise ValueError(f"{name} must be an integer array, got {arr.dtype}")
+    if rows.size:
+        if int(rows.min()) < 0 or int(rows.max()) >= m:
+            raise ValueError(
+                f"row indices out of range for shape {shape}: "
+                f"[{int(rows.min())}, {int(rows.max())}]"
+            )
+        if int(cols.min()) < 0 or int(cols.max()) >= k:
+            raise ValueError(
+                f"col indices out of range for shape {shape}: "
+                f"[{int(cols.min())}, {int(cols.max())}]"
+            )
+    return rows.astype(np.int64), cols.astype(np.int64), vals
+
+
+def validate_rhs(b: jax.Array, shape: Tuple[int, int]) -> None:
+    """Reject an operand whose K disagrees with the plan.
+
+    Without this, a short b zero-pads up to the plan's k_pad inside the
+    executor — every kernel shape matches and nonzeros beyond b's K
+    silently multiply against zero rows (wrong output, no error).
+    """
+    if b.ndim not in (2, 3):
+        raise ValueError(
+            f"b must be (K, N) or (batch, K, N); got shape {tuple(b.shape)}"
+        )
+    if int(b.shape[-2]) != shape[1]:
+        raise ValueError(
+            f"operand K={int(b.shape[-2])} does not match the plan's "
+            f"K={shape[1]} (plan shape {shape})"
+        )
+
+
+# --- padding + merge helpers ------------------------------------------------
+
+
+def pad_to(a: np.ndarray, n: int, fill=0) -> np.ndarray:
+    """Pad axis 0 of ``a`` to length ``n`` with ``fill``."""
+    if a.shape[0] == n:
+        return a
+    pad = np.full((n - a.shape[0],) + a.shape[1:], fill, a.dtype)
+    return np.concatenate([a, pad])
+
+
+def permute_pad_b(
+    b: jax.Array, col_perm: jax.Array, reorder_cols: bool, bk: int, bn: int
+) -> jax.Array:
+    """Apply the column permutation to B rows and pad K/N to block multiples
+    (shared by the per-path executors and every fused-body flavor)."""
+    k, n = b.shape
+    if reorder_cols:
+        b = b[col_perm]
+    k_pad = ((k + bk - 1) // bk) * bk
+    n_pad = ((n + bn - 1) // bn) * bn
+    if k_pad != k or n_pad != n:
+        b = jnp.pad(b, ((0, k_pad - k), (0, n_pad - n)))
+    return b
+
+
+def gather_rows(packed: jax.Array, src: jax.Array) -> jax.Array:
+    """Scatter-free merge: out[r] = packed[src[r]] where src[r] >= 0 else 0."""
+    idx = jnp.clip(src, 0, packed.shape[0] - 1)
+    return jnp.where((src >= 0)[:, None], packed[idx], 0.0)
+
+
+# --- k-bucketed fringe stream -----------------------------------------------
+
+
+def bucket_fringe_kblocks(
+    pr: np.ndarray, pc: np.ndarray, pv: np.ndarray,
+    k_pad: int, fringe_bk: int, chunk_eff: int,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Relayout packed fringe COO for the K-sharded streaming kernel.
+
+    Nonzeros sorted by (k-block, row, col), per-bucket padded to a chunk
+    multiple with zero-value entries, columns made k-block-local; empty
+    k-blocks get no chunks (their B slices are never fetched).  Shared by
+    ``prepare`` and ``prepare_sharded`` (which re-buckets every shard with
+    one mesh-wide bk so all shards run the same kernel).  The trailing
+    return is ``pos_of_packed``: the bucketed-stream slot of each packed
+    fringe entry, inverted into the plan's COO->slot update maps so dynamic
+    value updates can patch the bucketed stream in place.
+    """
+    nkb_f = (k_pad + fringe_bk - 1) // fringe_bk
+    kb = pc.astype(np.int64) // fringe_bk
+    order_kb = np.argsort(kb, kind="stable")  # keeps (row, col) per kb
+    kbs = kb[order_kb]
+    counts = np.bincount(kbs, minlength=nkb_f)
+    padded = ((counts + chunk_eff - 1) // chunk_eff) * chunk_eff
+    src_start = np.cumsum(counts) - counts
+    dst_start = np.cumsum(padded) - padded
+    dest = dst_start[kbs] + np.arange(kbs.size) - src_start[kbs]
+    total_kb = int(padded.sum())
+    kb_rows = np.zeros(total_kb, np.int32)
+    kb_rows[dest] = pr[order_kb]
+    kb_cols = np.zeros(total_kb, np.int32)
+    kb_cols[dest] = (pc[order_kb] % fringe_bk).astype(np.int32)
+    kb_vals = np.zeros(total_kb, pv.dtype)
+    kb_vals[dest] = pv[order_kb]
+    kb_chunk = np.repeat(
+        np.arange(nkb_f, dtype=np.int32), padded // chunk_eff
+    )
+    pos_of_packed = np.empty(kbs.size, np.int64)
+    pos_of_packed[order_kb] = dest
+    return kb_chunk, kb_rows, kb_cols, kb_vals, pos_of_packed
+
+
+# --- update-map construction ------------------------------------------------
+
+
+def build_update_maps(
+    rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+    shape: Tuple[int, int], part, core_lin: np.ndarray,
+    fringe_pos: np.ndarray, kb_pos_of_packed: Optional[np.ndarray],
+) -> UpdateMaps:
+    """Invert prepare()'s packing into per-nonzero COO->slot maps."""
+    nnz = rows.shape[0]
+    path = np.full(nnz, PATH_FRINGE, np.int8)
+    core_lin_of = np.full(nnz, -1, np.int64)
+    fringe_pos_of = np.full(nnz, -1, np.int64)
+    kb_pos_of = np.full(nnz, -1, np.int64)
+    core_idx = (
+        part.core_idx if part.core_idx is not None
+        else np.zeros(0, np.int64)
+    )
+    fringe_idx = (
+        part.fringe_idx if part.fringe_idx is not None
+        else np.zeros(0, np.int64)
+    )
+    if core_idx.size:
+        path[core_idx] = PATH_CORE
+        core_lin_of[core_idx] = core_lin
+    if fringe_idx.size:
+        fringe_pos_of[fringe_idx] = fringe_pos
+        if kb_pos_of_packed is not None:
+            kb_pos_of[fringe_idx] = kb_pos_of_packed[fringe_pos]
+    # stable sort keeps input order within a slot — the accumulation order
+    # np.add.at used when the slot was first written
+    cm_order = np.argsort(core_lin, kind="stable")
+    key_sorted, key_order = build_key_index(rows, cols, shape[1])
+    return UpdateMaps(
+        shape=tuple(shape), rows=rows, cols=cols, vals=vals.copy(),
+        path=path, core_lin=core_lin_of, fringe_pos=fringe_pos_of,
+        kb_pos=kb_pos_of,
+        core_lin_sorted=core_lin[cm_order],
+        core_members_sorted=core_idx[cm_order],
+        key_sorted=key_sorted, key_order=key_order,
+    )
+
+
+# --- mesh-uniform leaf stacking ---------------------------------------------
+
+
+def stack_shard_leaves(
+    plans: Sequence[NeutronPlan],
+    kb_streams: Sequence[Tuple],
+    t_max: int, nw_max: int, nnzf_max: int,
+    nch_max: int, nnzkb_max: int,
+) -> Tuple[jax.Array, ...]:
+    """Pad every shard's leaves to mesh-uniform shapes and stack them.
+
+    Padding is inert everywhere: padded tile steps carry zero values into
+    the dedicated extra window ``nw_max`` (targeting window 0 would
+    duplicate a real (window, k-block) pair and break the densified GEMM's
+    assume_unique index-scatter), padded fringe entries add 0.0 to packed
+    row 0 (the fringe kernels accumulate, never overwrite), padded kb
+    chunks target k-block 0 with zero values, and padded gather slots are
+    -1 (no contribution).
+    """
+    stacked: List[List[np.ndarray]] = [[] for _ in range(N_PLAN_LEAVES)]
+    for p, kb in zip(plans, kb_streams):
+        leaves = [np.asarray(x) for x in plan_leaves(p)]
+        sw, sc, fv, fr, fc, fvv, cp, gm, gv = leaves[:9]
+        kbc, kbr, kbcol, kbv = kb[:4]
+        padded = (
+            pad_to(sw, t_max, nw_max), pad_to(sc, t_max),
+            pad_to(fv, t_max, 0.0),
+            pad_to(fr, nnzf_max), pad_to(fc, nnzf_max),
+            pad_to(fvv, nnzf_max, 0.0),
+            cp,  # identity (reorder_cols rejected for sharded); same all shards
+            gm, gv,  # already (m_loc_max,) — prepared at the padded shape
+            pad_to(kbc, nch_max), pad_to(kbr, nnzkb_max),
+            pad_to(kbcol, nnzkb_max), pad_to(kbv, nnzkb_max, 0.0),
+        )
+        for i, arr in enumerate(padded):
+            stacked[i].append(arr)
+    return tuple(jnp.asarray(np.stack(col)) for col in stacked)
+
+
+# --- structural-delta sidecar -----------------------------------------------
+
+
+def _pad_clip(a: np.ndarray, n: int) -> np.ndarray:
+    if a.shape[0] >= n:
+        return a[:n]
+    return np.concatenate(
+        [a, np.zeros((n - a.shape[0],) + a.shape[1:], a.dtype)]
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaFringe:
+    """Capacity-padded COO sidecar, shaped for the fringe tier dispatch.
+
+    ``leaves`` are the 8 device arrays the executor pipeline appends to the
+    fused program: packed rows / k-block-relative state exactly mirror a
+    plan's fringe, and padding entries (row 0, col 0, value 0) are
+    accumulate-inert.  ``sig`` keys the cached executor; it changes only
+    when ``capacity`` grows (powers of two).
+    """
+
+    leaves: Tuple[jax.Array, ...]
+    sig: Tuple
+    capacity: int
+    count: int
+    tier: str
+    bk: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedDeltaFringe:
+    """Per-shard delta sidecars stacked along a leading mesh axis.
+
+    Built by routing every delta row to its owning shard (via a
+    rows-sharded plan's ``assemble`` map) and building one
+    :class:`DeltaFringe` per shard at the shard-local shape with one
+    mesh-uniform capacity — so all shards share a single static signature
+    and the per-shard fused body can merge its slice *inside* the
+    ``shard_map`` program (one dispatch for sharded dynamic execution).
+    """
+
+    leaves: Tuple[jax.Array, ...]   # 8 arrays, each stacked (n_shards, ...)
+    sig: Tuple
+    capacity: int
+    count: int
+    tier: str
+    bk: int
+    n_shards: int
+
+
+def build_delta_fringe(
+    d_rows: np.ndarray,
+    d_cols: np.ndarray,
+    d_vals: np.ndarray,
+    shape: Tuple[int, int],
+    config: SpmmConfig,
+    capacity: Optional[int] = None,
+) -> DeltaFringe:
+    """Materialize a delta COO into a capacity-padded sidecar stream."""
+    m, k = shape
+    d_rows = np.asarray(d_rows, np.int64)
+    d_cols = np.asarray(d_cols, np.int64)
+    d_vals = np.asarray(d_vals)
+    count = int(d_rows.size)
+    cap = max(8, ops.pow2_at_least(count), int(capacity or 0))
+
+    if count:
+        order = np.argsort(d_rows * np.int64(k) + d_cols, kind="stable")
+        sr = d_rows[order]
+        first = np.concatenate([[True], sr[1:] != sr[:-1]])
+        row_ids = sr[first]
+        pr = (np.cumsum(first) - 1).astype(np.int32)
+        pc = d_cols[order].astype(np.int32)
+        pv = d_vals[order].astype(np.float32)
+    else:
+        row_ids = np.zeros(0, np.int64)
+        pr = np.zeros(0, np.int32)
+        pc = np.zeros(0, np.int32)
+        pv = np.zeros(0, np.float32)
+    pr, pc, pv = _pad_clip(pr, cap), _pad_clip(pc, cap), _pad_clip(pv, cap)
+    gsrc = np.full(m, -1, np.int32)
+    if row_ids.size:
+        gsrc[row_ids] = np.arange(row_ids.size, dtype=np.int32)
+
+    # the sidecar flows through the same VMEM-budget tier selection as a
+    # plan fringe; the packed-row bound is the capacity (static per sig)
+    k_pad = ((k + config.bk - 1) // config.bk) * config.bk
+    tier, dbk = select_fringe_tier(
+        k_pad, cap, config.bn, vmem_budget=config.fringe_vmem_budget
+    )
+    chunk_eff = ops.effective_chunk(config.fringe_chunk)
+    if tier == "ksharded" and config.impl != "xla":
+        kbc, kbr, kbcol, kbv, _pos = bucket_fringe_kblocks(
+            pr, pc, pv, k_pad, dbk, chunk_eff
+        )
+        # deterministic shapes per capacity: each nonempty bucket wastes
+        # < chunk slots, so cap * chunk bounds the bucketed stream; pad
+        # chunks target k-block 0 with zero values (accumulate-inert)
+        kb_cap = cap * chunk_eff
+        kbc = _pad_clip(kbc, kb_cap // chunk_eff)
+        kbr = _pad_clip(kbr, kb_cap)
+        kbcol = _pad_clip(kbcol, kb_cap)
+        kbv = _pad_clip(kbv, kb_cap)
+    else:
+        kbc = np.zeros(1, np.int32)
+        kbr = np.zeros(1, np.int32)
+        kbcol = np.zeros(1, np.int32)
+        kbv = np.zeros(1, np.float32)
+
+    leaves = tuple(jnp.asarray(x) for x in (
+        pr, pc, pv, gsrc, kbc, kbr, kbcol, kbv
+    ))
+    sig = ("delta", cap, cap, tier, int(dbk),
+           int(kbc.shape[0]), int(kbr.shape[0]))
+    return DeltaFringe(leaves=leaves, sig=sig, capacity=cap, count=count,
+                       tier=tier, bk=int(dbk))
+
+
+def build_sharded_delta_fringe(
+    d_rows: np.ndarray,
+    d_cols: np.ndarray,
+    d_vals: np.ndarray,
+    splan: ShardedPlan,
+    capacity: Optional[int] = None,
+) -> ShardedDeltaFringe:
+    """Route a delta COO to owning shards and build stacked sidecars.
+
+    Every delta row lands on the shard that owns its output row under the
+    plan's row partition (``assemble``), relabeled to shard-local row
+    coordinates — so the per-shard fused body merges its own delta slice
+    and the existing assemble gather (all-gather unchanged) picks the
+    contributions up with zero extra cross-device traffic.
+    """
+    if splan.shard_axis != "rows":
+        raise ValueError(
+            "build_sharded_delta_fringe routes by row ownership and needs a "
+            f"rows-sharded plan; got shard_axis={splan.shard_axis!r} "
+            "(rhs-sharded plans replicate a plain DeltaFringe instead)"
+        )
+    m_loc = splan.rows_per_shard
+    n_shards = splan.n_shards
+    k = splan.shape[1]
+    d_rows = np.asarray(d_rows, np.int64)
+    d_cols = np.asarray(d_cols, np.int64)
+    d_vals = np.asarray(d_vals)
+    assemble = np.asarray(splan.assemble)
+    slot = assemble[d_rows] if d_rows.size else np.zeros(0, np.int64)
+    shard_of = slot // max(m_loc, 1)
+    local_row = slot % max(m_loc, 1)
+
+    counts = np.bincount(shard_of, minlength=n_shards) if d_rows.size else (
+        np.zeros(n_shards, np.int64)
+    )
+    cap = max(8, ops.pow2_at_least(int(counts.max()) if d_rows.size else 0),
+              int(capacity or 0))
+
+    per_shard: List[DeltaFringe] = []
+    for s in range(n_shards):
+        sel = np.flatnonzero(shard_of == s)
+        per_shard.append(build_delta_fringe(
+            local_row[sel], d_cols[sel], d_vals[sel], (m_loc, k),
+            splan.config, capacity=cap,
+        ))
+    child_sig = per_shard[0].sig
+    assert all(df.sig == child_sig for df in per_shard), (
+        "per-shard delta sigs diverged despite the uniform capacity"
+    )
+    leaves = tuple(
+        jnp.stack([df.leaves[i] for df in per_shard])
+        for i in range(N_DELTA_LEAVES)
+    )
+    return ShardedDeltaFringe(
+        leaves=leaves, sig=("sharded_delta", n_shards) + child_sig[1:],
+        capacity=cap, count=int(d_rows.size),
+        tier=per_shard[0].tier, bk=per_shard[0].bk, n_shards=n_shards,
+    )
+
+
+def delta_child_sig(dsig: Tuple) -> Tuple:
+    """Per-shard ("delta", ...) signature of any sidecar signature."""
+    if dsig[0] == "sharded_delta":
+        return ("delta",) + tuple(dsig[2:])
+    return dsig

@@ -1,67 +1,73 @@
-"""NeutronSparse public API: plan preparation + coordinated dual-path SpMM.
+"""NeutronSparse plan construction + public API facade.
 
 ``prepare`` runs the full preprocessing pipeline from the paper's workflow
 (Fig. 7): cost-model split -> two-stage extraction -> global-local reorder
 -> BlockELL packing + flat tile stream -> reuse-ordered grid -> fringe COO.
-``execute`` runs both engine paths and merges their contributions as one
-fused jitted program: the plan carries *inverse* row maps so the final C is
-assembled by gathering from the packed per-path outputs (each original row
-has at most one packed source per path) instead of scatter-adding both paths
-into full-size zero buffers.  Executors are cached per plan signature, so
-repeated epochs over re-prepared plans of the same structure never retrace.
-``execute`` also accepts a batched ``(batch, K, N)`` right-hand side — the
-fused body is vmapped and cached per ``(signature, batch)`` so serving-style
-workloads amortize one plan across many RHS panels in a single dispatch.
-``prepare_sharded``/``execute_sharded`` extend the same machinery across a
-``jax.sharding.Mesh``: row-windows (or RHS columns) are balanced across
-devices, each shard runs the fused body on its own padded sub-plan under
-``shard_map``, and — because every shard owns a disjoint set of output rows
-— assembly is a gather over the all-gathered packed rows, never a
-scatter-add.  ``NeutronSpMM`` wraps an adaptive epoch loop with runtime
-migration.
+``prepare_sharded`` extends it across a ``jax.sharding.Mesh``: row-windows
+(or RHS columns) are balanced across devices and every shard gets a padded,
+mesh-uniform sub-plan.
 
-Dynamic sparsity: every prepared plan carries host-side COO->slot inverse
-maps (``UpdateMaps``) that let ``dynamic.delta.update_values`` patch values
-in the device-resident arrays without re-preparing or retracing, and
-``execute_with_delta`` extends the fused gather merge with a structural
-delta sidecar (``dynamic.delta.DeltaFringe``) — see ``src/repro/dynamic``.
+The *representation* the builders emit (leaf layout, signatures, padding
+rules, COO->slot update maps) lives in :mod:`repro.core.plan_ir`, and the
+*execution* of prepared plans lives in the :mod:`repro.exec` pipeline —
+one composable builder produces every dispatch flavor (fused, batched,
+delta-extended, sharded, any combination) from the same fused body, each a
+single jitted dispatch.  This module re-exports both sides, so historical
+call sites keep working::
+
+    from repro.core.spmm import prepare, execute, execute_sharded, ...
+
+Execution names are forwarded lazily (PEP 562) to keep the core layer's
+static import graph pointing strictly downward — ``tools/check_layers.py``
+enforces that ``core/`` never imports ``exec``/``dynamic``/``serve`` and
+carries the one documented allowance for this facade.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..distributed.sharding import (
-    axis_spec, leading_axis_spec, replicated_spec, shard_map,
-    trailing_axis_spec,
-)
 from ..kernels import ops
-from . import formats, partition, reorder, reuse
+from . import formats, partition, plan_ir, reorder, reuse
 from .coordinator import (
-    AdaptiveCoordinator, balance_row_window_list, list_imbalance,
-    window_costs_from_coo,
+    balance_row_window_list, list_imbalance, window_costs_from_coo,
 )
 from .cost_model import (
     EngineCostModel, default_cost_model, select_fringe_tier,
     select_shard_axis,
 )
-
-
-# Plan-format version: the leading element of every plan signature.  Bump it
-# whenever the static plan layout changes (leaf set, bucketing scheme, merge
-# semantics) so (a) executor caches never alias plans built by different
-# layouts within one process, and (b) the persistent plan registry
-# (dynamic/registry.py) can refuse plans serialized under an older layout
-# instead of misinterpreting their arrays.
-PLAN_FORMAT_VERSION = 1
+from .plan_ir import (  # noqa: F401  (public re-exports; layout owned by plan_ir)
+    LEAF_FLAT_VALUES, LEAF_FRINGE_VALS, LEAF_KB_VALS, PATH_CORE, PATH_FRINGE,
+    PLAN_FORMAT_VERSION, NeutronPlan, ShardedPlan, ShardedUpdateMaps,
+    SpmmConfig, UpdateMaps,
+)
 
 _PREPARE_CALL_COUNT = 0  # incremented per prepare() call (test hook)
+
+# execution API lives in repro.exec.api; forwarded lazily so importing the
+# core layer never pulls the executor pipeline (or anything above it) in
+_EXEC_FORWARDS = (
+    "execute", "execute_with_delta", "execute_sharded",
+    "execute_delta_contribution", "execute_matrix_path",
+    "execute_vector_path", "neutron_spmm", "SpMMOperator", "NeutronSpMM",
+    "fused_trace_count", "sharded_trace_count", "dispatch_count",
+)
+
+
+def __getattr__(name: str):
+    if name in _EXEC_FORWARDS:
+        import importlib
+
+        return getattr(importlib.import_module("repro.exec.api"), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXEC_FORWARDS))
 
 
 def prepare_call_count() -> int:
@@ -71,327 +77,6 @@ def prepare_call_count() -> int:
     the on-disk registry must serve without re-running preprocessing.
     """
     return _PREPARE_CALL_COUNT
-
-
-@dataclasses.dataclass(frozen=True)
-class SpmmConfig:
-    bm: int = 128
-    bk: int = 64
-    bn: int = 256
-    alpha: Optional[float] = None          # override Eq. 3 threshold
-    enable_global_reorder: bool = True
-    enable_local_reorder: bool = True
-    reorder_cols: bool = False             # requires caller to pre-permute B
-    enable_col_stage: bool = True          # stage-2 column extraction
-    enable_reuse_order: bool = True
-    max_clusters: int = 64
-    impl: ops.Impl = "xla"
-    fringe_chunk: Optional[int] = None     # nonzeros per fringe grid step
-    fringe_vmem_budget: Optional[int] = None  # override dispatch-tier budget
-    seed: int = 0
-
-
-PATH_CORE = 0
-PATH_FRINGE = 1
-
-
-@dataclasses.dataclass
-class UpdateMaps:
-    """Host-side COO->slot inverse maps, built once at ``prepare()`` time.
-
-    For every input nonzero ``j`` the maps record which device-resident plan
-    slot its value landed in, so the dynamic-update subsystem
-    (``dynamic.delta.update_values``) can scatter new values directly into
-    the prepared arrays — no re-prepare, no retrace.  ``vals`` tracks the
-    *current* value of each nonzero (updates advance it), which the
-    structural-delta layer also uses to negate deleted base entries.
-    """
-
-    shape: Tuple[int, int]
-    rows: np.ndarray             # (nnz,) int64 original COO rows
-    cols: np.ndarray             # (nnz,) int64 original COO cols
-    vals: np.ndarray             # (nnz,) current values (input dtype)
-    path: np.ndarray             # (nnz,) int8 PATH_CORE | PATH_FRINGE
-    core_lin: np.ndarray         # (nnz,) int64 flat slot in flat_values, -1
-    fringe_pos: np.ndarray       # (nnz,) int64 packed fringe slot, -1
-    kb_pos: np.ndarray           # (nnz,) int64 k-bucketed stream slot, -1
-    # slot->contributors CSR (duplicates accumulate into one tile cell, so a
-    # touched slot is recomputed from every contributor in input order — the
-    # same sequential fp32 accumulation prepare() performs, hence updated
-    # plans stay bit-identical to a fresh prepare)
-    core_lin_sorted: np.ndarray     # core slots sorted
-    core_members_sorted: np.ndarray  # nnz ids sorted by (slot, input order)
-    # (row, col) -> nnz id lookup (first occurrence wins for duplicates)
-    key_sorted: np.ndarray
-    key_order: np.ndarray
-
-    @property
-    def nnz(self) -> int:
-        return int(self.rows.shape[0])
-
-    def lookup(self, rows: np.ndarray, cols: np.ndarray) -> np.ndarray:
-        """nnz ids of the given (row, col) pairs; -1 where absent."""
-        keys = np.asarray(rows, np.int64) * self.shape[1] + np.asarray(
-            cols, np.int64
-        )
-        pos = np.searchsorted(self.key_sorted, keys)
-        pos = np.minimum(pos, max(self.key_sorted.size - 1, 0))
-        if self.key_sorted.size == 0:
-            return np.full(keys.shape, -1, np.int64)
-        found = self.key_sorted[pos] == keys
-        return np.where(found, self.key_order[pos], -1)
-
-
-@dataclasses.dataclass
-class ShardedUpdateMaps:
-    """COO->slot inverse maps for a rows-sharded plan.
-
-    Global nonzero ``j`` lives in shard ``shard_of_nnz[j]`` at position
-    ``local_of_nnz[j]`` of that shard's input arrays; ``shard_maps[s]`` are
-    the shard-local :class:`UpdateMaps` into the (prefix-preserving padded)
-    stacked leaves.  The global ``rows/cols/vals`` mirror serves the
-    structural-delta layer and compaction.
-    """
-
-    shape: Tuple[int, int]
-    rows: np.ndarray
-    cols: np.ndarray
-    vals: np.ndarray
-    shard_of_nnz: np.ndarray
-    local_of_nnz: np.ndarray
-    shard_maps: Tuple[UpdateMaps, ...]
-    key_sorted: np.ndarray
-    key_order: np.ndarray
-
-    @property
-    def nnz(self) -> int:
-        return int(self.rows.shape[0])
-
-    lookup = UpdateMaps.lookup
-
-
-def _build_key_index(
-    rows: np.ndarray, cols: np.ndarray, k: int
-) -> Tuple[np.ndarray, np.ndarray]:
-    key = rows.astype(np.int64) * k + cols
-    order = np.argsort(key, kind="stable")
-    return key[order], order
-
-
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass
-class NeutronPlan:
-    """Prepared execution plan (jax pytree; shapes static per plan)."""
-
-    # matrix path: flat active-tile stream (window-major under reuse order)
-    step_window: jax.Array   # (T,) int32
-    step_col: jax.Array      # (T,) int32
-    flat_values: jax.Array   # (T, bm, bk)
-    core_row_map: jax.Array  # (num_windows*bm,) int32 -> original row (-1 pad)
-    # vector path: packed row-sorted fringe COO
-    fringe_rows: jax.Array   # (nnz_f,) int32 packed ids
-    fringe_cols: jax.Array   # (nnz_f,) int32
-    fringe_vals: jax.Array   # (nnz_f,)
-    fringe_row_ids: jax.Array  # (n_fringe_rows,) int32 original ids
-    col_perm: jax.Array      # (K,) int32 — B row permutation (identity unless reorder_cols)
-    # scatter-free merge: inverse row maps (original row -> packed slot or -1)
-    gather_src_matrix: jax.Array  # (M,) int32 -> packed matrix-path row
-    gather_src_vector: jax.Array  # (M,) int32 -> packed vector-path row
-    # K-sharded streaming tier: fringe COO re-bucketed by k-block (sorted by
-    # (k-block, row, col), per-bucket chunk-padded, columns k-block-local);
-    # 1-element dummies unless fringe_tier == "ksharded"
-    fringe_kb_chunk: jax.Array  # (num_chunks,) int32, chunk -> k-block id
-    fringe_kb_rows: jax.Array   # (num_chunks*chunk,) int32
-    fringe_kb_cols: jax.Array   # (num_chunks*chunk,) int32
-    fringe_kb_vals: jax.Array   # (num_chunks*chunk,)
-
-    shape: Tuple[int, int]
-    config: SpmmConfig
-    stats: Tuple  # immutable (key, value) pairs
-    # vector-path kernel dispatch tier chosen at prepare time from the VMEM
-    # budget (cost_model.select_fringe_tier): "resident" | "ksharded" | "xla"
-    fringe_tier: str = "resident"
-    fringe_bk: int = 0           # k-block size of the ksharded tier (0 else)
-    # host-side COO->slot inverse maps for dynamic value updates.  Not a
-    # pytree leaf and not aux data (numpy payloads are unhashable): a plan
-    # round-tripped through tree operations comes back with maps=None and
-    # simply loses updatability, never correctness.
-    update_maps: Optional[UpdateMaps] = None
-
-    def tree_flatten(self):
-        leaves = (
-            self.step_window, self.step_col, self.flat_values, self.core_row_map,
-            self.fringe_rows, self.fringe_cols, self.fringe_vals,
-            self.fringe_row_ids, self.col_perm,
-            self.gather_src_matrix, self.gather_src_vector,
-            self.fringe_kb_chunk, self.fringe_kb_rows,
-            self.fringe_kb_cols, self.fringe_kb_vals,
-        )
-        return leaves, (
-            self.shape, self.config, self.stats,
-            self.fringe_tier, self.fringe_bk,
-        )
-
-    @classmethod
-    def tree_unflatten(cls, aux, leaves):
-        return cls(*leaves, *aux)
-
-    @property
-    def num_windows(self) -> int:
-        return self.core_row_map.shape[0] // self.config.bm
-
-    @property
-    def stats_dict(self) -> Dict:
-        return dict(self.stats)
-
-    @property
-    def has_core(self) -> bool:
-        return bool(self.stats_dict["core_nnz"])
-
-    @property
-    def has_fringe(self) -> bool:
-        return bool(self.stats_dict["fringe_nnz"])
-
-    def signature(self) -> Tuple:
-        """Static structure key: plans sharing it reuse one jitted executor.
-
-        Includes the vector-path dispatch tier and its k-block size: two
-        plans differing only in tier (e.g. from different VMEM budgets)
-        must not alias one cached executor.  The leading element is
-        ``PLAN_FORMAT_VERSION`` so executors (and the persistent registry,
-        which keys entries by signature) never cross plan-layout versions.
-        """
-        cfg = self.config
-        return (
-            PLAN_FORMAT_VERSION,
-            self.shape, cfg.bm, cfg.bk, cfg.bn, cfg.impl, cfg.reorder_cols,
-            cfg.fringe_chunk, self.num_windows,
-            int(self.step_window.shape[0]), int(self.fringe_rows.shape[0]),
-            int(self.fringe_row_ids.shape[0]), self.has_core, self.has_fringe,
-            self.fringe_tier, self.fringe_bk,
-            int(self.fringe_kb_chunk.shape[0]),
-            int(self.fringe_kb_rows.shape[0]),
-        )
-
-
-def _validate_coo(
-    rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
-    shape: Tuple[int, int],
-) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Reject malformed COO input with a descriptive error.
-
-    Out-of-range indices previously surfaced as cryptic bincount/fancy-index
-    failures, and *negative* indices silently wrapped around python-style —
-    aliasing nonzeros onto the wrong rows without any error at all.
-    """
-    m, k = shape
-    rows = np.asarray(rows)
-    cols = np.asarray(cols)
-    vals = np.asarray(vals)
-    if not (rows.ndim == cols.ndim == vals.ndim == 1):
-        raise ValueError(
-            f"COO triplets must be 1-D; got rows.ndim={rows.ndim} "
-            f"cols.ndim={cols.ndim} vals.ndim={vals.ndim}"
-        )
-    if not (rows.shape == cols.shape == vals.shape):
-        raise ValueError(
-            f"COO triplet lengths disagree: rows={rows.shape[0]} "
-            f"cols={cols.shape[0]} vals={vals.shape[0]}"
-        )
-    for name, arr in (("rows", rows), ("cols", cols)):
-        if not np.issubdtype(arr.dtype, np.integer):
-            raise ValueError(f"{name} must be an integer array, got {arr.dtype}")
-    if rows.size:
-        if int(rows.min()) < 0 or int(rows.max()) >= m:
-            raise ValueError(
-                f"row indices out of range for shape {shape}: "
-                f"[{int(rows.min())}, {int(rows.max())}]"
-            )
-        if int(cols.min()) < 0 or int(cols.max()) >= k:
-            raise ValueError(
-                f"col indices out of range for shape {shape}: "
-                f"[{int(cols.min())}, {int(cols.max())}]"
-            )
-    return rows.astype(np.int64), cols.astype(np.int64), vals
-
-
-def _bucket_fringe_kblocks(
-    pr: np.ndarray, pc: np.ndarray, pv: np.ndarray,
-    k_pad: int, fringe_bk: int, chunk_eff: int,
-) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
-    """Relayout packed fringe COO for the K-sharded streaming kernel.
-
-    Nonzeros sorted by (k-block, row, col), per-bucket padded to a chunk
-    multiple with zero-value entries, columns made k-block-local; empty
-    k-blocks get no chunks (their B slices are never fetched).  Shared by
-    ``prepare`` and ``prepare_sharded`` (which re-buckets every shard with
-    one mesh-wide bk so all shards run the same kernel).  The trailing
-    return is ``pos_of_packed``: the bucketed-stream slot of each packed
-    fringe entry, inverted into the plan's COO->slot update maps so dynamic
-    value updates can patch the bucketed stream in place.
-    """
-    nkb_f = (k_pad + fringe_bk - 1) // fringe_bk
-    kb = pc.astype(np.int64) // fringe_bk
-    order_kb = np.argsort(kb, kind="stable")  # keeps (row, col) per kb
-    kbs = kb[order_kb]
-    counts = np.bincount(kbs, minlength=nkb_f)
-    padded = ((counts + chunk_eff - 1) // chunk_eff) * chunk_eff
-    src_start = np.cumsum(counts) - counts
-    dst_start = np.cumsum(padded) - padded
-    dest = dst_start[kbs] + np.arange(kbs.size) - src_start[kbs]
-    total_kb = int(padded.sum())
-    kb_rows = np.zeros(total_kb, np.int32)
-    kb_rows[dest] = pr[order_kb]
-    kb_cols = np.zeros(total_kb, np.int32)
-    kb_cols[dest] = (pc[order_kb] % fringe_bk).astype(np.int32)
-    kb_vals = np.zeros(total_kb, pv.dtype)
-    kb_vals[dest] = pv[order_kb]
-    kb_chunk = np.repeat(
-        np.arange(nkb_f, dtype=np.int32), padded // chunk_eff
-    )
-    pos_of_packed = np.empty(kbs.size, np.int64)
-    pos_of_packed[order_kb] = dest
-    return kb_chunk, kb_rows, kb_cols, kb_vals, pos_of_packed
-
-
-def _build_update_maps(
-    rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
-    shape: Tuple[int, int], part, core_lin: np.ndarray,
-    fringe_pos: np.ndarray, kb_pos_of_packed: Optional[np.ndarray],
-) -> UpdateMaps:
-    """Invert prepare()'s packing into per-nonzero COO->slot maps."""
-    nnz = rows.shape[0]
-    path = np.full(nnz, PATH_FRINGE, np.int8)
-    core_lin_of = np.full(nnz, -1, np.int64)
-    fringe_pos_of = np.full(nnz, -1, np.int64)
-    kb_pos_of = np.full(nnz, -1, np.int64)
-    core_idx = (
-        part.core_idx if part.core_idx is not None
-        else np.zeros(0, np.int64)
-    )
-    fringe_idx = (
-        part.fringe_idx if part.fringe_idx is not None
-        else np.zeros(0, np.int64)
-    )
-    if core_idx.size:
-        path[core_idx] = PATH_CORE
-        core_lin_of[core_idx] = core_lin
-    if fringe_idx.size:
-        fringe_pos_of[fringe_idx] = fringe_pos
-        if kb_pos_of_packed is not None:
-            kb_pos_of[fringe_idx] = kb_pos_of_packed[fringe_pos]
-    # stable sort keeps input order within a slot — the accumulation order
-    # np.add.at used when the slot was first written
-    cm_order = np.argsort(core_lin, kind="stable")
-    key_sorted, key_order = _build_key_index(rows, cols, shape[1])
-    return UpdateMaps(
-        shape=tuple(shape), rows=rows, cols=cols, vals=vals.copy(),
-        path=path, core_lin=core_lin_of, fringe_pos=fringe_pos_of,
-        kb_pos=kb_pos_of,
-        core_lin_sorted=core_lin[cm_order],
-        core_members_sorted=core_idx[cm_order],
-        key_sorted=key_sorted, key_order=key_order,
-    )
 
 
 def prepare(
@@ -404,7 +89,7 @@ def prepare(
 ) -> NeutronPlan:
     """Host-side preprocessing (one-time; amortized across epochs)."""
     m, k = shape
-    rows, cols, vals = _validate_coo(rows, cols, vals, shape)
+    rows, cols, vals = plan_ir.validate_coo(rows, cols, vals, shape)
     global _PREPARE_CALL_COUNT
     _PREPARE_CALL_COUNT += 1
     cm = cost_model or default_cost_model(n_cols=config.bn)
@@ -531,11 +216,9 @@ def prepare(
     # 4b) vector-path dispatch tier: a VMEM-budget estimate picks the fringe
     # kernel (resident single-panel / K-sharded streaming / XLA fallback) so
     # the coordinator's split stays consistent with what the vector engine
-    # can actually execute.  The K-sharded tier needs its nonzeros bucketed
-    # by k-block — sorted (k-block, row, col), per-bucket padded to a chunk
-    # multiple with zero-value entries, columns made k-block-local — built
-    # here vectorized; empty k-blocks get no chunks (their B slices are
-    # never fetched).
+    # can actually execute.  The K-sharded tier consumes the k-bucketed
+    # stream built by plan_ir.bucket_fringe_kblocks; empty k-blocks get no
+    # chunks (their B slices are never fetched).
     k_pad = ((k + config.bk - 1) // config.bk) * config.bk
     fringe_tier, fringe_bk = select_fringe_tier(
         k_pad, int(fringe_row_ids.shape[0]), config.bn,
@@ -546,7 +229,8 @@ def prepare(
     if fringe_tier == "ksharded" and f_rows.size and config.impl != "xla":
         chunk_eff = ops.effective_chunk(config.fringe_chunk)
         kb_chunk, kb_rows, kb_cols, kb_vals, kb_pos_of_packed = (
-            _bucket_fringe_kblocks(pr, pc, pv, k_pad, fringe_bk, chunk_eff)
+            plan_ir.bucket_fringe_kblocks(pr, pc, pv, k_pad, fringe_bk,
+                                          chunk_eff)
         )
     else:
         kb_chunk = np.zeros(1, np.int32)
@@ -566,7 +250,7 @@ def prepare(
         gather_src_vector[fringe_row_ids] = np.arange(
             fringe_row_ids.size, dtype=np.int32
         )
-    update_maps = _build_update_maps(
+    update_maps = plan_ir.build_update_maps(
         rows, cols, vals, shape, part, core_lin, fringe_pos,
         kb_pos_of_packed,
     )
@@ -613,306 +297,7 @@ def prepare(
     )
 
 
-def _permute_pad_b(
-    b: jax.Array, col_perm: jax.Array, reorder_cols: bool, bk: int, bn: int
-) -> jax.Array:
-    """Apply the column permutation to B rows and pad K/N to block multiples
-    (shared by the per-path executors and the fused executor)."""
-    k, n = b.shape
-    if reorder_cols:
-        b = b[col_perm]
-    k_pad = ((k + bk - 1) // bk) * bk
-    n_pad = ((n + bn - 1) // bn) * bn
-    if k_pad != k or n_pad != n:
-        b = jnp.pad(b, ((0, k_pad - k), (0, n_pad - n)))
-    return b
-
-
-def _pad_b(plan: NeutronPlan, b: jax.Array) -> jax.Array:
-    cfg = plan.config
-    return _permute_pad_b(b, plan.col_perm, cfg.reorder_cols, cfg.bk, cfg.bn)
-
-
-def _gather_rows(packed: jax.Array, src: jax.Array) -> jax.Array:
-    """Scatter-free merge: out[r] = packed[src[r]] where src[r] >= 0 else 0."""
-    idx = jnp.clip(src, 0, packed.shape[0] - 1)
-    return jnp.where((src >= 0)[:, None], packed[idx], 0.0)
-
-
-def execute_matrix_path(plan: NeutronPlan, b: jax.Array) -> jax.Array:
-    """Dense-core path only; returns (M, N) contribution."""
-    cfg = plan.config
-    m, _ = plan.shape
-    n = b.shape[1]
-    if not plan.has_core:  # skip the dummy zero-tile dispatch entirely
-        return jnp.zeros((m, n), jnp.float32)
-    bp = _pad_b(plan, b)
-    packed = ops.block_stream_spmm(
-        plan.step_window, plan.step_col, plan.flat_values, bp,
-        num_windows=plan.num_windows, bm=cfg.bm, bk=cfg.bk, bn=cfg.bn,
-        impl=cfg.impl, assume_unique=True,  # prepare() emits unique pairs
-    )[:, :n]
-    return _gather_rows(packed, plan.gather_src_matrix)
-
-
-def execute_vector_path(plan: NeutronPlan, b: jax.Array) -> jax.Array:
-    """Fringe path only; returns (M, N) contribution."""
-    cfg = plan.config
-    m, _ = plan.shape
-    n = b.shape[1]
-    if not plan.has_fringe:  # skip the 1-element dummy kernel entirely
-        return jnp.zeros((m, n), jnp.float32)
-    bp = _pad_b(plan, b)
-    packed = ops.fringe_spmm(
-        plan.fringe_rows, plan.fringe_cols, plan.fringe_vals, bp,
-        num_rows=int(plan.fringe_row_ids.shape[0]), bn=cfg.bn, impl=cfg.impl,
-        chunk=cfg.fringe_chunk,
-        tier=plan.fringe_tier, bk=plan.fringe_bk,
-        kb_chunk=plan.fringe_kb_chunk, kb_rows=plan.fringe_kb_rows,
-        kb_cols=plan.fringe_kb_cols, kb_vals=plan.fringe_kb_vals,
-    )[:, :n]
-    return _gather_rows(packed, plan.gather_src_vector)
-
-
-# --- fused single-dispatch executor ---------------------------------------
-# One jitted program per plan *signature* (static structure), cached so that
-# re-prepared plans of identical structure — e.g. every epoch of an adaptive
-# run that didn't migrate — reuse the compiled executable without retracing.
-_FUSED_TRACES: list = []  # signatures appended at trace time (tests)
-
-
-def fused_trace_count() -> int:
-    """Number of fused-executor traces since process start (test hook)."""
-    return len(_FUSED_TRACES)
-
-
-@functools.lru_cache(maxsize=None)
-def _fused_run(sig: Tuple):
-    """Raw fused executor body for a plan signature (untraced).
-
-    The single-device jit (``_fused_executor``), the batched vmap
-    (``_batched_executor``) and the per-shard ``shard_map`` body of the
-    sharded executor all wrap this one function, so every dispatch flavor
-    runs identical math.
-    """
-    (_version, shape, bm, bk, bn, impl, reorder_cols, fringe_chunk,
-     num_windows, _num_steps, _nnz_f, n_fringe_rows, has_core, has_fringe,
-     fringe_tier, fringe_bk, _n_chunks, _nnz_kb) = sig
-    m, k = shape
-
-    def _run(step_window, step_col, flat_values, fringe_rows, fringe_cols,
-             fringe_vals, col_perm, gsrc_m, gsrc_v,
-             kb_chunk, kb_rows, kb_cols, kb_vals, b):
-        _FUSED_TRACES.append(sig)
-        n = b.shape[1]
-        bp = _permute_pad_b(b, col_perm, reorder_cols, bk, bn)
-
-        c = None
-        if has_core:
-            packed_m = ops.block_stream_spmm(
-                step_window, step_col, flat_values, bp,
-                num_windows=num_windows, bm=bm, bk=bk, bn=bn, impl=impl,
-                assume_unique=True,  # prepare() emits unique pairs
-            )[:, :n]
-            c = _gather_rows(packed_m, gsrc_m)
-        if has_fringe:
-            packed_v = ops.fringe_spmm(
-                fringe_rows, fringe_cols, fringe_vals, bp,
-                num_rows=n_fringe_rows, bn=bn, impl=impl, chunk=fringe_chunk,
-                tier=fringe_tier, bk=fringe_bk,
-                kb_chunk=kb_chunk, kb_rows=kb_rows,
-                kb_cols=kb_cols, kb_vals=kb_vals,
-            )[:, :n]
-            cv = _gather_rows(packed_v, gsrc_v)
-            c = cv if c is None else c + cv
-        if c is None:  # empty matrix
-            c = jnp.zeros((m, n), jnp.float32)
-        return c
-
-    return _run
-
-
-_N_PLAN_LEAVES = 13  # executor-body plan args (everything before b)
-
-
-@functools.lru_cache(maxsize=None)
-def _fused_executor(sig: Tuple):
-    return jax.jit(_fused_run(sig))
-
-
-@functools.lru_cache(maxsize=None)
-def _batched_executor(sig: Tuple, batch: int):
-    """Multi-RHS executor: one compiled program per (signature, batch).
-
-    The plan leaves are broadcast (in_axes=None); only the (batch, K, N)
-    RHS carries the mapped axis.  ``batch`` is part of the cache key so the
-    retrace behavior is observable per batch size (see the cache tests).
-    """
-    del batch  # cache key only; the jit shape carries it at trace time
-    run = jax.vmap(_fused_run(sig), in_axes=(None,) * _N_PLAN_LEAVES + (0,))
-    return jax.jit(run)
-
-
-# positions of the value-carrying leaves in _plan_leaves order — the slots
-# dynamic value updates scatter into (dynamic/delta.py patches the sharded
-# stacked leaves by these indices)
-LEAF_FLAT_VALUES = 2
-LEAF_FRINGE_VALS = 5
-LEAF_KB_VALS = 12
-
-
-def _plan_leaves(plan: NeutronPlan) -> Tuple[jax.Array, ...]:
-    """Executor-body args in ``_fused_run`` order (without b)."""
-    return (
-        plan.step_window, plan.step_col, plan.flat_values,
-        plan.fringe_rows, plan.fringe_cols, plan.fringe_vals,
-        plan.col_perm, plan.gather_src_matrix, plan.gather_src_vector,
-        plan.fringe_kb_chunk, plan.fringe_kb_rows,
-        plan.fringe_kb_cols, plan.fringe_kb_vals,
-    )
-
-
-# --- structural-delta merge extension --------------------------------------
-# A DeltaFringe sidecar (dynamic/delta.py) carries inserts/deletes that the
-# base plan's static structure cannot absorb, as a capacity-padded COO
-# executed through the same fringe tier dispatch.  Its contribution joins
-# the gather merge *inside* the fused jitted program: one dispatch still.
-_N_DELTA_LEAVES = 8  # d_rows, d_cols, d_vals, d_gsrc, kb_chunk/rows/cols/vals
-
-
-@functools.lru_cache(maxsize=None)
-def _delta_contrib_run(m: int, bk_cfg: int, bn: int, impl,
-                       reorder_cols: bool, fringe_chunk, dsig: Tuple):
-    """Delta-sidecar contribution body: (delta leaves, col_perm, b) -> (M, N)."""
-    _tag, _cap, num_rows, tier, dbk, _nch, _nkb = dsig
-
-    def contrib(d_rows, d_cols, d_vals, d_gsrc, kbc, kbr, kbcol, kbv,
-                col_perm, b):
-        n = b.shape[1]
-        bp = _permute_pad_b(b, col_perm, reorder_cols, bk_cfg, bn)
-        packed = ops.delta_fringe_spmm(
-            d_rows, d_cols, d_vals, bp,
-            num_rows=num_rows, bn=bn, impl=impl, chunk=fringe_chunk,
-            tier=tier, bk=dbk,
-            kb_chunk=kbc, kb_rows=kbr, kb_cols=kbcol, kb_vals=kbv,
-        )[:, :n]
-        return _gather_rows(packed, d_gsrc)
-
-    return contrib
-
-
-@functools.lru_cache(maxsize=None)
-def _delta_executor(sig: Tuple, dsig: Tuple, batch: Optional[int]):
-    """Fused base-plan + delta-sidecar executor, one jitted program.
-
-    Cached per (plan signature, delta signature, batch): delta capacity
-    grows in powers of two, so a stream of updates retraces only on
-    capacity doublings, never per mutation.
-    """
-    run = _fused_run(sig)
-    (_version, shape, _bm, bk, bn, impl, reorder_cols, fringe_chunk,
-     *_rest) = sig
-    contrib = _delta_contrib_run(
-        shape[0], bk, bn, impl, reorder_cols, fringe_chunk, dsig
-    )
-
-    def body(*args):
-        leaves = args[:_N_PLAN_LEAVES]
-        dleaves = args[_N_PLAN_LEAVES:_N_PLAN_LEAVES + _N_DELTA_LEAVES]
-        b = args[-1]
-        col_perm = leaves[6]
-        return run(*leaves, b) + contrib(*dleaves, col_perm, b)
-
-    if batch is None:
-        return jax.jit(body)
-    vb = jax.vmap(
-        body, in_axes=(None,) * (_N_PLAN_LEAVES + _N_DELTA_LEAVES) + (0,)
-    )
-    return jax.jit(vb)
-
-
-@functools.lru_cache(maxsize=None)
-def _delta_only_executor(m: int, bk_cfg: int, bn: int, impl,
-                         fringe_chunk, dsig: Tuple, batch: Optional[int]):
-    """Standalone delta contribution (used to extend ``execute_sharded``,
-    whose shard_map program is not re-entered per delta state)."""
-    contrib = _delta_contrib_run(m, bk_cfg, bn, impl, False, fringe_chunk,
-                                 dsig)
-
-    def body(*args):
-        *dleaves, col_perm, b = args
-        return contrib(*dleaves, col_perm, b)
-
-    if batch is None:
-        return jax.jit(body)
-    vb = jax.vmap(body, in_axes=(None,) * (_N_DELTA_LEAVES + 1) + (0,))
-    return jax.jit(vb)
-
-
-def execute_with_delta(plan: NeutronPlan, delta, b: jax.Array) -> jax.Array:
-    """C = (A_base + A_delta) @ B in one fused dispatch.
-
-    ``delta`` is a ``dynamic.delta.DeltaFringe`` (duck-typed here: anything
-    with ``.leaves`` — the 8 capacity-padded sidecar arrays — and ``.sig``).
-    The sidecar joins the gather merge additively inside the same jitted
-    program as the base plan's two engine paths.
-    """
-    _validate_rhs(b, plan.shape)
-    batch = int(b.shape[0]) if b.ndim == 3 else None
-    fn = _delta_executor(plan.signature(), delta.sig, batch)
-    return fn(*_plan_leaves(plan), *delta.leaves, b)
-
-
-def execute_delta_contribution(
-    shape: Tuple[int, int], config: SpmmConfig, delta, b: jax.Array
-) -> jax.Array:
-    """The delta sidecar's own (M, N) [or (batch, M, N)] contribution."""
-    batch = int(b.shape[0]) if b.ndim == 3 else None
-    fn = _delta_only_executor(
-        shape[0], config.bk, config.bn, config.impl, config.fringe_chunk,
-        delta.sig, batch,
-    )
-    col_perm = jnp.arange(shape[1], dtype=jnp.int32)
-    return fn(*delta.leaves, col_perm, b)
-
-
-def execute(plan: NeutronPlan, b: jax.Array) -> jax.Array:
-    """Full coordinated SpMM: C = A @ B, original row order, fp32.
-
-    ``b`` may be a single ``(K, N)`` operand or a batched ``(batch, K, N)``
-    stack of right-hand sides; the batched form returns ``(batch, M, N)``
-    from one vmapped dispatch compiled once per ``(signature, batch)``.
-    Single end-to-end jitted dispatch either way: both engine paths plus
-    the scatter-free gather merge compile into one program (empty paths
-    are dropped at trace time).
-    """
-    _validate_rhs(b, plan.shape)
-    if b.ndim == 2:
-        fn = _fused_executor(plan.signature())
-    else:
-        fn = _batched_executor(plan.signature(), int(b.shape[0]))
-    return fn(*_plan_leaves(plan), b)
-
-
-def _validate_rhs(b: jax.Array, shape: Tuple[int, int]) -> None:
-    """Reject an operand whose K disagrees with the plan.
-
-    Without this, a short b zero-pads up to the plan's k_pad inside the
-    executor — every kernel shape matches and nonzeros beyond b's K
-    silently multiply against zero rows (wrong output, no error).
-    """
-    if b.ndim not in (2, 3):
-        raise ValueError(
-            f"b must be (K, N) or (batch, K, N); got shape {tuple(b.shape)}"
-        )
-    if int(b.shape[-2]) != shape[1]:
-        raise ValueError(
-            f"operand K={int(b.shape[-2])} does not match the plan's "
-            f"K={shape[1]} (plan shape {shape})"
-        )
-
-
-# --- multi-device sharded executor -----------------------------------------
+# --- multi-device sharded plan build ----------------------------------------
 # The window-cost model that balances the two intra-chip engine paths also
 # balances inter-device shards: row-windows are LPT-assigned to mesh devices
 # by coordinator.balance_row_window_list over cost-model window costs, each
@@ -920,54 +305,6 @@ def _validate_rhs(b: jax.Array, shape: Tuple[int, int]) -> None:
 # shard_map body serves every device), and since every shard owns a disjoint
 # set of output rows the merge is an all-gather of packed rows followed by
 # one gather — no psum, no scatter-add.
-
-
-@dataclasses.dataclass
-class ShardedPlan:
-    """Prepared multi-device execution plan.
-
-    ``shard_axis == "rows"``: plan leaves are stacked along a leading shard
-    dim; device s executes shard s's sub-plan and emits its packed
-    ``(rows_per_shard, N)`` block; ``assemble`` maps original rows into the
-    all-gathered stack.  ``shard_axis == "rhs"``: one replicated plan, B
-    columns sharded (the cost model picks this when the row-window
-    distribution is too skewed to balance, or there are fewer windows than
-    devices).
-    """
-
-    leaves: Tuple[jax.Array, ...]   # _fused_run args (stacked iff "rows")
-    sig: Tuple                      # mesh-uniform per-shard signature
-    mesh: Any
-    axis_name: str
-    shard_axis: str                 # "rows" | "rhs"
-    n_shards: int
-    assemble: Optional[jax.Array]   # (M,) int32 into stacked rows ("rows")
-    shape: Tuple[int, int]
-    config: SpmmConfig
-    stats: Tuple
-    # host-side COO->slot maps for dynamic value updates (see UpdateMaps)
-    update_maps: Optional[ShardedUpdateMaps] = None
-
-    @property
-    def stats_dict(self) -> Dict:
-        return dict(self.stats)
-
-    def signature(self) -> Tuple:
-        """Static structure key; never collides with NeutronPlan.signature()
-        (distinct leading tag + arity), so sharded executors can share cache
-        machinery with the fused ones without aliasing."""
-        return (
-            "sharded", self.shard_axis, self.n_shards, self.axis_name,
-            tuple(self.mesh.devices.shape), self.sig,
-        )
-
-
-def _pad_to(a: np.ndarray, n: int, fill=0) -> np.ndarray:
-    """Pad axis 0 of ``a`` to length ``n`` with ``fill``."""
-    if a.shape[0] == n:
-        return a
-    pad = np.full((n - a.shape[0],) + a.shape[1:], fill, a.dtype)
-    return np.concatenate([a, pad])
 
 
 def prepare_sharded(
@@ -988,10 +325,10 @@ def prepare_sharded(
     distributed) and replicating the plan while sharding RHS columns
     (perfectly balanced but plan-replicated; chosen when window costs are
     too skewed or too few).  The returned plan executes via
-    :func:`execute_sharded`.
+    ``execute_sharded``.
     """
     m, k = shape
-    rows, cols, vals = _validate_coo(rows, cols, vals, shape)
+    rows, cols, vals = plan_ir.validate_coo(rows, cols, vals, shape)
     if config.reorder_cols:
         raise ValueError(
             "prepare_sharded does not support reorder_cols=True: per-shard "
@@ -1027,7 +364,7 @@ def prepare_sharded(
             key_sorted=um.key_sorted, key_order=um.key_order,
         )
         return ShardedPlan(
-            leaves=_plan_leaves(plan), sig=plan.signature(), mesh=mesh,
+            leaves=plan_ir.plan_leaves(plan), sig=plan.signature(), mesh=mesh,
             axis_name=axis_name, shard_axis="rhs", n_shards=n_shards,
             assemble=None, shape=tuple(shape), config=config,
             stats=base_stats + (("nnz", int(rows.shape[0])),),
@@ -1047,12 +384,12 @@ def prepare_sharded(
     rows_w_all = np.minimum(
         (np.arange(nw, dtype=np.int64) + 1) * config.bm, m
     ) - np.arange(nw, dtype=np.int64) * config.bm
-    row_loads = np.array([int(rows_w_all[l].sum()) for l in lists])
+    row_loads = np.array([int(rows_w_all[li].sum()) for li in lists])
     for w in empty:
         s = int(np.argmin(row_loads))
         lists[s].append(int(w))
         row_loads[s] += int(rows_w_all[w])
-    assignment = [np.asarray(l, np.int64) for l in lists]
+    assignment = [np.asarray(li, np.int64) for li in lists]
     imbalance = list_imbalance(assignment, wc) if nw else 1.0
     shard_of_window = np.zeros(nw, np.int64)
     local_window_start = np.zeros(nw, np.int64)
@@ -1101,11 +438,10 @@ def prepare_sharded(
     )
     chunk_eff = ops.effective_chunk(cfg.fringe_chunk)
 
-    stacked: List[List[np.ndarray]] = [[] for _ in range(_N_PLAN_LEAVES)]
     kb_streams = []
     for p in plans:
         if u_tier == "ksharded" and p.has_fringe and cfg.impl != "xla":
-            kb_streams.append(_bucket_fringe_kblocks(
+            kb_streams.append(plan_ir.bucket_fringe_kblocks(
                 np.asarray(p.fringe_rows), np.asarray(p.fringe_cols),
                 np.asarray(p.fringe_vals), k_pad, u_bk, chunk_eff,
             ))
@@ -1118,33 +454,11 @@ def prepare_sharded(
     nnzkb_max = max(s[1].shape[0] for s in kb_streams)
 
     # the kernel window count grows by one: padded tile-stream steps target
-    # the dedicated window nw_max, never a real slot.  Targeting window 0
-    # would duplicate a real (window, k-block) pair and break the densified
-    # GEMM's assume_unique index-scatter (last-tile-wins would zero the real
-    # tile).  Padded steps only collide with each other — zero over zero.
+    # the dedicated window nw_max, never a real slot (see stack_shard_leaves)
     nw_kernel = nw_max + 1
-    for p, kb in zip(plans, kb_streams):
-        # padding is inert everywhere: padded tile steps carry zero values
-        # into the extra window, padded fringe entries add 0.0 to packed row
-        # 0 (the fringe kernels accumulate, never overwrite), padded kb
-        # chunks target k-block 0 with zero values, and padded gather slots
-        # are -1 (no contribution)
-        leaves = [np.asarray(x) for x in _plan_leaves(p)]
-        sw, sc, fv, fr, fc, fvv, cp, gm, gv = leaves[:9]
-        kbc, kbr, kbcol, kbv = kb[:4]
-        padded = (
-            _pad_to(sw, t_max, nw_max), _pad_to(sc, t_max),
-            _pad_to(fv, t_max, 0.0),
-            _pad_to(fr, nnzf_max), _pad_to(fc, nnzf_max),
-            _pad_to(fvv, nnzf_max, 0.0),
-            cp,  # identity (reorder_cols is rejected above); same all shards
-            gm, gv,  # already (m_loc_max,) — prepared at the padded shape
-            _pad_to(kbc, nch_max), _pad_to(kbr, nnzkb_max),
-            _pad_to(kbcol, nnzkb_max), _pad_to(kbv, nnzkb_max, 0.0),
-        )
-        for i, arr in enumerate(padded):
-            stacked[i].append(arr)
-    leaves = tuple(jnp.asarray(np.stack(col)) for col in stacked)
+    leaves = plan_ir.stack_shard_leaves(
+        plans, kb_streams, t_max, nw_max, nnzf_max, nch_max, nnzkb_max
+    )
 
     sig = (
         PLAN_FORMAT_VERSION,
@@ -1172,7 +486,7 @@ def prepare_sharded(
         else:
             kb_pos = np.full(um.nnz, -1, np.int64)
         shard_maps.append(dataclasses.replace(um, kb_pos=kb_pos))
-    key_sorted, key_order = _build_key_index(rows, cols, k)
+    key_sorted, key_order = plan_ir.build_key_index(rows, cols, k)
     smaps = ShardedUpdateMaps(
         shape=tuple(shape), rows=rows, cols=cols, vals=vals.copy(),
         shard_of_nnz=shard_of_nnz, local_of_nnz=local_of_nnz,
@@ -1204,224 +518,5 @@ def prepare_sharded(
         leaves=leaves, sig=sig, mesh=mesh, axis_name=axis_name,
         shard_axis="rows", n_shards=n_shards,
         assemble=jnp.asarray(assemble), shape=tuple(shape), config=config,
-        stats=stats, update_maps=smaps,
+        stats=stats, update_maps=smaps, rows_per_shard=m_loc_max,
     )
-
-
-_SHARDED_TRACES: list = []  # signatures appended at trace time (tests)
-
-
-def sharded_trace_count() -> int:
-    """Number of sharded-executor traces since process start (test hook)."""
-    return len(_SHARDED_TRACES)
-
-
-# per-shard ranks of the _fused_run plan args, for building PartitionSpecs
-_LEAF_RANKS = (1, 1, 3, 1, 1, 1, 1, 1, 1, 1, 1, 1, 1)
-
-
-@functools.lru_cache(maxsize=None)
-def _sharded_executor(sig: Tuple, mesh, axis_name: str, shard_axis: str,
-                      batch: Optional[int]):
-    """shard_map-wrapped fused executor, cached per sharded signature.
-
-    "rows": leaves arrive stacked (leading shard dim), each device squeezes
-    its slice and runs the fused body on replicated b; out_specs concatenate
-    the disjoint packed row blocks (the only cross-device movement — an
-    all-gather of results, no scatter-add).  "rhs": leaves replicated, b
-    column-sharded, outputs concatenate along N.  ``batch`` selects the
-    vmapped multi-RHS body.
-    """
-    run = _fused_run(sig)
-    b_rank = 2 if batch is None else 3
-
-    if shard_axis == "rows":
-        in_specs = tuple(
-            leading_axis_spec(r + 1, axis_name) for r in _LEAF_RANKS
-        ) + (replicated_spec(b_rank),)
-        out_specs = (
-            leading_axis_spec(2, axis_name) if batch is None
-            else axis_spec(3, 1, axis_name)  # (batch, shard-stacked rows, N)
-        )
-
-        def body(*args):
-            *lv, bb = args
-            lv = [x[0] for x in lv]  # squeeze this device's shard slice
-            if batch is None:
-                return run(*lv, bb)
-            return jax.vmap(lambda one: run(*lv, one))(bb)
-
-        sm = shard_map(body, mesh, in_specs, out_specs)
-
-        @jax.jit
-        def _exec(*args):
-            _SHARDED_TRACES.append((sig, shard_axis, batch))
-            *leaves, assemble, b = args
-            flat = sm(*leaves, b)  # (..., n_shards * rows_per_shard, N)
-            return jnp.take(flat, assemble, axis=-2)
-
-        return _exec
-
-    # rhs: replicated plan, column-sharded b, outputs concatenated along N
-    in_specs = tuple(replicated_spec(r) for r in _LEAF_RANKS) + (
-        trailing_axis_spec(b_rank, axis_name),
-    )
-    out_specs = trailing_axis_spec(b_rank, axis_name)
-
-    def body(*args):
-        *lv, bb = args
-        if batch is None:
-            return run(*lv, bb)
-        return jax.vmap(lambda one: run(*lv, one))(bb)
-
-    sm = shard_map(body, mesh, in_specs, out_specs)
-
-    @jax.jit
-    def _exec(*args):
-        _SHARDED_TRACES.append((sig, shard_axis, batch))
-        return sm(*args)
-
-    return _exec
-
-
-def execute_sharded(splan: ShardedPlan, b: jax.Array) -> jax.Array:
-    """Multi-device coordinated SpMM: C = A @ B across ``splan.mesh``.
-
-    Accepts ``(K, N)`` or batched ``(batch, K, N)`` right-hand sides, like
-    :func:`execute`.  Bit-identical row ownership to the single-device
-    executor: every output row is computed by exactly one shard.
-    """
-    _validate_rhs(b, splan.shape)
-    batch = int(b.shape[0]) if b.ndim == 3 else None
-    if splan.shard_axis == "rhs" and b.shape[-1] % splan.n_shards:
-        raise ValueError(
-            f"rhs-sharded plan needs N divisible by n_shards="
-            f"{splan.n_shards}; got N={b.shape[-1]} (re-prepare with "
-            f"shard_axis='rows' or pad B)"
-        )
-    fn = _sharded_executor(
-        splan.sig, splan.mesh, splan.axis_name, splan.shard_axis, batch
-    )
-    if splan.shard_axis == "rows":
-        return fn(*splan.leaves, splan.assemble, b)
-    return fn(*splan.leaves, b)
-
-
-def neutron_spmm(
-    rows: np.ndarray,
-    cols: np.ndarray,
-    vals: np.ndarray,
-    shape: Tuple[int, int],
-    b: jax.Array,
-    config: SpmmConfig = SpmmConfig(),
-) -> jax.Array:
-    """One-shot convenience: prepare + execute."""
-    plan = prepare(rows, cols, vals, shape, config)
-    return execute(plan, b)
-
-
-class SpMMOperator:
-    """Differentiable fixed-structure SpMM: C = A @ B with dC/dB = A^T @ g.
-
-    Both directions run the coordinated dual-path executor (the transpose
-    gets its own plan — partition/reorder of A^T).  Used by GNN training
-    (examples/gcn_training.py) where A is the normalized adjacency.
-    """
-
-    def __init__(
-        self,
-        rows: np.ndarray,
-        cols: np.ndarray,
-        vals: np.ndarray,
-        shape: Tuple[int, int],
-        config: SpmmConfig = SpmmConfig(),
-    ):
-        self.plan = prepare(rows, cols, vals, shape, config)
-        self.plan_t = prepare(
-            np.asarray(cols), np.asarray(rows), np.asarray(vals),
-            (shape[1], shape[0]), config,
-        )
-
-        @jax.custom_vjp
-        def _f(b):
-            return execute(self.plan, b)
-
-        def _fwd(b):
-            return _f(b), None
-
-        def _bwd(_, g):
-            return (execute(self.plan_t, g),)
-
-        _f.defvjp(_fwd, _bwd)
-        self._f = _f
-
-    def __call__(self, b: jax.Array) -> jax.Array:
-        return self._f(b)
-
-
-class NeutronSpMM:
-    """Epoch-loop operator with adaptive AIV-AIC coordination (§5.3).
-
-    Re-prepares the plan when the coordinator migrates windows; per-epoch
-    path timings come from host wall-clock around the jitted paths (the
-    Ascend on-device timers' analogue).
-    """
-
-    def __init__(
-        self,
-        rows: np.ndarray,
-        cols: np.ndarray,
-        vals: np.ndarray,
-        shape: Tuple[int, int],
-        config: SpmmConfig = SpmmConfig(),
-        cost_model: Optional[EngineCostModel] = None,
-        epsilon: float = 0.05,
-    ):
-        self.rows, self.cols, self.vals = (
-            np.asarray(rows), np.asarray(cols), np.asarray(vals)
-        )
-        self.shape = tuple(shape)
-        self.config = config
-        self.cost_model = cost_model or default_cost_model(n_cols=config.bn)
-        self.plan = prepare(rows, cols, vals, shape, config, self.cost_model)
-        self.epsilon = epsilon
-        self._alpha = self.plan.stats_dict["alpha"]
-        self._needs_warmup = True
-        self.epoch_log: list = []
-
-    def run_epoch(self, b: jax.Array) -> jax.Array:
-        if self._needs_warmup:  # exclude (re)compile from epoch timings
-            execute_matrix_path(self.plan, b).block_until_ready()
-            execute_vector_path(self.plan, b).block_until_ready()
-            self._needs_warmup = False
-        t0 = time.perf_counter()
-        cm = execute_matrix_path(self.plan, b)
-        cm.block_until_ready()
-        t_matrix = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        cv = execute_vector_path(self.plan, b)
-        cv.block_until_ready()
-        t_vector = time.perf_counter() - t0
-
-        skew = AdaptiveCoordinator.skew(t_matrix, t_vector)
-        self.epoch_log.append(
-            {"t_matrix": t_matrix, "t_vector": t_vector, "skew": skew,
-             "alpha": self._alpha}
-        )
-        if skew > 1.0 + self.epsilon and len(self.epoch_log) >= 2:
-            self._rebalance(t_matrix, t_vector)
-        return cm + cv
-
-    def _rebalance(self, t_matrix: float, t_vector: float) -> None:
-        """Nudge alpha toward balanced finish time and re-prepare (Eq. 7)."""
-        ratio = t_matrix / max(t_vector, 1e-12)
-        # matrix slower -> raise alpha (send more to vector path); bisection step
-        new_alpha = float(np.clip(self._alpha * ratio ** 0.5, 1e-6, 1.0))
-        if abs(new_alpha - self._alpha) / max(self._alpha, 1e-12) < 1e-3:
-            return
-        self._alpha = new_alpha
-        cfg = dataclasses.replace(self.config, alpha=new_alpha)
-        self.plan = prepare(
-            self.rows, self.cols, self.vals, self.shape, cfg, self.cost_model
-        )
-        self._needs_warmup = True

@@ -4,13 +4,14 @@ cost-model compaction, and a persistent plan registry for warm-started
 serving."""
 from . import delta, registry
 from .delta import (
-    DeltaFringe, DynamicPlan, GraphDelta, build_delta_fringe, update_values,
+    DeltaFringe, DynamicPlan, GraphDelta, ShardedDeltaFringe,
+    build_delta_fringe, build_sharded_delta_fringe, update_values,
 )
 from .registry import PlanRegistry, RegistryError, coo_fingerprint
 
 __all__ = [
     "delta", "registry",
-    "DeltaFringe", "DynamicPlan", "GraphDelta", "build_delta_fringe",
-    "update_values",
+    "DeltaFringe", "DynamicPlan", "GraphDelta", "ShardedDeltaFringe",
+    "build_delta_fringe", "build_sharded_delta_fringe", "update_values",
     "PlanRegistry", "RegistryError", "coo_fingerprint",
 ]

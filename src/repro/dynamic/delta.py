@@ -15,37 +15,46 @@ forcing a full re-``prepare`` per change, in three layers:
    updated plan is *bit-identical* to a fresh prepare of the new values.
 
 2. **Structural delta sidecar** — :class:`DynamicPlan` accumulates edge
-   inserts/deletes in a capacity-padded COO :class:`DeltaFringe` executed
+   inserts/deletes in a capacity-padded COO ``plan_ir.DeltaFringe`` executed
    through the existing fringe tier dispatch (``ops.delta_fringe_spmm``)
    and merged additively into the fused gather merge
-   (``core.spmm.execute_with_delta``).  Deletes are value-negations against
+   (``exec.api.execute_with_delta``).  Deletes are value-negations against
    the base plan, so the base arrays never change shape.  Capacity grows in
    powers of two: a mutation stream retraces logarithmically, not per edge.
 
 3. **Cost-model compaction** — once the sidecar crosses the
    ``cost_model.should_compact`` thresholds (delta-nnz fraction or
    predicted fringe-path slowdown), the delta folds into a fresh
-   ``prepare()`` and the sidecar resets.
+   ``prepare()`` and the sidecar resets.  The fold can also run off-thread:
+   ``snapshot_for_compaction``/``adopt_compacted`` let a server (see
+   ``serve.spmm_service``) build the fresh plan on a worker and atomically
+   swap it in between drains, so compaction never blocks serving.
 
-All three layers work over both ``NeutronPlan`` and ``ShardedPlan`` (the
-sharded fast path scatters into the per-shard stacked leaves; the sidecar
-contribution is added outside the ``shard_map`` program).
+All three layers work over both ``NeutronPlan`` and ``ShardedPlan``.  The
+sharded fast path scatters into the per-shard stacked leaves, and the
+sharded sidecar is *routed*: every delta row lands on its owning shard
+(``plan_ir.build_sharded_delta_fringe``) and merges inside the per-shard
+fused body of the single ``shard_map`` dispatch — no post-pass dispatch.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import spmm
+from ..core import plan_ir, spmm
 from ..core.cost_model import (
     CompactionDecision, DELTA_MAX_FRACTION, DELTA_MAX_SLOWDOWN,
-    EngineCostModel, default_cost_model, select_fringe_tier, should_compact,
+    EngineCostModel, default_cost_model, should_compact,
 )
-from ..kernels import ops
+from ..core.plan_ir import (  # noqa: F401  (re-exported; layout owned by plan_ir)
+    DeltaFringe, ShardedDeltaFringe, build_delta_fringe,
+    build_sharded_delta_fringe,
+)
+from ..exec import api as exec_api
 
 PlanLike = Union[spmm.NeutronPlan, spmm.ShardedPlan]
 
@@ -188,14 +197,14 @@ def _update_values_sharded(
         if fringe_ids.size:
             pos = jnp.asarray(um.fringe_pos[fringe_ids])
             v32 = jnp.asarray(lcur[fringe_ids].astype(np.float32))
-            lf = spmm.LEAF_FRINGE_VALS
+            lf = plan_ir.LEAF_FRINGE_VALS
             leaves[lf] = (
                 leaves[lf].at[s, pos].set(v32) if stacked
                 else leaves[lf].at[pos].set(v32)
             )
             kb = um.kb_pos[fringe_ids]
             if kb.size and kb[0] >= 0:
-                lk = spmm.LEAF_KB_VALS
+                lk = plan_ir.LEAF_KB_VALS
                 kbj = jnp.asarray(kb)
                 leaves[lk] = (
                     leaves[lk].at[s, kbj].set(v32) if stacked
@@ -203,7 +212,7 @@ def _update_values_sharded(
                 )
         if core_ids.size:
             touched, sums = _recompute_core_slots(um, core_ids, lcur)
-            lv = spmm.LEAF_FLAT_VALUES
+            lv = plan_ir.LEAF_FLAT_VALUES
             orig = leaves[lv]
             if stacked:
                 flat = orig.reshape(orig.shape[0], -1)
@@ -292,99 +301,9 @@ class GraphDelta:
                    + self.upd_rows.size)
 
 
-def _pad_to(a: np.ndarray, n: int) -> np.ndarray:
-    if a.shape[0] >= n:
-        return a[:n]
-    return np.concatenate(
-        [a, np.zeros((n - a.shape[0],) + a.shape[1:], a.dtype)]
-    )
-
-
-@dataclasses.dataclass(frozen=True)
-class DeltaFringe:
-    """Capacity-padded COO sidecar, shaped for the fringe tier dispatch.
-
-    ``leaves`` are the 8 device arrays ``core.spmm.execute_with_delta``
-    appends to the fused program: packed rows / k-block-relative state
-    exactly mirror a plan's fringe, and padding entries (row 0, col 0,
-    value 0) are accumulate-inert.  ``sig`` keys the cached executor; it
-    changes only when ``capacity`` grows (powers of two).
-    """
-
-    leaves: Tuple[jax.Array, ...]
-    sig: Tuple
-    capacity: int
-    count: int
-    tier: str
-    bk: int
-
-
-def build_delta_fringe(
-    d_rows: np.ndarray,
-    d_cols: np.ndarray,
-    d_vals: np.ndarray,
-    shape: Tuple[int, int],
-    config: spmm.SpmmConfig,
-    capacity: Optional[int] = None,
-) -> DeltaFringe:
-    """Materialize a delta COO into a capacity-padded sidecar stream."""
-    m, k = shape
-    d_rows = _as_1d(d_rows, np.int64)
-    d_cols = _as_1d(d_cols, np.int64)
-    d_vals = np.asarray(d_vals)
-    count = int(d_rows.size)
-    cap = max(8, ops.pow2_at_least(count), int(capacity or 0))
-
-    if count:
-        order = np.argsort(d_rows * np.int64(k) + d_cols, kind="stable")
-        sr = d_rows[order]
-        first = np.concatenate([[True], sr[1:] != sr[:-1]])
-        row_ids = sr[first]
-        pr = (np.cumsum(first) - 1).astype(np.int32)
-        pc = d_cols[order].astype(np.int32)
-        pv = d_vals[order].astype(np.float32)
-    else:
-        row_ids = np.zeros(0, np.int64)
-        pr = np.zeros(0, np.int32)
-        pc = np.zeros(0, np.int32)
-        pv = np.zeros(0, np.float32)
-    pr, pc, pv = _pad_to(pr, cap), _pad_to(pc, cap), _pad_to(pv, cap)
-    gsrc = np.full(m, -1, np.int32)
-    if row_ids.size:
-        gsrc[row_ids] = np.arange(row_ids.size, dtype=np.int32)
-
-    # the sidecar flows through the same VMEM-budget tier selection as a
-    # plan fringe; the packed-row bound is the capacity (static per sig)
-    k_pad = ((k + config.bk - 1) // config.bk) * config.bk
-    tier, dbk = select_fringe_tier(
-        k_pad, cap, config.bn, vmem_budget=config.fringe_vmem_budget
-    )
-    chunk_eff = ops.effective_chunk(config.fringe_chunk)
-    if tier == "ksharded" and config.impl != "xla":
-        kbc, kbr, kbcol, kbv, _pos = spmm._bucket_fringe_kblocks(
-            pr, pc, pv, k_pad, dbk, chunk_eff
-        )
-        # deterministic shapes per capacity: each nonempty bucket wastes
-        # < chunk slots, so cap * chunk bounds the bucketed stream; pad
-        # chunks target k-block 0 with zero values (accumulate-inert)
-        kb_cap = cap * chunk_eff
-        kbc = _pad_to(kbc, kb_cap // chunk_eff)
-        kbr = _pad_to(kbr, kb_cap)
-        kbcol = _pad_to(kbcol, kb_cap)
-        kbv = _pad_to(kbv, kb_cap)
-    else:
-        kbc = np.zeros(1, np.int32)
-        kbr = np.zeros(1, np.int32)
-        kbcol = np.zeros(1, np.int32)
-        kbv = np.zeros(1, np.float32)
-
-    leaves = tuple(jnp.asarray(x) for x in (
-        pr, pc, pv, gsrc, kbc, kbr, kbcol, kbv
-    ))
-    sig = ("delta", cap, cap, tier, int(dbk),
-           int(kbc.shape[0]), int(kbr.shape[0]))
-    return DeltaFringe(leaves=leaves, sig=sig, capacity=cap, count=count,
-                       tier=tier, bk=int(dbk))
+# DeltaFringe / ShardedDeltaFringe and their builders live in
+# core.plan_ir (the sidecar layout is part of the plan IR); re-exported
+# above for existing importers of this module.
 
 
 # ---------------------------------------------------------------------------
@@ -431,10 +350,14 @@ class DynamicPlan:
         # logical overlay: key -> target value (None = deleted base entry).
         # The sidecar stream is derived from this against base values.
         self._overlay: Dict[int, Optional[float]] = {}
-        self._delta: Optional[DeltaFringe] = None
+        self._delta = None  # DeltaFringe | ShardedDeltaFringe, lazily built
         self._capacity = 0
         self.compactions = 0
         self.last_decision: Optional[CompactionDecision] = None
+        # monotone mutation counter: every state change (update/compact/
+        # adopt) bumps it, so an off-thread compaction can detect that its
+        # snapshot went stale before the swap (serve.spmm_service)
+        self.version = 0
         # compaction-decision inputs are constant between compactions;
         # computing them per update batch would make every O(delta) update
         # pay an O(base-nnz) host scan
@@ -624,6 +547,7 @@ class DynamicPlan:
             )
         structural = overlay != self._overlay
         self._overlay = overlay
+        self.version += 1
         if structural:
             self._delta = None  # rematerialized lazily at next execute
 
@@ -663,19 +587,44 @@ class DynamicPlan:
         return int((maps.path == spmm.PATH_FRINGE).sum())
 
     def compact(self) -> None:
-        """Fold the delta sidecar into a fresh prepared plan."""
+        """Fold the delta sidecar into a fresh prepared plan (blocking)."""
         rows, cols, vals = self.to_coo()
+        self.adopt_compacted(self.build_compacted(rows, cols, vals))
+
+    def build_compacted(self, rows, cols, vals) -> PlanLike:
+        """Prepare the folded plan for a ``to_coo`` snapshot (pure build).
+
+        Runs no mutation on this object, so it may execute on a worker
+        thread while the current plan keeps serving; pair with
+        :meth:`snapshot_for_compaction` / :meth:`adopt_compacted`.
+        """
         old = self.plan
         if isinstance(old, spmm.ShardedPlan):
-            self.plan = spmm.prepare_sharded(
+            return spmm.prepare_sharded(
                 rows, cols, vals, self.shape, old.mesh, old.config,
                 self.cost_model, shard_axis=old.shard_axis,
                 axis_name=old.axis_name,
             )
-        else:
-            self.plan = spmm.prepare(
-                rows, cols, vals, self.shape, old.config, self.cost_model
-            )
+        return spmm.prepare(
+            rows, cols, vals, self.shape, old.config, self.cost_model
+        )
+
+    def snapshot_for_compaction(self):
+        """(version, rows, cols, vals) of the current logical matrix."""
+        rows, cols, vals = self.to_coo()
+        return self.version, rows, cols, vals
+
+    def adopt_compacted(self, plan: PlanLike,
+                        expected_version: Optional[int] = None) -> bool:
+        """Atomically swap in a compacted plan built from a snapshot.
+
+        Returns False (and changes nothing) when ``expected_version`` no
+        longer matches — mutations landed after the snapshot, so the folded
+        plan is stale and the caller should re-snapshot.
+        """
+        if expected_version is not None and expected_version != self.version:
+            return False
+        self.plan = plan
         self._overlay = {}
         self._delta = None
         # capacity resets with the fold: keeping the historical maximum
@@ -684,10 +633,20 @@ class DynamicPlan:
         # retraces anyway, so the capacity ratchet has nothing to save
         self._capacity = 0
         self.compactions += 1
+        self.version += 1
         self._refresh_base_costs()
+        return True
 
     # -- execution ----------------------------------------------------------
-    def _materialize(self) -> DeltaFringe:
+    def _materialize(self):
+        """Build (or reuse) the sidecar stream for the current overlay.
+
+        For a rows-sharded base plan the sidecar is *routed*: every delta
+        row is assigned to the shard that owns its output row and relabeled
+        to that shard's local coordinates (``ShardedDeltaFringe``), so each
+        shard merges its own slice inside the ``shard_map`` body.  An
+        rhs-sharded (plan-replicated) base replicates a plain sidecar.
+        """
         if self._delta is not None:
             return self._delta
         maps = self.maps
@@ -702,24 +661,32 @@ class DynamicPlan:
              else (t - base[i] if in_base[i] else t))
             for i, t in enumerate(targets)
         ], np.float64)
-        self._delta = build_delta_fringe(
-            keys // k, keys % k, vals, self.shape, self.config,
-            capacity=self._capacity,
-        )
+        plan = self.plan
+        if isinstance(plan, spmm.ShardedPlan) and plan.shard_axis == "rows":
+            self._delta = build_sharded_delta_fringe(
+                keys // k, keys % k, vals, plan, capacity=self._capacity,
+            )
+        else:
+            self._delta = build_delta_fringe(
+                keys // k, keys % k, vals, self.shape, self.config,
+                capacity=self._capacity,
+            )
         self._capacity = self._delta.capacity  # grow-only: bounded retraces
         return self._delta
 
     def execute(self, b: jax.Array) -> jax.Array:
-        """C = A_current @ B, merging base plan and delta sidecar."""
+        """C = A_current @ B: base plan + delta sidecar, one dispatch.
+
+        The sharded form merges the routed sidecar inside the ``shard_map``
+        program (``exec.api.execute_sharded(..., delta=...)``) — sharded
+        dynamic execution is a single dispatch, not a post-pass add.
+        """
         base = self.plan
         sharded = isinstance(base, spmm.ShardedPlan)
         if not self._overlay:
-            return (spmm.execute_sharded(base, b) if sharded
-                    else spmm.execute(base, b))
+            return (exec_api.execute_sharded(base, b) if sharded
+                    else exec_api.execute(base, b))
         delta = self._materialize()
         if sharded:
-            out = spmm.execute_sharded(base, b)
-            return out + spmm.execute_delta_contribution(
-                base.shape, base.config, delta, b
-            )
-        return spmm.execute_with_delta(base, delta, b)
+            return exec_api.execute_sharded(base, b, delta=delta)
+        return exec_api.execute_with_delta(base, delta, b)

@@ -18,6 +18,14 @@ recomputed from the restored plan.  Any mismatch, truncated shard, or
 malformed manifest raises :class:`RegistryError` — a clean failure the
 caller answers with a fresh ``prepare()`` (see ``load_or_prepare``), never
 a wrong answer.
+
+Sharded plans serialize too (``kind: "sharded"``): live mesh/device state
+cannot round-trip a process boundary, so the entry stores the canonical
+base COO + ``SpmmConfig`` + shard axis (+ the overlay delta state) and
+``load``/``warm_start`` re-shard onto a caller-provided (or freshly built)
+mesh instead of refusing.  Restoring a sharded entry therefore re-runs
+``prepare_sharded`` — the warm start preserves *state* (value updates and
+structural deltas), not preprocessing time.
 """
 from __future__ import annotations
 
@@ -54,6 +62,12 @@ class RegistryError(RuntimeError):
     """A registry entry is missing, corrupt, or format-incompatible."""
 
 
+# SpmmConfig fields that only tune *execution* (cache sizing), not the
+# prepared plan's structure — excluded from the fingerprint so a registry
+# entry stays valid across deployments that differ only in these knobs
+_EXECUTION_ONLY_CONFIG_FIELDS = ("executor_cache_capacity",)
+
+
 def coo_fingerprint(
     rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
     shape: Tuple[int, int], config: spmm.SpmmConfig,
@@ -62,7 +76,9 @@ def coo_fingerprint(
 
     Dtypes are canonicalized (int64 indices, float64 values) so the hash of
     a plan's evolved ``to_coo()`` state matches a caller re-registering the
-    same logical matrix from narrower host arrays.
+    same logical matrix from narrower host arrays.  Execution-only config
+    knobs are excluded — like ``plan.signature()``, the fingerprint keys
+    plan *structure*.
     """
     h = hashlib.sha256()
     for a, dtype in ((rows, np.int64), (cols, np.int64),
@@ -70,7 +86,10 @@ def coo_fingerprint(
         arr = np.ascontiguousarray(np.asarray(a, dtype))
         h.update(arr.tobytes())
     h.update(repr(tuple(shape)).encode())
-    h.update(repr(config).encode())
+    cfg = dataclasses.asdict(config)
+    for field in _EXECUTION_ONLY_CONFIG_FIELDS:
+        cfg.pop(field, None)
+    h.update(repr(sorted(cfg.items())).encode())
     return h.hexdigest()
 
 
@@ -103,14 +122,15 @@ class PlanRegistry:
 
     # -- save ---------------------------------------------------------------
     def save(self, name: str, dplan: DynamicPlan) -> str:
-        """Persist a dynamic plan (base arrays, update maps, delta state)."""
+        """Persist a dynamic plan (base arrays, update maps, delta state).
+
+        Sharded plans store the canonical base COO + config + shard axis
+        (mesh/device handles cannot round-trip a process); single-device
+        plans store the full leaf set so ``load`` skips ``prepare()``.
+        """
         _safe_name(name)
         if dplan.is_sharded:
-            raise RegistryError(
-                "sharded plans embed live mesh/device state and are not "
-                "serializable; re-prepare_sharded on restart (the COO and "
-                "config are what the registry would store anyway)"
-            )
+            return self._save_sharded(name, dplan)
         plan = dplan.plan
         maps = plan.update_maps
         tree: Dict[str, np.ndarray] = {}
@@ -118,23 +138,13 @@ class PlanRegistry:
             tree[f"leaf_{lname}"] = np.asarray(leaf)
         for mname in _MAPS_NAMES:
             tree[f"maps_{mname}"] = np.asarray(getattr(maps, mname))
-        overlay = dplan._overlay
-        keys = np.fromiter(overlay, np.int64, count=len(overlay))
-        has_target = np.array(
-            [overlay[int(key)] is not None for key in keys], bool
-        )
-        targets = np.array(
-            [overlay[int(key)] if overlay[int(key)] is not None else 0.0
-             for key in keys], np.float64,
-        )
-        tree["delta_keys"] = keys
-        tree["delta_has_target"] = has_target
-        tree["delta_targets"] = targets
+        tree.update(self._overlay_tree(dplan))
 
         rows, cols, vals = dplan.to_coo()
         meta = {
             "registry_format_version": REGISTRY_FORMAT_VERSION,
             "plan_format_version": spmm.PLAN_FORMAT_VERSION,
+            "kind": "plan",
             "name": name,
             "shape": list(plan.shape),
             "config": dataclasses.asdict(plan.config),
@@ -147,11 +157,57 @@ class PlanRegistry:
             ),
             "compactions": dplan.compactions,
         }
+        return self._write_entry(name, tree, meta)
+
+    @staticmethod
+    def _overlay_tree(dplan: DynamicPlan) -> Dict[str, np.ndarray]:
+        overlay = dplan._overlay
+        keys = np.fromiter(overlay, np.int64, count=len(overlay))
+        has_target = np.array(
+            [overlay[int(key)] is not None for key in keys], bool
+        )
+        targets = np.array(
+            [overlay[int(key)] if overlay[int(key)] is not None else 0.0
+             for key in keys], np.float64,
+        )
+        return {"delta_keys": keys, "delta_has_target": has_target,
+                "delta_targets": targets}
+
+    def _write_entry(self, name: str, tree: Dict, meta: Dict) -> str:
         d = os.path.join(self.root, _safe_name(name))
         step = (checkpoint.latest_step(d) or 0) + 1
         return checkpoint.save(
             d, step, tree, meta=meta, num_shards=1, keep=self.keep
         )
+
+    def _save_sharded(self, name: str, dplan: DynamicPlan) -> str:
+        splan = dplan.plan
+        maps = splan.update_maps
+        # base COO (current values — the fast path advances maps.vals) plus
+        # the structural overlay; load re-shards and replays the overlay
+        tree: Dict[str, np.ndarray] = {
+            "coo_rows": np.asarray(maps.rows, np.int64),
+            "coo_cols": np.asarray(maps.cols, np.int64),
+            "coo_vals": np.asarray(maps.vals),
+        }
+        tree.update(self._overlay_tree(dplan))
+        rows, cols, vals = dplan.to_coo()
+        meta = {
+            "registry_format_version": REGISTRY_FORMAT_VERSION,
+            "plan_format_version": spmm.PLAN_FORMAT_VERSION,
+            "kind": "sharded",
+            "name": name,
+            "shape": list(splan.shape),
+            "config": dataclasses.asdict(splan.config),
+            "shard_axis": splan.shard_axis,
+            "axis_name": splan.axis_name,
+            "n_shards": splan.n_shards,
+            "coo_hash": coo_fingerprint(
+                rows, cols, vals, splan.shape, splan.config
+            ),
+            "compactions": dplan.compactions,
+        }
+        return self._write_entry(name, tree, meta)
 
     # -- load ---------------------------------------------------------------
     def _read_entry(self, name: str) -> Tuple[Dict, Dict[str, np.ndarray]]:
@@ -206,9 +262,18 @@ class PlanRegistry:
             ) from e
         return meta, arrays
 
-    def load(self, name: str, **dynamic_kwargs) -> DynamicPlan:
-        """Restore a plan as a :class:`DynamicPlan` without any prepare()."""
+    def load(self, name: str, mesh=None, **dynamic_kwargs) -> DynamicPlan:
+        """Restore a plan as a :class:`DynamicPlan`.
+
+        Single-device entries reconstruct without any ``prepare()``.
+        Sharded entries re-shard onto ``mesh`` (or a freshly built 1-D
+        mesh over the stored shard count when ``mesh`` is None) — see the
+        module docstring.
+        """
         meta, arrays = self._read_entry(name)
+        if meta.get("kind", "plan") == "sharded":
+            return self._load_sharded(name, meta, arrays, mesh,
+                                      **dynamic_kwargs)
         try:
             cfg = spmm.SpmmConfig(**meta["config"])
             stats = tuple(tuple(kv) for kv in meta["stats"])
@@ -238,6 +303,11 @@ class PlanRegistry:
                 "plan"
             )
         dplan = DynamicPlan(plan, **dynamic_kwargs)
+        self._restore_overlay(dplan, meta, arrays)
+        return dplan
+
+    @staticmethod
+    def _restore_overlay(dplan: DynamicPlan, meta: Dict, arrays: Dict) -> None:
         keys = arrays["delta_keys"]
         has_target = arrays["delta_has_target"]
         targets = arrays["delta_targets"]
@@ -246,6 +316,39 @@ class PlanRegistry:
             for i, key in enumerate(keys)
         }
         dplan.compactions = int(meta.get("compactions", 0))
+
+    def _load_sharded(self, name: str, meta: Dict, arrays: Dict, mesh,
+                      **dynamic_kwargs) -> DynamicPlan:
+        try:
+            cfg = spmm.SpmmConfig(**meta["config"])
+            shape = tuple(meta["shape"])
+            shard_axis = meta["shard_axis"]
+            axis_name = meta["axis_name"]
+            n_shards = int(meta["n_shards"])
+            rows = arrays["coo_rows"]
+            cols = arrays["coo_cols"]
+            vals = arrays["coo_vals"]
+        except (KeyError, TypeError, ValueError) as e:
+            raise RegistryError(
+                f"sharded registry entry for {name!r} does not reconstruct "
+                f"a plan: {e}"
+            ) from e
+        if mesh is None:
+            from ..launch.mesh import make_spmm_mesh
+
+            try:
+                mesh = make_spmm_mesh(n_shards, axis_name)
+            except ValueError as e:
+                raise RegistryError(
+                    f"sharded entry {name!r} wants {n_shards} shards and no "
+                    f"mesh was provided: {e}"
+                ) from e
+        splan = spmm.prepare_sharded(
+            rows, cols, vals, shape, mesh, cfg,
+            shard_axis=shard_axis, axis_name=axis_name,
+        )
+        dplan = DynamicPlan(splan, **dynamic_kwargs)
+        self._restore_overlay(dplan, meta, arrays)
         return dplan
 
     def stored_coo_hash(self, name: str) -> str:
@@ -276,6 +379,46 @@ class PlanRegistry:
                 pass  # fall through to a fresh prepare
         dplan = DynamicPlan(
             spmm.prepare(rows, cols, vals, shape, config), **dynamic_kwargs
+        )
+        self.save(name, dplan)
+        return dplan
+
+    def load_or_prepare_sharded(
+        self,
+        name: str,
+        rows: np.ndarray,
+        cols: np.ndarray,
+        vals: np.ndarray,
+        shape: Tuple[int, int],
+        mesh,
+        config: spmm.SpmmConfig = spmm.SpmmConfig(),
+        shard_axis: str = "auto",
+        axis_name: Optional[str] = None,
+        **dynamic_kwargs,
+    ) -> DynamicPlan:
+        """Sharded counterpart of :func:`load_or_prepare`.
+
+        A matching entry (same COO fingerprint, compatible shard count)
+        restores the persisted *state* — value updates and overlay deltas —
+        re-sharded onto ``mesh``; anything else prepares fresh and
+        persists.  Corruption falls back to re-prepare.
+        """
+        fp = coo_fingerprint(rows, cols, vals, shape, config)
+        n_shards = int(mesh.shape[axis_name or mesh.axis_names[0]])
+        if self.has(name):
+            try:
+                meta, _ = self._read_entry(name)
+                if (meta.get("kind") == "sharded"
+                        and meta.get("coo_hash") == fp
+                        and int(meta.get("n_shards", -1)) == n_shards):
+                    return self.load(name, mesh=mesh, **dynamic_kwargs)
+            except RegistryError:
+                pass  # fall through to a fresh prepare
+        dplan = DynamicPlan(
+            spmm.prepare_sharded(rows, cols, vals, shape, mesh, config,
+                                 shard_axis=shard_axis,
+                                 axis_name=axis_name),
+            **dynamic_kwargs,
         )
         self.save(name, dplan)
         return dplan

@@ -1,0 +1,34 @@
+"""Executor pipeline: one composable builder for every dispatch flavor.
+
+Layering (enforced by ``tools/check_layers.py``):
+
+    core/plan_ir  ->  exec (this package)  ->  dynamic  ->  serve
+
+``exec`` consumes the plan IR and the kernel wrappers and produces cached,
+jitted executors; it never imports the dynamic or serving layers.  The
+public execution API (``execute``/``execute_sharded``/...) also remains
+reachable through the ``repro.core.spmm`` facade for historical call
+sites.
+"""
+from . import api, cache, pipeline
+from .api import (
+    execute, execute_delta_contribution, execute_matrix_path,
+    execute_sharded, execute_vector_path, execute_with_delta, neutron_spmm,
+    NeutronSpMM, SpMMOperator,
+)
+from .cache import (
+    EXECUTOR_CACHE, ExecutorCache, dispatch_count, fused_trace_count,
+    set_executor_cache_capacity, sharded_trace_count,
+)
+from .pipeline import build_delta_only_executor, build_executor
+
+__all__ = [
+    "api", "cache", "pipeline",
+    "execute", "execute_delta_contribution", "execute_matrix_path",
+    "execute_sharded", "execute_vector_path", "execute_with_delta",
+    "neutron_spmm", "NeutronSpMM", "SpMMOperator",
+    "EXECUTOR_CACHE", "ExecutorCache", "dispatch_count",
+    "fused_trace_count", "set_executor_cache_capacity",
+    "sharded_trace_count",
+    "build_delta_only_executor", "build_executor",
+]

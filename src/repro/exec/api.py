@@ -1,0 +1,315 @@
+"""Execution entry points over the unified pipeline.
+
+``execute`` / ``execute_sharded`` / ``execute_with_delta`` all resolve to
+one :func:`repro.exec.pipeline.build_executor` call — a single jitted
+dispatch whatever the flavor.  ``core.spmm`` re-exports everything here
+(lazily, so the core layer's import graph stays downward), which keeps
+every historical call site — ``repro.core.spmm.execute`` and friends —
+working unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import plan_ir
+from ..core.plan_ir import (
+    NeutronPlan, ShardedPlan, SpmmConfig, gather_rows, permute_pad_b,
+    plan_leaves, validate_rhs,
+)
+from ..kernels import ops
+from . import cache as _cache
+from .cache import (  # noqa: F401  (re-exported test hooks)
+    dispatch_count, fused_trace_count, sharded_trace_count,
+    set_executor_cache_capacity,
+)
+from .pipeline import build_delta_only_executor, build_executor
+
+
+def _apply_cache_capacity(config: SpmmConfig) -> None:
+    if config.executor_cache_capacity is not None:
+        _cache.EXECUTOR_CACHE.set_capacity(config.executor_cache_capacity)
+
+
+def execute(plan: NeutronPlan, b: jax.Array) -> jax.Array:
+    """Full coordinated SpMM: C = A @ B, original row order, fp32.
+
+    ``b`` may be a single ``(K, N)`` operand or a batched ``(batch, K, N)``
+    stack of right-hand sides; the batched form returns ``(batch, M, N)``
+    from one vmapped dispatch compiled once per ``(signature, batch)``.
+    Single end-to-end jitted dispatch either way: both engine paths plus
+    the scatter-free gather merge compile into one program (empty paths
+    are dropped at trace time).
+    """
+    validate_rhs(b, plan.shape)
+    _apply_cache_capacity(plan.config)
+    batch = int(b.shape[0]) if b.ndim == 3 else None
+    fn = build_executor(plan.signature(), batch=batch)
+    _cache.record_dispatch("fused", (plan.signature(), batch))
+    return fn(*plan_leaves(plan), b)
+
+
+def execute_with_delta(plan: NeutronPlan, delta, b: jax.Array) -> jax.Array:
+    """C = (A_base + A_delta) @ B in one fused dispatch.
+
+    ``delta`` is a ``plan_ir.DeltaFringe`` (duck-typed here: anything with
+    ``.leaves`` — the 8 capacity-padded sidecar arrays — and ``.sig``).
+    The sidecar joins the gather merge additively inside the same jitted
+    program as the base plan's two engine paths.
+    """
+    validate_rhs(b, plan.shape)
+    _apply_cache_capacity(plan.config)
+    batch = int(b.shape[0]) if b.ndim == 3 else None
+    fn = build_executor(plan.signature(), batch=batch, delta_sig=delta.sig)
+    _cache.record_dispatch("fused+delta", (plan.signature(), batch))
+    return fn(*plan_leaves(plan), *delta.leaves, b)
+
+
+def execute_sharded(
+    splan: ShardedPlan, b: jax.Array, delta=None
+) -> jax.Array:
+    """Multi-device coordinated SpMM: C = A @ B across ``splan.mesh``.
+
+    Accepts ``(K, N)`` or batched ``(batch, K, N)`` right-hand sides, like
+    :func:`execute`.  Bit-identical row ownership to the single-device
+    executor: every output row is computed by exactly one shard.
+
+    ``delta`` extends the program with a structural sidecar *inside* the
+    ``shard_map`` body — a ``plan_ir.ShardedDeltaFringe`` (rows axis:
+    stacked per-shard sidecars in local row coordinates, merged by each
+    owning shard before the all-gather) or a plain ``DeltaFringe`` (rhs
+    axis: replicated sidecar over the column-sharded operand).  Either way
+    sharded dynamic execution is one dispatch, not a post-pass.
+    """
+    validate_rhs(b, splan.shape)
+    _apply_cache_capacity(splan.config)
+    batch = int(b.shape[0]) if b.ndim == 3 else None
+    if splan.shard_axis == "rhs" and b.shape[-1] % splan.n_shards:
+        raise ValueError(
+            f"rhs-sharded plan needs N divisible by n_shards="
+            f"{splan.n_shards}; got N={b.shape[-1]} (re-prepare with "
+            f"shard_axis='rows' or pad B)"
+        )
+    if delta is not None:
+        routed = isinstance(delta, plan_ir.ShardedDeltaFringe)
+        if splan.shard_axis == "rows" and not routed:
+            raise ValueError(
+                "a rows-sharded plan needs its delta routed to owning "
+                "shards (plan_ir.build_sharded_delta_fringe), got a plain "
+                "DeltaFringe"
+            )
+        if splan.shard_axis == "rhs" and routed:
+            raise ValueError(
+                "an rhs-sharded plan replicates its delta; pass the plain "
+                "DeltaFringe, not a ShardedDeltaFringe"
+            )
+    fn = build_executor(
+        splan.sig, batch=batch,
+        delta_sig=None if delta is None else delta.sig,
+        mesh=splan.mesh, axis_name=splan.axis_name,
+        shard_axis=splan.shard_axis,
+    )
+    _cache.record_dispatch(
+        "sharded" if delta is None else "sharded+delta",
+        (splan.sig, splan.shard_axis, batch),
+    )
+    dleaves = () if delta is None else tuple(delta.leaves)
+    if splan.shard_axis == "rows":
+        return fn(*splan.leaves, *dleaves, splan.assemble, b)
+    return fn(*splan.leaves, *dleaves, b)
+
+
+def _pad_b(plan: NeutronPlan, b: jax.Array) -> jax.Array:
+    cfg = plan.config
+    return permute_pad_b(b, plan.col_perm, cfg.reorder_cols, cfg.bk, cfg.bn)
+
+
+def execute_matrix_path(plan: NeutronPlan, b: jax.Array) -> jax.Array:
+    """Dense-core path only; returns (M, N) contribution."""
+    cfg = plan.config
+    m, _ = plan.shape
+    n = b.shape[1]
+    if not plan.has_core:  # skip the dummy zero-tile dispatch entirely
+        return jnp.zeros((m, n), jnp.float32)
+    bp = _pad_b(plan, b)
+    packed = ops.block_stream_spmm(
+        plan.step_window, plan.step_col, plan.flat_values, bp,
+        num_windows=plan.num_windows, bm=cfg.bm, bk=cfg.bk, bn=cfg.bn,
+        impl=cfg.impl, assume_unique=True,  # prepare() emits unique pairs
+    )[:, :n]
+    return gather_rows(packed, plan.gather_src_matrix)
+
+
+def execute_vector_path(plan: NeutronPlan, b: jax.Array) -> jax.Array:
+    """Fringe path only; returns (M, N) contribution."""
+    cfg = plan.config
+    m, _ = plan.shape
+    n = b.shape[1]
+    if not plan.has_fringe:  # skip the 1-element dummy kernel entirely
+        return jnp.zeros((m, n), jnp.float32)
+    bp = _pad_b(plan, b)
+    packed = ops.fringe_spmm(
+        plan.fringe_rows, plan.fringe_cols, plan.fringe_vals, bp,
+        num_rows=int(plan.fringe_row_ids.shape[0]), bn=cfg.bn, impl=cfg.impl,
+        chunk=cfg.fringe_chunk,
+        tier=plan.fringe_tier, bk=plan.fringe_bk,
+        kb_chunk=plan.fringe_kb_chunk, kb_rows=plan.fringe_kb_rows,
+        kb_cols=plan.fringe_kb_cols, kb_vals=plan.fringe_kb_vals,
+    )[:, :n]
+    return gather_rows(packed, plan.gather_src_vector)
+
+
+def execute_delta_contribution(
+    shape: Tuple[int, int], config: SpmmConfig, delta, b: jax.Array
+) -> jax.Array:
+    """The delta sidecar's own (M, N) [or (batch, M, N)] contribution.
+
+    Kept as the differential baseline for the single-dispatch sharded
+    merge (and for callers that want the sidecar term alone); the serving
+    path no longer uses it as a post-pass.
+    """
+    batch = int(b.shape[0]) if b.ndim == 3 else None
+    fn = build_delta_only_executor(
+        shape[0], config.bk, config.bn, config.impl, config.fringe_chunk,
+        delta.sig, batch,
+    )
+    _cache.record_dispatch("delta_only", (shape, delta.sig, batch))
+    col_perm = jax.numpy.arange(shape[1], dtype=jax.numpy.int32)
+    return fn(*delta.leaves, col_perm, b)
+
+
+def neutron_spmm(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+    shape: Tuple[int, int],
+    b: jax.Array,
+    config: SpmmConfig = SpmmConfig(),
+) -> jax.Array:
+    """One-shot convenience: prepare + execute."""
+    from ..core import spmm  # lazy: core's facade may be mid-import
+
+    plan = spmm.prepare(rows, cols, vals, shape, config)
+    return execute(plan, b)
+
+
+class SpMMOperator:
+    """Differentiable fixed-structure SpMM: C = A @ B with dC/dB = A^T @ g.
+
+    Both directions run the coordinated dual-path executor (the transpose
+    gets its own plan — partition/reorder of A^T).  Used by GNN training
+    (examples/gcn_training.py) where A is the normalized adjacency.
+    """
+
+    def __init__(
+        self,
+        rows: np.ndarray,
+        cols: np.ndarray,
+        vals: np.ndarray,
+        shape: Tuple[int, int],
+        config: SpmmConfig = SpmmConfig(),
+    ):
+        from ..core import spmm  # lazy: core's facade may be mid-import
+
+        self.plan = spmm.prepare(rows, cols, vals, shape, config)
+        self.plan_t = spmm.prepare(
+            np.asarray(cols), np.asarray(rows), np.asarray(vals),
+            (shape[1], shape[0]), config,
+        )
+
+        @jax.custom_vjp
+        def _f(b):
+            return execute(self.plan, b)
+
+        def _fwd(b):
+            return _f(b), None
+
+        def _bwd(_, g):
+            return (execute(self.plan_t, g),)
+
+        _f.defvjp(_fwd, _bwd)
+        self._f = _f
+
+    def __call__(self, b: jax.Array) -> jax.Array:
+        return self._f(b)
+
+
+class NeutronSpMM:
+    """Epoch-loop operator with adaptive AIV-AIC coordination (§5.3).
+
+    Re-prepares the plan when the coordinator migrates windows; per-epoch
+    path timings come from host wall-clock around the jitted paths (the
+    Ascend on-device timers' analogue).
+    """
+
+    def __init__(
+        self,
+        rows: np.ndarray,
+        cols: np.ndarray,
+        vals: np.ndarray,
+        shape: Tuple[int, int],
+        config: SpmmConfig = SpmmConfig(),
+        cost_model=None,
+        epsilon: float = 0.05,
+    ):
+        from ..core import spmm  # lazy: core's facade may be mid-import
+        from ..core.cost_model import default_cost_model
+
+        self.rows, self.cols, self.vals = (
+            np.asarray(rows), np.asarray(cols), np.asarray(vals)
+        )
+        self.shape = tuple(shape)
+        self.config = config
+        self.cost_model = cost_model or default_cost_model(n_cols=config.bn)
+        self.plan = spmm.prepare(rows, cols, vals, shape, config,
+                                 self.cost_model)
+        self.epsilon = epsilon
+        self._alpha = self.plan.stats_dict["alpha"]
+        self._needs_warmup = True
+        self.epoch_log: list = []
+
+    def run_epoch(self, b: jax.Array) -> jax.Array:
+        if self._needs_warmup:  # exclude (re)compile from epoch timings
+            execute_matrix_path(self.plan, b).block_until_ready()
+            execute_vector_path(self.plan, b).block_until_ready()
+            self._needs_warmup = False
+        t0 = time.perf_counter()
+        cm = execute_matrix_path(self.plan, b)
+        cm.block_until_ready()
+        t_matrix = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        cv = execute_vector_path(self.plan, b)
+        cv.block_until_ready()
+        t_vector = time.perf_counter() - t0
+
+        from ..core.coordinator import AdaptiveCoordinator
+
+        skew = AdaptiveCoordinator.skew(t_matrix, t_vector)
+        self.epoch_log.append(
+            {"t_matrix": t_matrix, "t_vector": t_vector, "skew": skew,
+             "alpha": self._alpha}
+        )
+        if skew > 1.0 + self.epsilon and len(self.epoch_log) >= 2:
+            self._rebalance(t_matrix, t_vector)
+        return cm + cv
+
+    def _rebalance(self, t_matrix: float, t_vector: float) -> None:
+        """Nudge alpha toward balanced finish time and re-prepare (Eq. 7)."""
+        from ..core import spmm
+
+        ratio = t_matrix / max(t_vector, 1e-12)
+        # matrix slower -> raise alpha (send more to vector path); bisection
+        new_alpha = float(np.clip(self._alpha * ratio ** 0.5, 1e-6, 1.0))
+        if abs(new_alpha - self._alpha) / max(self._alpha, 1e-12) < 1e-3:
+            return
+        self._alpha = new_alpha
+        cfg = dataclasses.replace(self.config, alpha=new_alpha)
+        self.plan = spmm.prepare(
+            self.rows, self.cols, self.vals, self.shape, cfg, self.cost_model
+        )
+        self._needs_warmup = True

@@ -1,0 +1,150 @@
+"""Bounded executor cache + pipeline observability hooks.
+
+One process-wide LRU holds every compiled executor flavor (fused, batched,
+delta-extended, sharded — all built by ``exec.pipeline.build_executor``),
+replacing the five unbounded per-factory ``lru_cache`` dictionaries that
+previously grew without limit in a long-lived ``SpmmService`` process.  The
+capacity default is generous (hundreds of distinct plan structures) and can
+be set per deployment through ``SpmmConfig.executor_cache_capacity`` or
+:func:`set_executor_cache_capacity`.
+
+The trace/dispatch hooks are the pipeline's test surface:
+
+- ``fused_trace_count``    — times any fused body was traced (jit, vmap,
+  per-shard shard_map body alike; a retrace anywhere shows up here);
+- ``sharded_trace_count``  — times a sharded top-level program was traced;
+- ``dispatch_count``       — executor invocations issued by ``exec.api``
+  (one fused/sharded program launch each).  The sharded-dynamic
+  single-dispatch guarantee is asserted against this counter.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Any, Callable, Hashable, List
+
+DEFAULT_EXECUTOR_CACHE_CAPACITY = 256
+
+
+class ExecutorCache:
+    """A thread-safe LRU of built executors keyed by their full build key."""
+
+    def __init__(self, capacity: int = DEFAULT_EXECUTOR_CACHE_CAPACITY):
+        if capacity < 1:
+            raise ValueError(f"cache capacity must be >= 1, got {capacity}")
+        self._data: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self._capacity = int(capacity)
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    @property
+    def capacity(self) -> int:
+        return self._capacity
+
+    def set_capacity(self, capacity: int) -> None:
+        if capacity < 1:
+            raise ValueError(f"cache capacity must be >= 1, got {capacity}")
+        with self._lock:
+            self._capacity = int(capacity)
+            self._evict_locked()
+
+    def _evict_locked(self) -> None:
+        while len(self._data) > self._capacity:
+            self._data.popitem(last=False)
+            self.evictions += 1
+
+    def get_or_build(self, key: Hashable, builder: Callable[[], Any]) -> Any:
+        with self._lock:
+            if key in self._data:
+                self._data.move_to_end(key)
+                self.hits += 1
+                return self._data[key]
+        # build outside the lock: builders only close over static metadata
+        # (tracing happens lazily at first call), so a racing double-build
+        # costs a duplicate closure, never a wrong executor
+        fn = builder()
+        with self._lock:
+            if key not in self._data:
+                self.misses += 1
+                self._data[key] = fn
+                self._evict_locked()
+            self._data.move_to_end(key)
+            return self._data[key]
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+
+    def keys(self) -> List[Hashable]:
+        with self._lock:
+            return list(self._data.keys())
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __contains__(self, key: Hashable) -> bool:
+        with self._lock:
+            return key in self._data
+
+
+EXECUTOR_CACHE = ExecutorCache()
+
+
+def set_executor_cache_capacity(capacity: int) -> None:
+    """Resize the process-wide executor cache (evicts LRU entries)."""
+    EXECUTOR_CACHE.set_capacity(capacity)
+
+
+# --- trace/dispatch hooks ---------------------------------------------------
+
+# All observability hooks are plain counters, never payload lists: with a
+# *bounded* executor cache, evicted structures legitimately retrace on
+# return, so traces (like dispatches) scale with request patterns in a
+# long-lived serving process — accumulating per-event tuples would be a
+# slow leak in exactly the deployment the LRU bounds memory for.
+_FUSED_TRACE_COUNT = 0
+_SHARDED_TRACE_COUNT = 0
+_DISPATCH_COUNT = 0
+_HOOK_LOCK = threading.Lock()
+
+
+def fused_trace_count() -> int:
+    """Number of fused-body traces since process start (test hook)."""
+    return _FUSED_TRACE_COUNT
+
+
+def sharded_trace_count() -> int:
+    """Number of sharded-executor traces since process start (test hook)."""
+    return _SHARDED_TRACE_COUNT
+
+
+def dispatch_count() -> int:
+    """Number of executor dispatches issued by ``exec.api`` (test hook).
+
+    Each fused/batched/sharded program launch counts once; the sharded
+    dynamic path's single-dispatch guarantee is asserted against this.
+    """
+    return _DISPATCH_COUNT
+
+
+def record_fused_trace(sig: Hashable = None) -> None:
+    del sig
+    global _FUSED_TRACE_COUNT
+    with _HOOK_LOCK:
+        _FUSED_TRACE_COUNT += 1
+
+
+def record_sharded_trace(key: Hashable = None) -> None:
+    del key
+    global _SHARDED_TRACE_COUNT
+    with _HOOK_LOCK:
+        _SHARDED_TRACE_COUNT += 1
+
+
+def record_dispatch(kind: str, key: Hashable = None) -> None:
+    del kind, key
+    global _DISPATCH_COUNT
+    with _HOOK_LOCK:
+        _DISPATCH_COUNT += 1

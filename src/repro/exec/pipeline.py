@@ -1,0 +1,274 @@
+"""Unified executor pipeline: one composable builder for every flavor.
+
+Every dispatch flavor NeutronSparse executes — single-RHS fused, batched
+vmap, structural-delta-extended, multi-device ``shard_map`` (rows or rhs
+axis), and any combination — is produced by :func:`build_executor` from the
+same fused body, composed in fixed stages:
+
+    fused body (matrix path + vector path + gather merge)
+      -> [+ delta-sidecar contribution, merged additively in-body]
+      -> [shard_map wrap: stacked-leaf rows axis or column-sharded rhs]
+      -> [vmap over a (batch, K, N) operand]
+      -> jit
+
+Replacing the five hand-rolled ``_*_executor`` factories with one builder
+means a new execution mode is a pipeline stage, not a sixth copy of the
+dispatch code — and the sharded dynamic path gets its delta contribution
+*inside* the per-shard body (each shard merges the sidecar rows it owns, in
+local row coordinates, before the all-gather), so sharded + delta is one
+dispatch like everything else.
+
+All executors live in one bounded LRU (``exec.cache.EXECUTOR_CACHE``) keyed
+by (signature, delta signature, batch, mesh, shard axis).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.plan_ir import (
+    DELTA_LEAF_RANKS, LEAF_COL_PERM, LEAF_RANKS, N_DELTA_LEAVES,
+    N_PLAN_LEAVES, delta_child_sig, gather_rows, permute_pad_b,
+)
+from ..distributed.sharding import (
+    axis_spec, leading_axis_spec, replicated_spec, shard_map,
+    trailing_axis_spec,
+)
+from ..kernels import ops
+from .cache import EXECUTOR_CACHE, record_fused_trace, record_sharded_trace
+
+
+def _fused_body(sig: Tuple):
+    """Raw fused executor body for a plan signature (untraced).
+
+    Every flavor — the single-device jit, the batched vmap, the per-shard
+    ``shard_map`` body — wraps this one function, so every dispatch flavor
+    runs identical math.  The trace-hook append runs once per *trace*, so
+    retraces anywhere in the pipeline are observable.
+    """
+    (_version, shape, bm, bk, bn, impl, reorder_cols, fringe_chunk,
+     num_windows, _num_steps, _nnz_f, n_fringe_rows, has_core, has_fringe,
+     fringe_tier, fringe_bk, _n_chunks, _nnz_kb) = sig
+    m, k = shape
+
+    def _run(step_window, step_col, flat_values, fringe_rows, fringe_cols,
+             fringe_vals, col_perm, gsrc_m, gsrc_v,
+             kb_chunk, kb_rows, kb_cols, kb_vals, b):
+        record_fused_trace(sig)
+        n = b.shape[1]
+        bp = permute_pad_b(b, col_perm, reorder_cols, bk, bn)
+
+        c = None
+        if has_core:
+            packed_m = ops.block_stream_spmm(
+                step_window, step_col, flat_values, bp,
+                num_windows=num_windows, bm=bm, bk=bk, bn=bn, impl=impl,
+                assume_unique=True,  # prepare() emits unique pairs
+            )[:, :n]
+            c = gather_rows(packed_m, gsrc_m)
+        if has_fringe:
+            packed_v = ops.fringe_spmm(
+                fringe_rows, fringe_cols, fringe_vals, bp,
+                num_rows=n_fringe_rows, bn=bn, impl=impl, chunk=fringe_chunk,
+                tier=fringe_tier, bk=fringe_bk,
+                kb_chunk=kb_chunk, kb_rows=kb_rows,
+                kb_cols=kb_cols, kb_vals=kb_vals,
+            )[:, :n]
+            cv = gather_rows(packed_v, gsrc_v)
+            c = cv if c is None else c + cv
+        if c is None:  # empty matrix
+            c = jnp.zeros((m, n), jnp.float32)
+        return c
+
+    return _run
+
+
+def _delta_contrib_body(m: int, bk_cfg: int, bn: int, impl,
+                        reorder_cols: bool, fringe_chunk, dsig: Tuple):
+    """Delta-sidecar contribution body: (delta leaves, col_perm, b) -> (m, N).
+
+    ``dsig`` may be a plain ("delta", ...) signature or the per-shard slice
+    of a ("sharded_delta", ...) one — the math is identical; only the leaf
+    routing upstream differs.
+    """
+    _tag, _cap, num_rows, tier, dbk, _nch, _nkb = delta_child_sig(dsig)
+
+    def contrib(d_rows, d_cols, d_vals, d_gsrc, kbc, kbr, kbcol, kbv,
+                col_perm, b):
+        n = b.shape[1]
+        bp = permute_pad_b(b, col_perm, reorder_cols, bk_cfg, bn)
+        packed = ops.delta_fringe_spmm(
+            d_rows, d_cols, d_vals, bp,
+            num_rows=num_rows, bn=bn, impl=impl, chunk=fringe_chunk,
+            tier=tier, bk=dbk,
+            kb_chunk=kbc, kb_rows=kbr, kb_cols=kbcol, kb_vals=kbv,
+        )[:, :n]
+        return gather_rows(packed, d_gsrc)
+
+    return contrib
+
+
+def _flat_body(sig: Tuple, dsig: Optional[Tuple]):
+    """(plan leaves, [delta leaves], b) -> (m, N): the per-device program."""
+    run = _fused_body(sig)
+    if dsig is None:
+        return run, N_PLAN_LEAVES
+    (_version, shape, _bm, bk, bn, impl, reorder_cols, fringe_chunk,
+     *_rest) = sig
+    contrib = _delta_contrib_body(
+        shape[0], bk, bn, impl, reorder_cols, fringe_chunk, dsig
+    )
+
+    def body(*args):
+        leaves = args[:N_PLAN_LEAVES]
+        dleaves = args[N_PLAN_LEAVES:N_PLAN_LEAVES + N_DELTA_LEAVES]
+        b = args[-1]
+        return run(*leaves, b) + contrib(*dleaves, leaves[LEAF_COL_PERM], b)
+
+    return body, N_PLAN_LEAVES + N_DELTA_LEAVES
+
+
+def _build(sig: Tuple, batch: Optional[int], dsig: Optional[Tuple],
+           mesh: Any, axis_name: Optional[str], shard_axis: Optional[str]):
+    body, n_leaf_args = _flat_body(sig, dsig)
+
+    if mesh is None:
+        if batch is None:
+            return jax.jit(body)
+        # plan (and delta) leaves broadcast; only the (batch, K, N) RHS
+        # carries the mapped axis
+        return jax.jit(jax.vmap(body, in_axes=(None,) * n_leaf_args + (0,)))
+
+    # --- sharded flavors ---------------------------------------------------
+    b_rank = 2 if batch is None else 3
+    leaf_ranks = LEAF_RANKS + (DELTA_LEAF_RANKS if dsig is not None else ())
+
+    def device_body(*args):
+        *lv, bb = args
+        if batch is None:
+            return body(*lv, bb)
+        return jax.vmap(lambda one: body(*lv, one))(bb)
+
+    if shard_axis == "rows":
+        # leaves (plan + routed delta) arrive stacked along a leading shard
+        # dim; each device squeezes its slice and runs the fused(+delta)
+        # body on replicated b.  out_specs concatenate the disjoint packed
+        # row blocks — the only cross-device movement is the all-gather of
+        # results, regardless of whether a delta rides along.
+        in_specs = tuple(
+            leading_axis_spec(r + 1, axis_name) for r in leaf_ranks
+        ) + (replicated_spec(b_rank),)
+        out_specs = (
+            leading_axis_spec(2, axis_name) if batch is None
+            else axis_spec(3, 1, axis_name)  # (batch, shard-stacked rows, N)
+        )
+
+        def shard_body(*args):
+            *lv, bb = args
+            lv = [x[0] for x in lv]  # squeeze this device's shard slice
+            return device_body(*lv, bb)
+
+        sm = shard_map(shard_body, mesh, in_specs, out_specs)
+
+        @jax.jit
+        def _exec(*args):
+            record_sharded_trace((sig, shard_axis, batch, dsig))
+            *leaves, assemble, b = args
+            flat = sm(*leaves, b)  # (..., n_shards * rows_per_shard, N)
+            return jnp.take(flat, assemble, axis=-2)
+
+        return _exec
+
+    # rhs: replicated plan (and replicated, un-routed delta), column-sharded
+    # b, outputs concatenated along N
+    in_specs = tuple(replicated_spec(r) for r in leaf_ranks) + (
+        trailing_axis_spec(b_rank, axis_name),
+    )
+    out_specs = trailing_axis_spec(b_rank, axis_name)
+
+    sm = shard_map(device_body, mesh, in_specs, out_specs)
+
+    @jax.jit
+    def _exec(*args):
+        record_sharded_trace((sig, shard_axis, batch, dsig))
+        return sm(*args)
+
+    return _exec
+
+
+def build_executor(
+    sig: Tuple,
+    *,
+    batch: Optional[int] = None,
+    delta_sig: Optional[Tuple] = None,
+    mesh: Any = None,
+    axis_name: Optional[str] = None,
+    shard_axis: Optional[str] = None,
+):
+    """Build (or fetch) the executor for one plan structure + flavor.
+
+    ``sig`` is a :meth:`NeutronPlan.signature` tuple (for sharded flavors,
+    the mesh-uniform per-shard signature).  ``batch`` selects the vmapped
+    multi-RHS form, ``delta_sig`` appends the structural-sidecar merge,
+    ``mesh``/``axis_name``/``shard_axis`` wrap the body in ``shard_map``.
+
+    The returned callable takes ``(*plan_leaves, [*delta_leaves],
+    [assemble], b)`` — assemble only for ``shard_axis="rows"`` — and is
+    cached in the process-wide bounded LRU: repeated builds for one
+    structure reuse one compiled program, and capacity eviction (not
+    process lifetime) bounds memory in long-lived serving processes.
+    """
+    if mesh is None and (axis_name or shard_axis):
+        raise ValueError("axis_name/shard_axis need a mesh")
+    if mesh is not None and shard_axis not in ("rows", "rhs"):
+        raise ValueError(f"shard_axis must be rows|rhs, got {shard_axis!r}")
+    key = (sig, batch, delta_sig, mesh, axis_name, shard_axis)
+    return EXECUTOR_CACHE.get_or_build(
+        key,
+        functools.partial(_build, sig, batch, delta_sig, mesh, axis_name,
+                          shard_axis),
+    )
+
+
+def build_delta_only_executor(
+    m: int, bk_cfg: int, bn: int, impl, fringe_chunk,
+    dsig: Tuple, batch: Optional[int],
+):
+    """Standalone delta contribution executor (compat path).
+
+    Pre-pipeline releases added the sharded delta contribution as a second
+    dispatch through this program; it remains as the implementation of
+    ``execute_delta_contribution`` (public API, and the differential
+    baseline the single-dispatch parity tests compare against).
+    """
+    key = ("delta_only", m, bk_cfg, bn, impl, fringe_chunk, dsig, batch)
+
+    def _builder():
+        contrib = _delta_contrib_body(
+            m, bk_cfg, bn, impl, False, fringe_chunk, dsig
+        )
+
+        def body(*args):
+            *dleaves, col_perm, b = args
+            return contrib(*dleaves, col_perm, b)
+
+        if batch is None:
+            return jax.jit(body)
+        return jax.jit(
+            jax.vmap(body, in_axes=(None,) * (N_DELTA_LEAVES + 1) + (0,))
+        )
+
+    return EXECUTOR_CACHE.get_or_build(key, _builder)
+
+
+def _leaf_count_probe() -> None:
+    # plan_ir and the pipeline must agree on the leaf contract; cheap import-
+    # time assertion so a drifted edit fails loudly, not with shape errors
+    assert len(LEAF_RANKS) == N_PLAN_LEAVES
+    assert len(DELTA_LEAF_RANKS) == N_DELTA_LEAVES
+
+
+_leaf_count_probe()

@@ -6,6 +6,13 @@
                          (CPU-validatable; used by tests/benchmarks here)
 - ``xla``              — pure-jnp formulations (identical math; used by the
                          512-device dry-run where Mosaic cannot lower)
+
+Layering: this module is the *dispatch-tier* layer — it consumes raw
+arrays only (plan leaves arrive via the executor pipeline in
+``repro.exec``; the leaf layout itself is owned by ``core.plan_ir``).  It
+imports nothing above the kernels except ``core.cost_model`` (the
+tier="auto" fallback), the one sanctioned upward edge in
+``tools/check_layers.py``.
 """
 from __future__ import annotations
 
@@ -75,8 +82,8 @@ def block_stream_spmm(
     if b.ndim != 2:
         raise ValueError(
             f"block_stream_spmm expects a rank-2 (K, N) operand, got shape "
-            f"{tuple(b.shape)}; batched RHS panels go through "
-            "core.spmm.execute, which vmaps the fused body per path"
+            f"{tuple(b.shape)}; batched RHS panels go through the executor "
+            "pipeline (repro.exec), which vmaps the fused body per path"
         )
     if impl == "xla":
         # static occupancy = active tiles / total (window, k-block) slots.
@@ -148,8 +155,8 @@ def fringe_spmm(
     if b.ndim != 2:
         raise ValueError(
             f"fringe_spmm expects a rank-2 (K, N) operand, got shape "
-            f"{tuple(b.shape)}; batched RHS panels go through "
-            "core.spmm.execute, which vmaps the fused body per path"
+            f"{tuple(b.shape)}; batched RHS panels go through the executor "
+            "pipeline (repro.exec), which vmaps the fused body per path"
         )
     if chunk is not None and chunk < 1:
         raise ValueError(f"chunk must be a positive nonzero count, got {chunk}")

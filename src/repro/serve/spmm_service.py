@@ -17,9 +17,19 @@ sidecar until the cost model folds them in.  ``update_matrix`` drains that
 matrix's queue first, so requests always execute against the matrix state
 they were submitted under.
 
+Async compaction: when the cost model says a sidecar should fold
+(``should_compact``), the fold runs on a background worker thread against a
+versioned COO snapshot while the serving path keeps executing the old plan
++ sidecar; the fresh plan swaps in atomically between drains
+(``DynamicPlan.adopt_compacted``), and a swap that went stale — more
+mutations landed mid-fold — is discarded and rescheduled.  Compaction never
+blocks ``submit``/``flush``/``fetch``.  Set ``async_compaction=False`` for
+the old synchronous inline fold.
+
 Persistence: pass a ``dynamic.PlanRegistry`` and ``register`` warm-starts
 from disk when the stored entry matches the given COO (no ``prepare()``
-run); ``warm_start`` restores by name alone.  Updates re-persist the plan.
+run); ``warm_start`` restores by name alone (sharded entries re-shard onto
+``mesh``).  Updates re-persist the plan.
 
 Multi-device deployments pass a ``ShardedPlan`` via ``register_sharded`` —
 the flush path is identical because ``execute_sharded`` accepts the same
@@ -28,6 +38,8 @@ batched operand.
 from __future__ import annotations
 
 import dataclasses
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -37,6 +49,15 @@ import numpy as np
 from ..core import spmm
 from ..dynamic import DynamicPlan, GraphDelta, PlanRegistry
 from ..kernels.ops import pow2_at_least
+
+
+def _compact_build(dplan: DynamicPlan, rows, cols, vals):
+    """Build the folded plan for a snapshot (worker-thread seam).
+
+    Module-level so tests can monkeypatch in a slow build and prove the
+    serving path keeps draining against the old plan until the swap.
+    """
+    return dplan.build_compacted(rows, cols, vals)
 
 
 def _bucket(batch: int, max_batch: int) -> int:
@@ -52,6 +73,10 @@ class ServiceStats:
     padded_slots: int = 0  # zero panels added to reach a bucket size
     updates: int = 0       # update_matrix calls applied
     warm_starts: int = 0   # registrations served from the registry
+    compactions_scheduled: int = 0  # background folds submitted
+    compactions_applied: int = 0    # background folds swapped in
+    compactions_stale: int = 0      # folds discarded (snapshot went stale)
+    compactions_failed: int = 0     # folds whose build raised (see fold_errors)
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -63,7 +88,8 @@ class SpmmService:
     def __init__(self, config: spmm.SpmmConfig = spmm.SpmmConfig(),
                  max_batch: int = 8,
                  registry: Optional[PlanRegistry] = None,
-                 persist_updates: bool = True):
+                 persist_updates: bool = True,
+                 async_compaction: bool = True):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.config = config
@@ -76,11 +102,25 @@ class SpmmService:
         # an extra bucket size, breaking the log2(max_batch)+1 trace bound
         self.max_batch = pow2_at_least(int(max_batch))
         self.registry = registry
+        self.async_compaction = bool(async_compaction)
         self._plans: Dict[str, Any] = {}  # DynamicPlan | ShardedPlan
         self._queues: Dict[str, List[Tuple[int, jax.Array]]] = {}
         self._results: Dict[int, jax.Array] = {}
         self._next_ticket = 0
+        # background folds: name -> (snapshot version, Future[plan]).
+        # Workers only *build*; the swap (adopt_compacted) always runs on
+        # the serving thread, between drains, under _fold_lock.
+        self._folds: Dict[str, Tuple[int, Future]] = {}
+        self._fold_errors: Dict[str, BaseException] = {}
+        self._fold_lock = threading.Lock()
+        self._fold_pool: Optional[ThreadPoolExecutor] = None
         self.stats = ServiceStats()
+
+    @property
+    def _dynamic_kwargs(self) -> Dict[str, bool]:
+        # with async compaction the service owns the fold lifecycle; the
+        # plan must not also fold inline inside update()
+        return {"auto_compact": not self.async_compaction}
 
     # -- matrix registration ------------------------------------------------
     def register(
@@ -101,23 +141,32 @@ class SpmmService:
         elif self.registry is not None:
             before = spmm.prepare_call_count()
             dplan = self.registry.load_or_prepare(
-                name, rows, cols, vals, shape, self.config
+                name, rows, cols, vals, shape, self.config,
+                **self._dynamic_kwargs,
             )
             if spmm.prepare_call_count() == before:
                 self.stats.warm_starts += 1
         else:
             dplan = DynamicPlan(
-                spmm.prepare(rows, cols, vals, shape, self.config)
+                spmm.prepare(rows, cols, vals, shape, self.config),
+                **self._dynamic_kwargs,
             )
         self._plans[name] = dplan
         self._queues.setdefault(name, [])
 
-    def warm_start(self, name: str) -> None:
-        """Restore a matrix purely from the registry (no COO, no prepare)."""
+    def warm_start(self, name: str, mesh=None) -> None:
+        """Restore a matrix purely from the registry (no COO).
+
+        Single-device entries restore without any ``prepare()``; sharded
+        entries re-shard onto ``mesh`` (or a fresh 1-D mesh over the stored
+        shard count when None) — see ``dynamic.registry``.
+        """
         if self.registry is None:
             raise ValueError("warm_start needs a service registry")
         self._check_reregister(name)
-        self._plans[name] = self.registry.load(name)
+        self._plans[name] = self.registry.load(
+            name, mesh=mesh, **self._dynamic_kwargs
+        )
         self.stats.warm_starts += 1
         self._queues.setdefault(name, [])
 
@@ -125,7 +174,8 @@ class SpmmService:
         """Serve a matrix through an already-prepared multi-device plan."""
         self._check_reregister(name)
         self._plans[name] = (
-            DynamicPlan(splan) if splan.update_maps is not None else splan
+            DynamicPlan(splan, **self._dynamic_kwargs)
+            if splan.update_maps is not None else splan
         )
         self._queues.setdefault(name, [])
 
@@ -166,10 +216,99 @@ class SpmmService:
         self.flush(name=name)
         stats = dplan.update(delta)
         self.stats.updates += 1
-        if self.registry is not None and not dplan.is_sharded and (
+        if self.async_compaction:
+            self._maybe_schedule_fold(name, dplan)
+        if self.registry is not None and (
                 self.persist_updates or stats["compacted"]):
             self.registry.save(name, dplan)
         return stats
+
+    # -- background compaction ----------------------------------------------
+    def _maybe_schedule_fold(self, name: str, dplan: DynamicPlan) -> None:
+        decision = dplan.last_decision
+        if decision is None or not decision.compact:
+            return
+        with self._fold_lock:
+            if name in self._folds:
+                return  # one in-flight fold per matrix
+            if self._fold_pool is None:
+                self._fold_pool = ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix="spmm-compact"
+                )
+            version, rows, cols, vals = dplan.snapshot_for_compaction()
+            fut = self._fold_pool.submit(
+                _compact_build, dplan, rows, cols, vals
+            )
+            self._folds[name] = (version, fut)
+            self.stats.compactions_scheduled += 1
+
+    def poll_compactions(self) -> int:
+        """Swap in any finished background folds; returns swaps applied.
+
+        Runs on the serving thread (also called at every ``flush``), so the
+        plan changes only between drains — never under a dispatch.  A fold
+        whose snapshot went stale is discarded and rescheduled from the
+        current state.  A fold whose *build* failed never aborts the poll
+        (an unrelated matrix's flush must not raise another matrix's
+        error): the exception is recorded per matrix — surfaced by
+        ``drain_compactions`` / ``fold_errors`` — and the next
+        ``update_matrix`` on that matrix schedules a fresh fold.
+        """
+        applied = 0
+        with self._fold_lock:
+            ready = [(n, v, f) for n, (v, f) in self._folds.items()
+                     if f.done()]
+            for n, _, _ in ready:
+                del self._folds[n]
+        for name, version, fut in ready:
+            err = fut.exception()
+            if err is not None:
+                self._fold_errors[name] = err
+                self.stats.compactions_failed += 1
+                continue
+            dplan = self._plans.get(name)
+            if not isinstance(dplan, DynamicPlan):
+                continue  # re-registered while folding: drop the result
+            if dplan.adopt_compacted(fut.result(), expected_version=version):
+                applied += 1
+                self.stats.compactions_applied += 1
+                if self.registry is not None:
+                    self.registry.save(name, dplan)
+            else:
+                self.stats.compactions_stale += 1
+                self._maybe_schedule_fold(name, dplan)
+        return applied
+
+    def fold_errors(self) -> Dict[str, BaseException]:
+        """Background-fold build failures per matrix (cleared on read)."""
+        errors, self._fold_errors = self._fold_errors, {}
+        return errors
+
+    def drain_compactions(self, timeout: Optional[float] = None) -> int:
+        """Block until every in-flight fold has finished and been swapped
+        in (or discarded as stale, rescheduled, and finished).  Returns the
+        number of swaps applied; raises the first recorded build failure.
+        Test/shutdown helper."""
+        applied = 0
+        while True:
+            with self._fold_lock:
+                futs = [f for _, f in self._folds.values()]
+            if not futs:
+                errors = self.fold_errors()
+                if errors:
+                    raise next(iter(errors.values()))
+                return applied
+            for f in futs:
+                f.exception(timeout=timeout)  # wait for completion
+            applied += self.poll_compactions()
+
+    def close(self) -> None:
+        """Shut down the background fold worker (pending folds complete)."""
+        self.drain_compactions()
+        with self._fold_lock:
+            pool, self._fold_pool = self._fold_pool, None
+        if pool is not None:
+            pool.shutdown(wait=True)
 
     # -- request queue ------------------------------------------------------
     def submit(self, name: str, b: jax.Array) -> int:
@@ -227,6 +366,8 @@ class SpmmService:
         result-less."""
         if name is not None and name not in self._queues:
             raise KeyError(f"no matrix registered under {name!r}")
+        if self.async_compaction:
+            self.poll_compactions()  # swap finished folds in between drains
         selected = (
             self._queues.items() if name is None
             else [(name, self._queues[name])]

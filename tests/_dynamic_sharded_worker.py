@@ -5,7 +5,11 @@ Asserts, on 2- and 4-way meshes with forced host devices:
   to re-running ``prepare_sharded`` with the updated values, and executes
   identically;
 - structural inserts/deletes through ``DynamicPlan`` match the fp64 dense
-  oracle before and after a forced compaction (which re-shards).
+  oracle before and after a forced compaction (which re-shards);
+- sharded + delta executes as ONE dispatch (the routed sidecar merges
+  inside the shard_map program; ``exec.dispatch_count`` rises by exactly 1)
+  and is bit-identical to the legacy two-dispatch formulation
+  (``execute_sharded`` + ``execute_delta_contribution`` post-pass).
 
 Launched by tests/test_dynamic.py through the ``forced_mesh_run`` conftest
 fixture, and runnable standalone:
@@ -25,8 +29,11 @@ force_host_device_count(os.environ, 4)
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.core import spmm  # noqa: E402
-from repro.dynamic import DynamicPlan, GraphDelta, update_values  # noqa: E402
+from repro.core import plan_ir, spmm  # noqa: E402
+from repro.dynamic import (  # noqa: E402
+    DynamicPlan, GraphDelta, build_delta_fringe, update_values,
+)
+from repro.exec import dispatch_count  # noqa: E402
 from repro.launch.mesh import make_spmm_mesh  # noqa: E402
 
 
@@ -89,6 +96,34 @@ def check(n_shards):
             n_shards, "structural")
 
     assert_close()
+
+    # --- single dispatch + bit-parity with the legacy two-dispatch form ---
+    delta = dp._materialize()
+    assert isinstance(delta, plan_ir.ShardedDeltaFringe), type(delta)
+    before = dispatch_count()
+    fused = np.asarray(dp.execute(b))
+    assert dispatch_count() - before == 1, (
+        n_shards, "sharded+delta must be ONE executor dispatch",
+        dispatch_count() - before)
+    # legacy formulation: base shard_map dispatch + a standalone (global-
+    # coordinate) delta contribution added as a post-pass
+    keys = np.fromiter(dp._overlay, np.int64, count=len(dp._overlay))
+    targets = [dp._overlay[int(key)] for key in keys]
+    base_sums = dp._base_key_sums(keys)
+    in_base = dp.maps.lookup(keys // k, keys % k) >= 0
+    dvals = np.array([
+        (-base_sums[i] if t is None
+         else (t - base_sums[i] if in_base[i] else t))
+        for i, t in enumerate(targets)
+    ], np.float64)
+    plain = build_delta_fringe(keys // k, keys % k, dvals, (m, k), cfg)
+    legacy = np.asarray(spmm.execute_sharded(dp.plan, b)) + np.asarray(
+        spmm.execute_delta_contribution((m, k), cfg, plain, b)
+    )
+    assert np.array_equal(fused, legacy), (
+        n_shards, "one-dispatch result must be bit-identical to the "
+        "two-dispatch post-pass", float(np.abs(fused - legacy).max()))
+
     dp.compact()
     assert isinstance(dp.plan, spmm.ShardedPlan)
     assert dp.plan.n_shards == n_shards

@@ -8,7 +8,6 @@ own suite.
 """
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import spmm
 from repro.launch.mesh import make_spmm_mesh
@@ -52,13 +51,15 @@ def test_signatures_unique_across_tier_and_shard_variants(rng):
 def test_batched_cache_key_includes_batch(rng):
     """The batched executor is cached per (signature, batch): distinct batch
     sizes never share one compiled program object."""
+    from repro.exec import build_executor
+
     rows, cols, vals, shape = _fringe_problem(rng)
     plan = spmm.prepare(rows, cols, vals, shape, spmm.SpmmConfig(impl="xla"))
     sig = plan.signature()
-    fn2 = spmm._batched_executor(sig, 2)
-    fn3 = spmm._batched_executor(sig, 3)
+    fn2 = build_executor(sig, batch=2)
+    fn3 = build_executor(sig, batch=3)
     assert fn2 is not fn3
-    assert spmm._batched_executor(sig, 2) is fn2  # cache hit
+    assert build_executor(sig, batch=2) is fn2  # cache hit
 
 
 # ---------------------------------------------------------------------------

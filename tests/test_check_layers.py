@@ -1,0 +1,31 @@
+"""The CI layering guard: the repo is clean, and violations are caught."""
+import ast
+import os
+import sys
+
+TOOLS = os.path.join(os.path.dirname(__file__), "..", "tools")
+sys.path.insert(0, TOOLS)
+
+import check_layers  # noqa: E402
+
+
+def test_repo_import_layering_is_clean():
+    assert check_layers.check_tree() == []
+
+
+def test_guard_catches_upward_static_import():
+    tree = ast.parse("from ..exec.pipeline import build_executor\n")
+    hits = list(check_layers.iter_imports("repro/core/foo.py", tree))
+    assert hits == [(1, "repro.exec.pipeline")]
+
+
+def test_guard_catches_stringly_imports():
+    """importlib.import_module with a literal is scanned too — the lazy
+    facade cannot be silently replicated elsewhere."""
+    src = "import importlib\nimportlib.import_module('repro.serve')\n"
+    hits = list(check_layers.iter_imports("repro/core/foo.py", ast.parse(src)))
+    assert (2, "repro.serve") in hits
+
+
+def test_facade_allowance_is_exactly_one_pair():
+    assert check_layers.ALLOWED == {("repro/core/spmm.py", "repro.exec.api")}

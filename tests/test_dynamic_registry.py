@@ -16,7 +16,6 @@ from repro.core import spmm
 from repro.dynamic import (
     DynamicPlan, GraphDelta, PlanRegistry, RegistryError,
 )
-from repro.dynamic import registry as registry_mod
 from repro.serve import SpmmService
 from conftest import make_sparse
 
@@ -174,15 +173,119 @@ def test_missing_entry_and_bad_names(tmp_path):
         reg.save("../evil", None)
 
 
-def test_sharded_plans_refuse_serialization(rng, tmp_path):
+def _sharded_dplan(rng, rows, cols, vals, shape, shard_axis="rows"):
+    from repro.launch.mesh import make_spmm_mesh
+
+    splan = spmm.prepare_sharded(rows, cols, vals, shape, make_spmm_mesh(1),
+                                 CFG, shard_axis=shard_axis)
+    return DynamicPlan(splan, auto_compact=False)
+
+
+def test_sharded_plan_round_trips_by_resharding(rng, tmp_path):
+    """A sharded entry stores COO + config + shard axis and load() rebuilds
+    the plan by re-sharding — mutations (value fast path + structural
+    overlay) survive the round trip (closes the ROADMAP refusal)."""
+    a, rows, cols, vals = _graph(rng)
+    reg = PlanRegistry(str(tmp_path))
+    dp = _sharded_dplan(rng, rows, cols, vals, a.shape)
+    # mutate both layers before persisting
+    dense = a.astype(np.float64).copy()
+    dp.update(GraphDelta.updates(rows[:3], cols[:3], [5.0, -1.5, 2.25]))
+    dense[rows[:3], cols[:3]] = [5.0, -1.5, 2.25]
+    zr, zc = np.nonzero(dense == 0)
+    dp.update(GraphDelta.inserts(zr[:4], zc[:4], [1.0, 2.0, 3.0, 4.0]))
+    dense[zr[:4], zc[:4]] += [1.0, 2.0, 3.0, 4.0]
+    reg.save("g", dp)
+
+    restored = reg.load("g")  # mesh=None: rebuilt from the stored n_shards
+    assert restored.is_sharded
+    assert restored.plan.n_shards == 1
+    assert restored.delta_nnz == dp.delta_nnz
+    b = jnp.asarray(rng.randn(a.shape[1], 8).astype(np.float32))
+    out = np.asarray(restored.execute(b))
+    expect = dense @ np.asarray(b, np.float64)
+    assert np.abs(out - expect).max() / (np.abs(expect).max() + 1e-9) < 1e-4
+
+
+def test_sharded_truncated_shard_raises_then_falls_back(rng, tmp_path):
+    """Corruption handling mirrors the single-device entries: truncated
+    data raises a clean RegistryError and load_or_prepare_sharded answers
+    with a fresh prepare_sharded."""
     from repro.launch.mesh import make_spmm_mesh
 
     a, rows, cols, vals = _graph(rng)
-    splan = spmm.prepare_sharded(rows, cols, vals, a.shape,
-                                 make_spmm_mesh(1), CFG, shard_axis="rows")
     reg = PlanRegistry(str(tmp_path))
-    with pytest.raises(RegistryError, match="not serializable"):
-        reg.save("g", DynamicPlan(splan))
+    reg.save("g", _sharded_dplan(rng, rows, cols, vals, a.shape))
+    entry = _entry_dir(str(tmp_path), "g")
+    victim = os.path.join(entry, "coo_vals.s0.npy")
+    with open(victim, "r+b") as f:
+        f.truncate(os.path.getsize(victim) // 2)
+    with pytest.raises(RegistryError, match="corrupt|truncated"):
+        reg.load("g")
+    dp = reg.load_or_prepare_sharded(
+        "g", rows, cols, vals, a.shape, make_spmm_mesh(1),
+        CFG, shard_axis="rows",
+    )
+    b = jnp.asarray(rng.randn(a.shape[1], 8).astype(np.float32))
+    out = np.asarray(dp.execute(b))
+    expect = a.astype(np.float64) @ np.asarray(b, np.float64)
+    assert np.abs(out - expect).max() / (np.abs(expect).max() + 1e-9) < 1e-4
+
+
+def test_sharded_manifest_and_version_corruption(rng, tmp_path):
+    a, rows, cols, vals = _graph(rng)
+    reg = PlanRegistry(str(tmp_path))
+    reg.save("g", _sharded_dplan(rng, rows, cols, vals, a.shape))
+    entry = _entry_dir(str(tmp_path), "g")
+    mpath = os.path.join(entry, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    # version drift is rejected before any array is touched
+    manifest["meta"]["plan_format_version"] = -1
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(RegistryError, match="plan format"):
+        reg.load("g")
+    # a mangled manifest is rejected too
+    with open(mpath, "w") as f:
+        f.write("{not json")
+    with pytest.raises(RegistryError, match="manifest"):
+        reg.load("g")
+
+
+def test_sharded_warm_start_matches_fingerprint(rng, tmp_path):
+    """load_or_prepare_sharded restores mutated state when the caller's COO
+    matches the stored fingerprint, and prepares fresh when it doesn't."""
+    from repro.launch.mesh import make_spmm_mesh
+
+    a, rows, cols, vals = _graph(rng)
+    reg = PlanRegistry(str(tmp_path))
+    mesh = make_spmm_mesh(1)
+    dp = reg.load_or_prepare_sharded("g", rows, cols, vals, a.shape, mesh,
+                                     CFG, shard_axis="rows")
+    dense = a.astype(np.float64).copy()
+    zr, zc = np.nonzero(dense == 0)
+    dp.update(GraphDelta.inserts(zr[:2], zc[:2], [7.0, -3.0]))
+    dense[zr[:2], zc[:2]] += [7.0, -3.0]
+    reg.save("g", dp)
+
+    # the fingerprint binds to the *evolved* logical matrix (to_coo), so a
+    # caller re-registering that state warm-starts with the overlay intact
+    er, ec, ev = dp.to_coo()
+    warm = reg.load_or_prepare_sharded("g", er, ec, ev, a.shape, mesh,
+                                       CFG, shard_axis="rows")
+    assert warm.delta_nnz == 2
+    b = jnp.asarray(rng.randn(a.shape[1], 8).astype(np.float32))
+    out = np.asarray(warm.execute(b))
+    expect = dense @ np.asarray(b, np.float64)
+    assert np.abs(out - expect).max() / (np.abs(expect).max() + 1e-9) < 1e-4
+
+    # different COO -> fresh prepare, no stale overlay
+    vals2 = vals.copy()
+    vals2[0] += 1.0
+    cold = reg.load_or_prepare_sharded("g2", rows, cols, vals2, a.shape,
+                                       mesh, CFG, shard_axis="rows")
+    assert cold.delta_nnz == 0
 
 
 def test_service_warm_starts_from_registry(rng, tmp_path):

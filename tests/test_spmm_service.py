@@ -1,5 +1,4 @@
 """SpmmService: request batching, bucket padding, plan caching, results."""
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -266,3 +265,180 @@ def test_update_matrix_over_mutation_stream(rng):
         svc.flush(name="g")
         np.testing.assert_allclose(np.asarray(svc.fetch(t)), dense @ p,
                                    rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# background (async) compaction
+# ---------------------------------------------------------------------------
+def _structural_overload(rng, a, frac=0.4):
+    """A GraphDelta of zero-position inserts big enough to force a fold."""
+    dense = a.astype(np.float64)
+    zr, zc = np.nonzero(dense == 0)
+    n = max(1, int(np.count_nonzero(dense) * frac))
+    pick = rng.choice(zr.size, n, replace=False)
+    iv = rng.randn(n)
+    return GraphDelta.inserts(zr[pick], zc[pick], iv), (zr[pick], zc[pick], iv)
+
+
+def test_async_compaction_never_blocks_serving(rng, monkeypatch):
+    """A should_compact fold runs on the worker thread; submit/flush/fetch
+    keep succeeding against the old plan + sidecar until the atomic swap."""
+    import threading
+
+    import repro.serve.spmm_service as svc_mod
+
+    svc = SpmmService(spmm.SpmmConfig(impl="xla"), max_batch=4)
+    assert svc.async_compaction
+    a = _register(svc, rng)
+    dense = a.astype(np.float64).copy()
+
+    real_build = svc_mod._compact_build
+    started, release = threading.Event(), threading.Event()
+
+    def slow_build(dplan, rows, cols, vals):
+        started.set()
+        assert release.wait(30), "test never released the fold"
+        return real_build(dplan, rows, cols, vals)
+
+    monkeypatch.setattr(svc_mod, "_compact_build", slow_build)
+
+    delta, (ir, ic, iv) = _structural_overload(rng, a)
+    stats = svc.update_matrix("g", delta)
+    dense[ir, ic] += iv
+    assert stats["compacted"] == 0  # nothing folded inline
+    assert svc.stats.compactions_scheduled == 1
+    assert started.wait(10), "fold never started on the worker"
+
+    dp = svc.plan("g")
+    p = rng.randn(70, 8).astype(np.float32)
+    for _ in range(3):  # serving proceeds while the fold is deliberately stuck
+        t = svc.submit("g", p)
+        svc.flush(name="g")
+        np.testing.assert_allclose(np.asarray(svc.fetch(t)), dense @ p,
+                                   rtol=1e-4, atol=1e-4)
+    assert dp.compactions == 0 and dp.delta_nnz > 0  # still pre-swap
+
+    release.set()
+    svc.drain_compactions(timeout=60)
+    assert dp.compactions == 1 and dp.delta_nnz == 0
+    assert svc.stats.compactions_applied == 1
+
+    t = svc.submit("g", p)  # post-swap answers are unchanged
+    svc.flush(name="g")
+    np.testing.assert_allclose(np.asarray(svc.fetch(t)), dense @ p,
+                               rtol=1e-4, atol=1e-4)
+    svc.close()
+
+
+def test_async_compaction_stale_snapshot_reschedules(rng, monkeypatch):
+    """Mutations landing mid-fold make the snapshot stale: the finished
+    fold is discarded (never swapped over newer state) and a fresh fold
+    runs from the current matrix."""
+    import threading
+
+    import repro.serve.spmm_service as svc_mod
+
+    svc = SpmmService(spmm.SpmmConfig(impl="xla"), max_batch=4)
+    a = _register(svc, rng)
+    dense = a.astype(np.float64).copy()
+
+    real_build = svc_mod._compact_build
+    started, release = threading.Event(), threading.Event()
+
+    def gated_build(dplan, rows, cols, vals):
+        started.set()
+        assert release.wait(30)
+        return real_build(dplan, rows, cols, vals)
+
+    monkeypatch.setattr(svc_mod, "_compact_build", gated_build)
+
+    delta, (ir, ic, iv) = _structural_overload(rng, a)
+    svc.update_matrix("g", delta)
+    dense[ir, ic] += iv
+    assert started.wait(10)
+
+    # a second mutation lands while the first fold is in flight
+    r0, c0 = int(ir[0]), int(ic[0])
+    svc.update_matrix("g", GraphDelta.updates([r0], [c0], [9.5]))
+    dense[r0, c0] = 9.5
+
+    release.set()
+    svc.drain_compactions(timeout=60)
+    assert svc.stats.compactions_stale >= 1   # first fold was discarded
+    assert svc.stats.compactions_applied >= 1  # rescheduled fold landed
+    dp = svc.plan("g")
+    assert dp.delta_nnz == 0
+
+    p = rng.randn(70, 8).astype(np.float32)
+    t = svc.submit("g", p)
+    svc.flush(name="g")
+    np.testing.assert_allclose(np.asarray(svc.fetch(t)), dense @ p,
+                               rtol=1e-4, atol=1e-4)
+    svc.close()
+
+
+def test_sync_compaction_opt_out_folds_inline(rng):
+    """async_compaction=False restores the old synchronous behavior: the
+    fold happens inside update_matrix and is visible in its stats."""
+    svc = SpmmService(spmm.SpmmConfig(impl="xla"), max_batch=4,
+                      async_compaction=False)
+    a = _register(svc, rng)
+    delta, _ = _structural_overload(rng, a)
+    stats = svc.update_matrix("g", delta)
+    assert stats["compacted"] == 1
+    assert svc.plan("g").compactions == 1
+    assert svc.stats.compactions_scheduled == 0
+
+
+def test_failed_fold_does_not_discard_other_folds(rng, monkeypatch):
+    """A failed background build surfaces its error but never swallows
+    another matrix's completed fold from the same poll batch."""
+    import repro.serve.spmm_service as svc_mod
+
+    svc = SpmmService(spmm.SpmmConfig(impl="xla"), max_batch=4)
+    a_good = _register(svc, rng, name="good")
+    _register(svc, rng, name="bad", m=88)
+    dense = a_good.astype(np.float64).copy()
+
+    real_build = svc_mod._compact_build
+
+    def flaky_build(dplan, rows, cols, vals):
+        if dplan is svc.plan("bad"):
+            raise RuntimeError("injected build failure")
+        return real_build(dplan, rows, cols, vals)
+
+    monkeypatch.setattr(svc_mod, "_compact_build", flaky_build)
+
+    dg, (ir, ic, iv) = _structural_overload(rng, a_good)
+    svc.update_matrix("good", dg)
+    dense[ir, ic] += iv
+    db, _ = _structural_overload(rng, _dense_of(svc, "bad"))
+    svc.update_matrix("bad", db)
+    assert svc.stats.compactions_scheduled == 2
+
+    # an unrelated matrix's flush never raises the bad fold's error — the
+    # poll records it, adopts the good fold, and the drain surfaces it
+    import time as _time
+
+    deadline = _time.time() + 60
+    p = rng.randn(70, 8).astype(np.float32)
+    while svc.plan("good").compactions == 0 and _time.time() < deadline:
+        t = svc.submit("good", p)
+        svc.flush(name="good")  # must not raise "injected build failure"
+        np.testing.assert_allclose(np.asarray(svc.fetch(t)), dense @ p,
+                                   rtol=1e-4, atol=1e-4)
+        _time.sleep(0.01)
+    assert svc.plan("good").compactions == 1
+    assert svc.plan("good").delta_nnz == 0
+    with pytest.raises(RuntimeError, match="injected build failure"):
+        svc.drain_compactions(timeout=60)
+    assert svc.stats.compactions_failed == 1
+    svc.close()
+
+
+def _dense_of(svc, name):
+    dp = svc.plan(name)
+    maps = dp.maps
+    dense = np.zeros(dp.shape, np.float64)
+    np.add.at(dense, (maps.rows, maps.cols), maps.vals)
+    return dense

@@ -1,0 +1,156 @@
+#!/usr/bin/env python
+"""Import-layering guard: keep the execution stack's import graph downward.
+
+The refactor that split ``core/spmm.py`` into plan IR -> executor pipeline
+-> dynamic -> serving only stays split if nothing quietly re-introduces an
+upward import.  This script AST-scans every module under ``src/repro`` —
+top-level *and* function-local imports, plus ``importlib.import_module``
+calls with literal arguments — and fails CI when a package imports a layer
+above itself:
+
+    kernels, distributed    (leaf utilities)
+        -> core             (plan IR + plan builders)
+        -> exec             (executor pipeline)
+        -> dynamic          (incremental plan maintenance)
+        -> serve            (request batching / async compaction)
+
+One documented allowance: ``core/spmm.py`` is the public facade and
+forwards execution names to ``repro.exec.api`` through a lazy PEP 562
+``__getattr__`` (an ``importlib.import_module`` call).  That keeps the
+historical ``repro.core.spmm.execute`` call sites working while core's
+*logic* stays independent of the upper layers; the allowlist below pins it
+to exactly that one module/target pair so anything broader still fails.
+
+Exception note: ``kernels`` may import ``core.cost_model`` (the fringe
+dispatch-tier selection used by ``tier="auto"``) — the cost model is leaf
+math with no plan/executor dependencies.
+
+Usage: python tools/check_layers.py  (exit 1 on violation)
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+from typing import Iterator, List, Tuple
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "src")
+PKG = "repro"
+
+# package -> layers it must never import (prefix match on absolute module)
+FORBIDDEN = {
+    "kernels": ("repro.core", "repro.exec", "repro.dynamic", "repro.serve",
+                "repro.distributed", "repro.launch", "repro.models",
+                "repro.train"),
+    "distributed": ("repro.core", "repro.exec", "repro.dynamic",
+                    "repro.serve"),
+    "core": ("repro.exec", "repro.dynamic", "repro.serve"),
+    "exec": ("repro.dynamic", "repro.serve"),
+    "dynamic": ("repro.serve",),
+}
+
+# (module path relative to src, imported target) pairs that are allowed
+# despite the rules above — each must be justified here.
+ALLOWED = {
+    # the public-API facade: lazy PEP 562 forwarding of execution names
+    ("repro/core/spmm.py", "repro.exec.api"),
+}
+
+# kernels -> core.cost_model is the one sanctioned core import (see module
+# docstring); expressed as an allowed *prefix* rather than per-file pairs.
+ALLOWED_PREFIXES = {
+    "kernels": ("repro.core.cost_model",),
+}
+
+
+def _resolve_relative(module_path: str, level: int, name: str) -> str:
+    """Absolute module of a ``from ..x import y`` seen in ``module_path``."""
+    parts = module_path.replace(os.sep, "/").split("/")
+    # containing package: drop the filename ("__init__.py" resolves
+    # against its own package, plain modules against their parent — both
+    # are the directory part)
+    pkg_parts = parts[:-1]
+    base = pkg_parts[: len(pkg_parts) - (level - 1)] if level > 1 else pkg_parts
+    return ".".join(base + ([name] if name else [])).rstrip(".")
+
+
+def iter_imports(module_rel: str, tree: ast.AST) -> Iterator[Tuple[int, str]]:
+    """Yield (lineno, absolute module target) for every import in the AST."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                yield node.lineno, alias.name
+        elif isinstance(node, ast.ImportFrom):
+            if node.level == 0:
+                yield node.lineno, node.module or ""
+            else:
+                yield node.lineno, _resolve_relative(
+                    module_rel, node.level, node.module or ""
+                )
+        elif isinstance(node, ast.Call):
+            # importlib.import_module("literal") — the lazy-facade pattern;
+            # scanned so the guard cannot be bypassed by stringly imports
+            func = node.func
+            is_import_module = (
+                isinstance(func, ast.Attribute)
+                and func.attr == "import_module"
+            ) or (isinstance(func, ast.Name) and func.id == "import_module")
+            if is_import_module and node.args and isinstance(
+                    node.args[0], ast.Constant) and isinstance(
+                    node.args[0].value, str):
+                yield node.lineno, node.args[0].value
+
+
+def check_tree(src_root: str = SRC) -> List[str]:
+    violations: List[str] = []
+    pkg_root = os.path.join(src_root, PKG)
+    for dirpath, _dirnames, filenames in os.walk(pkg_root):
+        for fname in sorted(filenames):
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            rel = os.path.relpath(path, src_root).replace(os.sep, "/")
+            subpkg = rel.split("/")[1] if "/" in rel else ""
+            rules = FORBIDDEN.get(subpkg)
+            if not rules:
+                continue
+            with open(path, encoding="utf-8") as f:
+                try:
+                    tree = ast.parse(f.read(), filename=path)
+                except SyntaxError as e:  # pragma: no cover
+                    violations.append(f"{rel}: unparseable ({e})")
+                    continue
+            for lineno, target in iter_imports(rel, tree):
+                if not target.startswith("repro."):
+                    continue
+                if any(target.startswith(p)
+                       for p in ALLOWED_PREFIXES.get(subpkg, ())):
+                    continue
+                for forbidden in rules:
+                    if target == forbidden or target.startswith(
+                            forbidden + "."):
+                        if (rel, target) in ALLOWED:
+                            break
+                        violations.append(
+                            f"{rel}:{lineno}: {subpkg}/ must not import "
+                            f"{target} (layering: {forbidden} sits above "
+                            f"{subpkg})"
+                        )
+                        break
+    return violations
+
+
+def main() -> int:
+    violations = check_tree()
+    if violations:
+        print("import-layering violations:", file=sys.stderr)
+        for v in violations:
+            print(f"  {v}", file=sys.stderr)
+        return 1
+    print("import layering ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
