@@ -1,2 +1,4 @@
 """repro — NeutronSparse (coordination-first SpMM) on TPU in JAX/Pallas."""
 __version__ = "0.1.0"
+
+from . import errors  # noqa: F401  (shared taxonomy; zero heavy imports)

@@ -79,14 +79,23 @@ def save(
     return final
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def all_steps(ckpt_dir: str) -> List[int]:
+    """Completed step numbers, ascending (in-flight ``.tmp-`` dirs excluded).
+
+    Retained generations: ``keep`` newest survive GC, so callers can fall
+    back to an older step when the newest fails validation.
+    """
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [
+        return []
+    return sorted(
         int(d.split("_")[1])
         for d in os.listdir(ckpt_dir)
         if d.startswith("step_")
-    ]
+    )
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
     return max(steps) if steps else None
 
 

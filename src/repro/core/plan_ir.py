@@ -46,6 +46,36 @@ PLAN_FORMAT_VERSION = 1
 PATH_CORE = 0
 PATH_FRINGE = 1
 
+# Fixed positions inside ``NeutronPlan.signature()`` tuples that the
+# exec-layer health/degradation logic keys on.  Anyone reordering the
+# signature must update these (and bump PLAN_FORMAT_VERSION).
+SIG_IMPL = 5
+SIG_FRINGE_TIER = 14
+
+
+def sig_impl(sig: Tuple) -> Optional[str]:
+    """The kernel impl of a plan-style signature; None for non-plan sigs
+    (sharded wrappers, delta sidecars)."""
+    if isinstance(sig, tuple) and len(sig) > SIG_IMPL and \
+            sig[0] == PLAN_FORMAT_VERSION:
+        return sig[SIG_IMPL]
+    return None
+
+
+def xla_fallback_sig(sig: Tuple) -> Tuple:
+    """The same plan signature demoted to the XLA reference impl.
+
+    The fused body dispatches entirely on the signature, and ``impl ==
+    "xla"`` routes both paths through the reference einsum/gather before
+    any tier logic — so swapping index ``SIG_IMPL`` is a complete demotion
+    that reuses the plan's existing leaves unchanged.
+    """
+    if sig_impl(sig) is None:
+        raise ValueError(f"not a plan-style signature: {sig!r}")
+    demoted = list(sig)
+    demoted[SIG_IMPL] = "xla"
+    return tuple(demoted)
+
 
 @dataclasses.dataclass(frozen=True)
 class SpmmConfig:
@@ -67,6 +97,10 @@ class SpmmConfig:
     # with a set value adjust the cache when they execute; None keeps the
     # current (default generous) capacity
     executor_cache_capacity: Optional[int] = None
+    # when a pallas executor fails to build/lower, demote the signature to
+    # the XLA reference tier (bounded retry first — see repro.exec.health)
+    # instead of raising; False surfaces a KernelLoweringError instead
+    degrade_to_xla: bool = True
 
 
 @dataclasses.dataclass

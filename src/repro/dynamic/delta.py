@@ -46,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import plan_ir, spmm
+from ..errors import PlanBuildError
 from ..core.cost_model import (
     CompactionDecision, DELTA_MAX_FRACTION, DELTA_MAX_SLOWDOWN,
     EngineCostModel, default_cost_model, should_compact,
@@ -62,7 +63,7 @@ PlanLike = Union[spmm.NeutronPlan, spmm.ShardedPlan]
 def _as_1d(a, dtype) -> np.ndarray:
     out = np.asarray(a, dtype)
     if out.ndim != 1:
-        raise ValueError(f"expected a 1-D array, got shape {out.shape}")
+        raise PlanBuildError(f"expected a 1-D array, got shape {out.shape}")
     return out
 
 
@@ -110,14 +111,14 @@ def _validate_update(maps, indices, new_values) -> Tuple[np.ndarray, np.ndarray]
     indices = _as_1d(indices, np.int64)
     new_values = np.asarray(new_values)
     if new_values.shape != indices.shape:
-        raise ValueError(
+        raise PlanBuildError(
             f"indices and new_values disagree: {indices.shape} vs "
             f"{new_values.shape}"
         )
     if indices.size and (
         int(indices.min()) < 0 or int(indices.max()) >= maps.nnz
     ):
-        raise ValueError(
+        raise PlanBuildError(
             f"nonzero indices out of range [0, {maps.nnz}): "
             f"[{int(indices.min())}, {int(indices.max())}]"
         )
@@ -136,7 +137,7 @@ def update_values(plan: PlanLike, indices, new_values) -> PlanLike:
         return _update_values_sharded(plan, indices, new_values)
     maps = plan.update_maps
     if maps is None:
-        raise ValueError(
+        raise PlanBuildError(
             "plan carries no update maps (built by prepare(); lost when a "
             "plan round-trips through pytree flatten) — re-prepare to "
             "re-enable dynamic updates"
@@ -175,7 +176,7 @@ def _update_values_sharded(
 ) -> spmm.ShardedPlan:
     maps = splan.update_maps
     if maps is None:
-        raise ValueError(
+        raise PlanBuildError(
             "sharded plan carries no update maps — re-prepare_sharded to "
             "enable dynamic updates"
         )
@@ -276,12 +277,12 @@ class GraphDelta:
             )
         if self.ins_rows.shape != self.ins_cols.shape or (
                 self.ins_rows.shape != self.ins_vals.shape):
-            raise ValueError("insert triplet lengths disagree")
+            raise PlanBuildError("insert triplet lengths disagree")
         if self.del_rows.shape != self.del_cols.shape:
-            raise ValueError("delete pair lengths disagree")
+            raise PlanBuildError("delete pair lengths disagree")
         if self.upd_rows.shape != self.upd_cols.shape or (
                 self.upd_rows.shape != self.upd_vals.shape):
-            raise ValueError("update triplet lengths disagree")
+            raise PlanBuildError("update triplet lengths disagree")
 
     @classmethod
     def inserts(cls, rows, cols, vals) -> "GraphDelta":
@@ -331,12 +332,12 @@ class DynamicPlan:
         auto_compact: bool = True,
     ):
         if plan.update_maps is None:
-            raise ValueError(
+            raise PlanBuildError(
                 "DynamicPlan needs a plan with update maps (built by "
                 "prepare()/prepare_sharded())"
             )
         if plan.config.reorder_cols:
-            raise ValueError(
+            raise PlanBuildError(
                 "DynamicPlan does not support reorder_cols=True: sidecar "
                 "columns address the un-permuted operand"
             )
@@ -460,7 +461,7 @@ class DynamicPlan:
             if r.size and (
                 r.min() < 0 or r.max() >= m or c.min() < 0 or c.max() >= k
             ):
-                raise ValueError(
+                raise PlanBuildError(
                     f"{name} indices out of range for shape {self.shape}"
                 )
 
@@ -487,7 +488,7 @@ class DynamicPlan:
             key = int(delta.del_rows[j]) * k + int(delta.del_cols[j])
             if key in overlay:
                 if overlay[key] is None:
-                    raise ValueError(
+                    raise PlanBuildError(
                         f"entry ({delta.del_rows[j]}, {delta.del_cols[j]}) "
                         "already deleted"
                     )
@@ -498,7 +499,7 @@ class DynamicPlan:
             elif ids[j] >= 0:
                 overlay[key] = None
             else:
-                raise ValueError(
+                raise PlanBuildError(
                     f"delete of absent entry "
                     f"({delta.del_rows[j]}, {delta.del_cols[j]})"
                 )
@@ -524,7 +525,7 @@ class DynamicPlan:
             v = float(delta.upd_vals[j])
             if key in overlay:
                 if overlay[key] is None:
-                    raise ValueError(
+                    raise PlanBuildError(
                         f"update of deleted entry "
                         f"({delta.upd_rows[j]}, {delta.upd_cols[j]})"
                     )
@@ -532,7 +533,7 @@ class DynamicPlan:
             elif ids[j] >= 0:
                 set_logical(key, v)
             else:
-                raise ValueError(
+                raise PlanBuildError(
                     f"update of absent entry "
                     f"({delta.upd_rows[j]}, {delta.upd_cols[j]}); use an "
                     "insert"

@@ -34,6 +34,7 @@ import hashlib
 import json
 import os
 import re
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
@@ -41,6 +42,10 @@ import numpy as np
 
 from ..checkpoint import checkpoint
 from ..core import spmm
+# RegistryError lives in the shared taxonomy (repro.errors) and is
+# re-exported here for the historical import path
+from ..errors import RegistryError  # noqa: F401
+from ..robust.faults import HARNESS
 from .delta import DynamicPlan
 
 REGISTRY_FORMAT_VERSION = 1
@@ -58,14 +63,11 @@ _MAPS_NAMES = (
 )
 
 
-class RegistryError(RuntimeError):
-    """A registry entry is missing, corrupt, or format-incompatible."""
-
-
-# SpmmConfig fields that only tune *execution* (cache sizing), not the
-# prepared plan's structure — excluded from the fingerprint so a registry
-# entry stays valid across deployments that differ only in these knobs
-_EXECUTION_ONLY_CONFIG_FIELDS = ("executor_cache_capacity",)
+# SpmmConfig fields that only tune *execution* (cache sizing, degradation
+# policy), not the prepared plan's structure — excluded from the
+# fingerprint so a registry entry stays valid across deployments that
+# differ only in these knobs
+_EXECUTION_ONLY_CONFIG_FIELDS = ("executor_cache_capacity", "degrade_to_xla")
 
 
 def coo_fingerprint(
@@ -95,7 +97,7 @@ def coo_fingerprint(
 
 def _safe_name(name: str) -> str:
     if not re.fullmatch(r"[A-Za-z0-9._-]+", name):
-        raise ValueError(
+        raise RegistryError(
             f"registry names must be filesystem-safe "
             f"([A-Za-z0-9._-]+), got {name!r}"
         )
@@ -108,6 +110,9 @@ class PlanRegistry:
     def __init__(self, root: str, keep: int = 2):
         self.root = root
         self.keep = keep
+        # times load() served an older generation because the newest one
+        # failed validation (surfaced through SpmmService.health())
+        self.generation_fallbacks = 0
         os.makedirs(root, exist_ok=True)
 
     def names(self) -> List[str]:
@@ -176,9 +181,20 @@ class PlanRegistry:
     def _write_entry(self, name: str, tree: Dict, meta: Dict) -> str:
         d = os.path.join(self.root, _safe_name(name))
         step = (checkpoint.latest_step(d) or 0) + 1
-        return checkpoint.save(
-            d, step, tree, meta=meta, num_shards=1, keep=self.keep
-        )
+        try:
+            HARNESS.fire("registry_write", context=name)
+            return checkpoint.save(
+                d, step, tree, meta=meta, num_shards=1, keep=self.keep
+            )
+        except RegistryError:
+            raise
+        except Exception as e:
+            # any crash mid-save (injected or real) surfaces as a clean
+            # RegistryError; the atomic tmp-dir + os.replace layout means
+            # the previous generation is still the loadable latest step
+            raise RegistryError(
+                f"failed to persist registry entry for {name!r}: {e}"
+            ) from e
 
     def _save_sharded(self, name: str, dplan: DynamicPlan) -> str:
         splan = dplan.plan
@@ -211,17 +227,58 @@ class PlanRegistry:
 
     # -- load ---------------------------------------------------------------
     def _read_entry(self, name: str) -> Tuple[Dict, Dict[str, np.ndarray]]:
+        """Read the newest valid generation of ``name``.
+
+        Generations are tried newest -> oldest: when the latest step fails
+        validation (crash-mid-save remnant, truncated shard, bad manifest)
+        the previous retained generation serves instead, with a warning
+        and a bump of ``generation_fallbacks`` — warm-start degrades to
+        slightly stale state rather than a cold re-prepare.  Only when
+        *every* generation fails does the aggregate RegistryError
+        propagate.
+        """
         d = os.path.join(self.root, _safe_name(name))
-        step = checkpoint.latest_step(d)
-        if step is None:
+        steps = checkpoint.all_steps(d)
+        if not steps:
             raise RegistryError(f"no registry entry for {name!r}")
+        failures: List[str] = []
+        for gen_idx, step in enumerate(reversed(steps)):
+            try:
+                meta, arrays = self._read_step(name, d, step)
+            except RegistryError as e:
+                failures.append(f"step_{step:09d}: {e}")
+                continue
+            if gen_idx:
+                self.generation_fallbacks += 1
+                warnings.warn(
+                    f"registry entry {name!r}: newest generation failed "
+                    f"validation; serving step_{step:09d} instead "
+                    f"({'; '.join(failures)})",
+                    RuntimeWarning, stacklevel=3,
+                )
+            return meta, arrays
+        raise RegistryError(
+            f"every retained generation of {name!r} failed validation: "
+            + "; ".join(failures)
+        )
+
+    def _read_step(
+        self, name: str, d: str, step: int
+    ) -> Tuple[Dict, Dict[str, np.ndarray]]:
         entry = os.path.join(d, f"step_{step:09d}")
         try:
+            HARNESS.fire("registry_read", context=name)
             with open(os.path.join(entry, "manifest.json")) as f:
                 manifest = json.load(f)
+        except RegistryError:
+            raise
         except (OSError, json.JSONDecodeError) as e:
             raise RegistryError(
                 f"unreadable manifest for {name!r}: {e}"
+            ) from e
+        except Exception as e:  # injected faults count as read corruption
+            raise RegistryError(
+                f"failed reading registry entry for {name!r}: {e}"
             ) from e
         meta = manifest.get("meta", {})
         if meta.get("registry_format_version") != REGISTRY_FORMAT_VERSION:

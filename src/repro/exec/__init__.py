@@ -10,7 +10,7 @@ public execution API (``execute``/``execute_sharded``/...) also remains
 reachable through the ``repro.core.spmm`` facade for historical call
 sites.
 """
-from . import api, cache, pipeline
+from . import api, cache, health, pipeline
 from .api import (
     execute, execute_delta_contribution, execute_matrix_path,
     execute_sharded, execute_vector_path, execute_with_delta, neutron_spmm,
@@ -20,15 +20,17 @@ from .cache import (
     EXECUTOR_CACHE, ExecutorCache, dispatch_count, fused_trace_count,
     set_executor_cache_capacity, sharded_trace_count,
 )
+from .health import HEALTH, HealthTable
 from .pipeline import build_delta_only_executor, build_executor
 
 __all__ = [
-    "api", "cache", "pipeline",
+    "api", "cache", "health", "pipeline",
     "execute", "execute_delta_contribution", "execute_matrix_path",
     "execute_sharded", "execute_vector_path", "execute_with_delta",
     "neutron_spmm", "NeutronSpMM", "SpMMOperator",
     "EXECUTOR_CACHE", "ExecutorCache", "dispatch_count",
     "fused_trace_count", "set_executor_cache_capacity",
     "sharded_trace_count",
+    "HEALTH", "HealthTable",
     "build_delta_only_executor", "build_executor",
 ]

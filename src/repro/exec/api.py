@@ -22,18 +22,68 @@ from ..core.plan_ir import (
     NeutronPlan, ShardedPlan, SpmmConfig, gather_rows, permute_pad_b,
     plan_leaves, validate_rhs,
 )
+from ..errors import DispatchError, KernelLoweringError
 from ..kernels import ops
 from . import cache as _cache
 from .cache import (  # noqa: F401  (re-exported test hooks)
     dispatch_count, fused_trace_count, sharded_trace_count,
     set_executor_cache_capacity,
 )
+from .health import HEALTH
 from .pipeline import build_delta_only_executor, build_executor
 
 
 def _apply_cache_capacity(config: SpmmConfig) -> None:
     if config.executor_cache_capacity is not None:
         _cache.EXECUTOR_CACHE.set_capacity(config.executor_cache_capacity)
+
+
+def _guarded_call(sig, config: SpmmConfig, make_fn, args, kind: str, key_of):
+    """Build + dispatch with health gating and degrade-to-XLA fallback.
+
+    ``make_fn(sig) -> fn`` builds (or fetches) the executor for a
+    signature; ``key_of(sig)`` is the dispatch-counter key.  XLA-impl
+    signatures take the pre-existing fast path untouched.  For pallas
+    signatures the health table decides whether to attempt the accelerated
+    tier; a build/lower/first-execute failure is recorded (bounded
+    call-count backoff, then sticky demotion — see ``exec.health``) and
+    the dispatch is retried on :func:`plan_ir.xla_fallback_sig`, which
+    reuses the same plan leaves so results stay bit-identical to the
+    reference.  ``SpmmConfig.degrade_to_xla=False`` turns the fallback
+    into a raised :class:`KernelLoweringError`.  Failures *after* a
+    successful synchronous dispatch (async device-side errors surfacing at
+    a later block) are out of scope here.
+    """
+    impl = plan_ir.sig_impl(sig)
+    if impl is None or impl == "xla":
+        fn = make_fn(sig)
+        _cache.record_dispatch(kind, key_of(sig))
+        return fn(*args)
+    if HEALTH.should_try_accel(sig):
+        try:
+            fn = make_fn(sig)
+            _cache.record_dispatch(kind, key_of(sig))
+            out = fn(*args)
+            HEALTH.record_success(sig)
+            return out
+        except Exception as err:  # noqa: BLE001 — any accel failure degrades
+            HEALTH.record_failure(sig, err)
+            if not config.degrade_to_xla:
+                raise KernelLoweringError(
+                    f"accelerated executor failed for impl={impl!r} and "
+                    f"degrade_to_xla is disabled: {err}"
+                ) from err
+    fsig = plan_ir.xla_fallback_sig(sig)
+    HEALTH.record_fallback(sig)
+    try:
+        fn = make_fn(fsig)
+        _cache.record_dispatch(kind + ":degraded", key_of(fsig))
+        return fn(*args)
+    except Exception as err:
+        raise DispatchError(
+            f"dispatch failed on every tier (accel impl={impl!r} degraded, "
+            f"then XLA fallback raised: {err})"
+        ) from err
 
 
 def execute(plan: NeutronPlan, b: jax.Array) -> jax.Array:
@@ -44,14 +94,18 @@ def execute(plan: NeutronPlan, b: jax.Array) -> jax.Array:
     from one vmapped dispatch compiled once per ``(signature, batch)``.
     Single end-to-end jitted dispatch either way: both engine paths plus
     the scatter-free gather merge compile into one program (empty paths
-    are dropped at trace time).
+    are dropped at trace time).  Pallas-tier plans dispatch through the
+    health gate: a kernel failure degrades to the XLA tier (bit-identical)
+    instead of raising — see :mod:`repro.exec.health`.
     """
     validate_rhs(b, plan.shape)
     _apply_cache_capacity(plan.config)
     batch = int(b.shape[0]) if b.ndim == 3 else None
-    fn = build_executor(plan.signature(), batch=batch)
-    _cache.record_dispatch("fused", (plan.signature(), batch))
-    return fn(*plan_leaves(plan), b)
+    return _guarded_call(
+        plan.signature(), plan.config,
+        lambda s: build_executor(s, batch=batch),
+        (*plan_leaves(plan), b), "fused", lambda s: (s, batch),
+    )
 
 
 def execute_with_delta(plan: NeutronPlan, delta, b: jax.Array) -> jax.Array:
@@ -65,9 +119,12 @@ def execute_with_delta(plan: NeutronPlan, delta, b: jax.Array) -> jax.Array:
     validate_rhs(b, plan.shape)
     _apply_cache_capacity(plan.config)
     batch = int(b.shape[0]) if b.ndim == 3 else None
-    fn = build_executor(plan.signature(), batch=batch, delta_sig=delta.sig)
-    _cache.record_dispatch("fused+delta", (plan.signature(), batch))
-    return fn(*plan_leaves(plan), *delta.leaves, b)
+    return _guarded_call(
+        plan.signature(), plan.config,
+        lambda s: build_executor(s, batch=batch, delta_sig=delta.sig),
+        (*plan_leaves(plan), *delta.leaves, b),
+        "fused+delta", lambda s: (s, batch),
+    )
 
 
 def execute_sharded(
@@ -90,7 +147,7 @@ def execute_sharded(
     _apply_cache_capacity(splan.config)
     batch = int(b.shape[0]) if b.ndim == 3 else None
     if splan.shard_axis == "rhs" and b.shape[-1] % splan.n_shards:
-        raise ValueError(
+        raise DispatchError(
             f"rhs-sharded plan needs N divisible by n_shards="
             f"{splan.n_shards}; got N={b.shape[-1]} (re-prepare with "
             f"shard_axis='rows' or pad B)"
@@ -98,30 +155,33 @@ def execute_sharded(
     if delta is not None:
         routed = isinstance(delta, plan_ir.ShardedDeltaFringe)
         if splan.shard_axis == "rows" and not routed:
-            raise ValueError(
+            raise DispatchError(
                 "a rows-sharded plan needs its delta routed to owning "
                 "shards (plan_ir.build_sharded_delta_fringe), got a plain "
                 "DeltaFringe"
             )
         if splan.shard_axis == "rhs" and routed:
-            raise ValueError(
+            raise DispatchError(
                 "an rhs-sharded plan replicates its delta; pass the plain "
                 "DeltaFringe, not a ShardedDeltaFringe"
             )
-    fn = build_executor(
-        splan.sig, batch=batch,
-        delta_sig=None if delta is None else delta.sig,
-        mesh=splan.mesh, axis_name=splan.axis_name,
-        shard_axis=splan.shard_axis,
-    )
-    _cache.record_dispatch(
-        "sharded" if delta is None else "sharded+delta",
-        (splan.sig, splan.shard_axis, batch),
-    )
     dleaves = () if delta is None else tuple(delta.leaves)
     if splan.shard_axis == "rows":
-        return fn(*splan.leaves, *dleaves, splan.assemble, b)
-    return fn(*splan.leaves, *dleaves, b)
+        args = (*splan.leaves, *dleaves, splan.assemble, b)
+    else:
+        args = (*splan.leaves, *dleaves, b)
+    return _guarded_call(
+        splan.sig, splan.config,
+        lambda s: build_executor(
+            s, batch=batch,
+            delta_sig=None if delta is None else delta.sig,
+            mesh=splan.mesh, axis_name=splan.axis_name,
+            shard_axis=splan.shard_axis,
+        ),
+        args,
+        "sharded" if delta is None else "sharded+delta",
+        lambda s: (s, splan.shard_axis, batch),
+    )
 
 
 def _pad_b(plan: NeutronPlan, b: jax.Array) -> jax.Array:

@@ -23,6 +23,8 @@ import threading
 from collections import OrderedDict
 from typing import Any, Callable, Hashable, List
 
+from ..errors import PlanBuildError
+
 DEFAULT_EXECUTOR_CACHE_CAPACITY = 256
 
 
@@ -31,7 +33,8 @@ class ExecutorCache:
 
     def __init__(self, capacity: int = DEFAULT_EXECUTOR_CACHE_CAPACITY):
         if capacity < 1:
-            raise ValueError(f"cache capacity must be >= 1, got {capacity}")
+            raise PlanBuildError(
+                f"cache capacity must be >= 1, got {capacity}")
         self._data: "OrderedDict[Hashable, Any]" = OrderedDict()
         self._capacity = int(capacity)
         self._lock = threading.Lock()
@@ -45,7 +48,8 @@ class ExecutorCache:
 
     def set_capacity(self, capacity: int) -> None:
         if capacity < 1:
-            raise ValueError(f"cache capacity must be >= 1, got {capacity}")
+            raise PlanBuildError(
+                f"cache capacity must be >= 1, got {capacity}")
         with self._lock:
             self._capacity = int(capacity)
             self._evict_locked()

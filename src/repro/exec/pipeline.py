@@ -37,7 +37,9 @@ from ..distributed.sharding import (
     axis_spec, leading_axis_spec, replicated_spec, shard_map,
     trailing_axis_spec,
 )
+from ..errors import PlanBuildError
 from ..kernels import ops
+from ..robust.faults import HARNESS
 from .cache import EXECUTOR_CACHE, record_fused_trace, record_sharded_trace
 
 
@@ -58,6 +60,8 @@ def _fused_body(sig: Tuple):
              fringe_vals, col_perm, gsrc_m, gsrc_v,
              kb_chunk, kb_rows, kb_cols, kb_vals, b):
         record_fused_trace(sig)
+        if impl != "xla":  # pallas tiers lower here, at trace time
+            HARNESS.fire("pallas_lowering", context=sig)
         n = b.shape[1]
         bp = permute_pad_b(b, col_perm, reorder_cols, bk, bn)
 
@@ -133,6 +137,9 @@ def _flat_body(sig: Tuple, dsig: Optional[Tuple]):
 
 def _build(sig: Tuple, batch: Optional[int], dsig: Optional[Tuple],
            mesh: Any, axis_name: Optional[str], shard_axis: Optional[str]):
+    # fault seam: fires once per executor *build* (cache hits skip _build
+    # entirely, so a demoted-then-cached executor never re-fires)
+    HARNESS.fire("executor_build", context=sig)
     body, n_leaf_args = _flat_body(sig, dsig)
 
     if mesh is None:
@@ -222,9 +229,10 @@ def build_executor(
     process lifetime) bounds memory in long-lived serving processes.
     """
     if mesh is None and (axis_name or shard_axis):
-        raise ValueError("axis_name/shard_axis need a mesh")
+        raise PlanBuildError("axis_name/shard_axis need a mesh")
     if mesh is not None and shard_axis not in ("rows", "rhs"):
-        raise ValueError(f"shard_axis must be rows|rhs, got {shard_axis!r}")
+        raise PlanBuildError(
+            f"shard_axis must be rows|rhs, got {shard_axis!r}")
     key = (sig, batch, delta_sig, mesh, axis_name, shard_axis)
     return EXECUTOR_CACHE.get_or_build(
         key,

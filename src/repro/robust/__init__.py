@@ -1,0 +1,23 @@
+"""Robustness layer: deterministic fault injection for the serving stack.
+
+``repro.robust`` sits next to ``repro.errors`` at the bottom of the import
+graph — every layer above (exec, dynamic, serve) may import it, it imports
+nothing but ``repro.errors``.  See ``faults.py`` for the seam catalogue.
+"""
+from repro.robust.faults import (
+    SEAMS,
+    FaultHarness,
+    FaultPolicy,
+    HARNESS,
+    armed,
+    chaos_schedule,
+)
+
+__all__ = [
+    "SEAMS",
+    "FaultHarness",
+    "FaultPolicy",
+    "HARNESS",
+    "armed",
+    "chaos_schedule",
+]

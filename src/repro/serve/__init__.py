@@ -1,8 +1,9 @@
 """Serving: KV/SSM-cache engine with prefill + decode steps, plus the
-request-batching SpMM service front."""
+request-batching SpMM service front (bounded admission, deadlines,
+quarantine — see ``SpmmService.health()``)."""
 from . import engine, spmm_service
 from .engine import ServeConfig, ServeEngine
-from .spmm_service import SpmmService
+from .spmm_service import ADMISSION_POLICIES, ServiceStats, SpmmService
 
 __all__ = ["engine", "spmm_service", "ServeConfig", "ServeEngine",
-           "SpmmService"]
+           "ADMISSION_POLICIES", "ServiceStats", "SpmmService"]

@@ -39,7 +39,9 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import TimeoutError as _FutureTimeout
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -48,15 +50,27 @@ import numpy as np
 
 from ..core import spmm
 from ..dynamic import DynamicPlan, GraphDelta, PlanRegistry
+from ..errors import (
+    AdmissionError, CompactionError, DeadlineExceeded, DispatchError,
+    PlanBuildError, RegistryError, ReproError,
+)
+from ..exec.health import HEALTH
 from ..kernels.ops import pow2_at_least
+from ..robust.faults import HARNESS
+
+#: Admission policies for a full per-matrix queue (``max_queue`` set).
+ADMISSION_POLICIES = ("reject", "shed-oldest")
 
 
-def _compact_build(dplan: DynamicPlan, rows, cols, vals):
+def _compact_build(name: str, dplan: DynamicPlan, rows, cols, vals):
     """Build the folded plan for a snapshot (worker-thread seam).
 
     Module-level so tests can monkeypatch in a slow build and prove the
-    serving path keeps draining against the old plan until the swap.
+    serving path keeps draining against the old plan until the swap; the
+    ``fold_build`` fault seam fires here so injected failures travel the
+    real future-exception path.
     """
+    HARNESS.fire("fold_build", context=name)
     return dplan.build_compacted(rows, cols, vals)
 
 
@@ -77,6 +91,10 @@ class ServiceStats:
     compactions_applied: int = 0    # background folds swapped in
     compactions_stale: int = 0      # folds discarded (snapshot went stale)
     compactions_failed: int = 0     # folds whose build raised (see fold_errors)
+    admission_rejected: int = 0     # submits refused (queue full, "reject")
+    admission_shed: int = 0         # oldest requests dropped ("shed-oldest")
+    deadline_expired: int = 0       # requests expired before their drain
+    quarantines: int = 0            # matrices quarantined (fold failures)
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -89,9 +107,22 @@ class SpmmService:
                  max_batch: int = 8,
                  registry: Optional[PlanRegistry] = None,
                  persist_updates: bool = True,
-                 async_compaction: bool = True):
+                 async_compaction: bool = True,
+                 max_queue: Optional[int] = None,
+                 admission_policy: str = "reject",
+                 quarantine_after: int = 3):
         if max_batch < 1:
-            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+            raise PlanBuildError(f"max_batch must be >= 1, got {max_batch}")
+        if max_queue is not None and max_queue < 1:
+            raise PlanBuildError(f"max_queue must be >= 1, got {max_queue}")
+        if admission_policy not in ADMISSION_POLICIES:
+            raise PlanBuildError(
+                f"admission_policy must be one of {ADMISSION_POLICIES}, "
+                f"got {admission_policy!r}"
+            )
+        if quarantine_after < 1:
+            raise PlanBuildError(
+                f"quarantine_after must be >= 1, got {quarantine_after}")
         self.config = config
         # registry.save serializes the whole plan (O(matrix), blocking disk
         # I/O) — durable-by-default, but heavy mutation streams over large
@@ -103,17 +134,32 @@ class SpmmService:
         self.max_batch = pow2_at_least(int(max_batch))
         self.registry = registry
         self.async_compaction = bool(async_compaction)
+        # bounded admission: None = unbounded (historical behavior)
+        self.max_queue = max_queue
+        self.admission_policy = admission_policy
+        # consecutive fold-build failures before a matrix stops scheduling
+        # folds (it keeps serving via its sidecar — see health())
+        self.quarantine_after = quarantine_after
         self._plans: Dict[str, Any] = {}  # DynamicPlan | ShardedPlan
-        self._queues: Dict[str, List[Tuple[int, jax.Array]]] = {}
+        # queue items: (ticket, panel, absolute-monotonic deadline | None)
+        self._queues: Dict[str, List[Tuple[int, jax.Array,
+                                           Optional[float]]]] = {}
         self._results: Dict[int, jax.Array] = {}
+        # tickets that completed with a typed error (shed, expired) —
+        # fetch() raises these instead of returning an array
+        self._failed: Dict[int, ReproError] = {}
         self._next_ticket = 0
         # background folds: name -> (snapshot version, Future[plan]).
         # Workers only *build*; the swap (adopt_compacted) always runs on
         # the serving thread, between drains, under _fold_lock.
         self._folds: Dict[str, Tuple[int, Future]] = {}
         self._fold_errors: Dict[str, BaseException] = {}
+        self._fold_failures: Dict[str, int] = {}  # consecutive, per matrix
         self._fold_lock = threading.Lock()
         self._fold_pool: Optional[ThreadPoolExecutor] = None
+        self._closed = False
+        # injectable monotonic clock (deadline tests pin time)
+        self._clock = time.monotonic
         self.stats = ServiceStats()
 
     @property
@@ -162,7 +208,7 @@ class SpmmService:
         shard count when None) — see ``dynamic.registry``.
         """
         if self.registry is None:
-            raise ValueError("warm_start needs a service registry")
+            raise RegistryError("warm_start needs a service registry")
         self._check_reregister(name)
         self._plans[name] = self.registry.load(
             name, mesh=mesh, **self._dynamic_kwargs
@@ -180,13 +226,25 @@ class SpmmService:
         self._queues.setdefault(name, [])
 
     def _check_reregister(self, name: str) -> None:
+        if self._closed:
+            raise AdmissionError("service is closed")
         # panels queued against the old plan's K would dispatch against the
         # new one; make the caller drain first
         if self._queues.get(name):
-            raise ValueError(
+            raise AdmissionError(
                 f"cannot re-register {name!r} with "
                 f"{len(self._queues[name])} pending request(s); flush first"
             )
+        # an in-flight fold built from the *old* plan must never be adopted
+        # by the new one (version counters restart, so a collision could
+        # pass the adopt_compacted staleness check) — discard it, along
+        # with any stale recorded fold error / failure streak
+        with self._fold_lock:
+            stale = self._folds.pop(name, None)
+            if stale is not None:
+                stale[1].cancel()  # running folds finish but are orphaned
+            self._fold_errors.pop(name, None)
+            self._fold_failures.pop(name, None)
 
     def plan(self, name: str):
         return self._plans[name]
@@ -204,11 +262,13 @@ class SpmmService:
         alone, and — when a registry is attached — the updated plan state
         is re-persisted so a restart resumes from the mutated matrix.
         """
+        if self._closed:
+            raise AdmissionError("service is closed")
         if name not in self._plans:
             raise KeyError(f"no matrix registered under {name!r}")
         dplan = self._plans[name]
         if not isinstance(dplan, DynamicPlan):
-            raise ValueError(
+            raise PlanBuildError(
                 f"{name!r} was registered without update maps; re-register "
                 "through register()/register_sharded with a maps-carrying "
                 "plan to enable updates"
@@ -229,6 +289,10 @@ class SpmmService:
         if decision is None or not decision.compact:
             return
         with self._fold_lock:
+            if self._closed:
+                return  # shutdown: never recreate the pool
+            if self._fold_failures.get(name, 0) >= self.quarantine_after:
+                return  # quarantined: serve via sidecar, stop folding
             if name in self._folds:
                 return  # one in-flight fold per matrix
             if self._fold_pool is None:
@@ -237,7 +301,7 @@ class SpmmService:
                 )
             version, rows, cols, vals = dplan.snapshot_for_compaction()
             fut = self._fold_pool.submit(
-                _compact_build, dplan, rows, cols, vals
+                _compact_build, name, dplan, rows, cols, vals
             )
             self._folds[name] = (version, fut)
             self.stats.compactions_scheduled += 1
@@ -265,6 +329,10 @@ class SpmmService:
             if err is not None:
                 self._fold_errors[name] = err
                 self.stats.compactions_failed += 1
+                streak = self._fold_failures.get(name, 0) + 1
+                self._fold_failures[name] = streak
+                if streak == self.quarantine_after:
+                    self.stats.quarantines += 1
                 continue
             dplan = self._plans.get(name)
             if not isinstance(dplan, DynamicPlan):
@@ -272,6 +340,7 @@ class SpmmService:
             if dplan.adopt_compacted(fut.result(), expected_version=version):
                 applied += 1
                 self.stats.compactions_applied += 1
+                self._fold_failures.pop(name, None)  # streak broken
                 if self.registry is not None:
                     self.registry.save(name, dplan)
             else:
@@ -287,8 +356,15 @@ class SpmmService:
     def drain_compactions(self, timeout: Optional[float] = None) -> int:
         """Block until every in-flight fold has finished and been swapped
         in (or discarded as stale, rescheduled, and finished).  Returns the
-        number of swaps applied; raises the first recorded build failure.
-        Test/shutdown helper."""
+        number of swaps applied.
+
+        ``timeout`` is a *total* deadline across every wait (it used to be
+        applied per-future, which made the total wait unbounded); expiry
+        raises :class:`DeadlineExceeded`.  Build failures aggregate into
+        one :class:`CompactionError` carrying every recorded error in
+        ``.errors`` — no failure is silently discarded when several folds
+        break in one drain.  Test/shutdown helper."""
+        deadline = None if timeout is None else self._clock() + timeout
         applied = 0
         while True:
             with self._fold_lock:
@@ -296,46 +372,122 @@ class SpmmService:
             if not futs:
                 errors = self.fold_errors()
                 if errors:
-                    raise next(iter(errors.values()))
+                    summary = "; ".join(
+                        f"{n}: {e}" for n, e in sorted(errors.items())
+                    )
+                    raise CompactionError(
+                        f"{len(errors)} background fold(s) failed: "
+                        f"{summary}", errors=errors,
+                    )
                 return applied
             for f in futs:
-                f.exception(timeout=timeout)  # wait for completion
+                remaining = None
+                if deadline is not None:
+                    remaining = deadline - self._clock()
+                    if remaining <= 0:
+                        raise DeadlineExceeded(
+                            f"drain_compactions exceeded its {timeout}s "
+                            f"total deadline with folds still in flight"
+                        )
+                try:
+                    f.exception(timeout=remaining)  # wait for completion
+                except _FutureTimeout:
+                    raise DeadlineExceeded(
+                        f"drain_compactions exceeded its {timeout}s "
+                        f"total deadline with folds still in flight"
+                    ) from None
             applied += self.poll_compactions()
 
     def close(self) -> None:
-        """Shut down the background fold worker (pending folds complete)."""
-        self.drain_compactions()
+        """Shut down the service: drain in-flight folds, stop the worker.
+
+        Idempotent, and safe against concurrent ``update_matrix`` — the
+        closed flag is checked under ``_fold_lock`` in
+        ``_maybe_schedule_fold``, so nothing can recreate the pool after
+        shutdown.  Recorded fold errors still surface (as a
+        :class:`CompactionError`) after the pool is torn down."""
         with self._fold_lock:
-            pool, self._fold_pool = self._fold_pool, None
-        if pool is not None:
-            pool.shutdown(wait=True)
+            if self._closed:
+                return
+            self._closed = True
+        try:
+            self.drain_compactions()
+        finally:
+            with self._fold_lock:
+                pool, self._fold_pool = self._fold_pool, None
+            if pool is not None:
+                pool.shutdown(wait=True)
+
+    def __enter__(self) -> "SpmmService":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        try:
+            self.close()
+        except ReproError:
+            # don't mask an in-flight exception with a close-time one
+            if exc_type is None:
+                raise
+        return False
 
     # -- request queue ------------------------------------------------------
-    def submit(self, name: str, b: jax.Array) -> int:
+    def submit(self, name: str, b: jax.Array,
+               deadline: Optional[float] = None,
+               timeout: Optional[float] = None) -> int:
         """Queue one (K, N) request panel; returns a result ticket.
 
         Everything a dispatch could reject is validated here, while the
         request is still the caller's problem — a flush-time failure would
-        strand the whole batch."""
+        strand the whole batch.
+
+        ``deadline`` (absolute, on the service's monotonic clock) or
+        ``timeout`` (seconds from now) bounds how long the panel may wait:
+        a request still queued past its deadline at the next drain
+        completes its ticket with :class:`DeadlineExceeded` (raised by
+        ``fetch``) instead of stranding the batch.  With ``max_queue``
+        set, a full queue either raises :class:`AdmissionError`
+        (``admission_policy="reject"``) or sheds the oldest queued request
+        (``"shed-oldest"`` — the shed ticket completes with
+        :class:`AdmissionError`)."""
+        if self._closed:
+            raise AdmissionError("service is closed")
         if name not in self._plans:
             raise KeyError(f"no matrix registered under {name!r}")
         plan = self._inner_plan(name)
         k = plan.shape[1]
         if b.ndim != 2 or b.shape[0] != k:
-            raise ValueError(
+            raise DispatchError(
                 f"request for {name!r} must be (K={k}, N), got "
                 f"{tuple(b.shape)}"
             )
         if (isinstance(plan, spmm.ShardedPlan) and plan.shard_axis == "rhs"
                 and b.shape[1] % plan.n_shards):
-            raise ValueError(
+            raise DispatchError(
                 f"request for {name!r} needs N divisible by "
                 f"n_shards={plan.n_shards} (rhs-sharded plan); got "
                 f"N={b.shape[1]}"
             )
+        queue = self._queues[name]
+        if self.max_queue is not None and len(queue) >= self.max_queue:
+            if self.admission_policy == "reject":
+                self.stats.admission_rejected += 1
+                raise AdmissionError(
+                    f"queue for {name!r} is full "
+                    f"({len(queue)}/{self.max_queue}); flush or raise "
+                    f"max_queue"
+                )
+            shed_ticket, _, _ = queue.pop(0)  # shed-oldest
+            self._failed[shed_ticket] = AdmissionError(
+                f"request {shed_ticket} for {name!r} was shed to admit a "
+                f"newer request (queue full at {self.max_queue})"
+            )
+            self.stats.admission_shed += 1
+        if timeout is not None:
+            deadline = self._clock() + timeout if deadline is None else min(
+                deadline, self._clock() + timeout)
         ticket = self._next_ticket
         self._next_ticket += 1
-        self._queues[name].append((ticket, jnp.asarray(b)))
+        queue.append((ticket, jnp.asarray(b), deadline))
         self.stats.requests += 1
         return ticket
 
@@ -345,12 +497,31 @@ class SpmmService:
         return sum(len(q) for q in self._queues.values())
 
     # -- batched execution --------------------------------------------------
-    def _execute(self, plan, stacked: jax.Array) -> jax.Array:
+    def _execute(self, name: str, plan, stacked: jax.Array) -> jax.Array:
+        HARNESS.fire("dispatch", context=name)
         if isinstance(plan, DynamicPlan):
             return plan.execute(stacked)
         if isinstance(plan, spmm.ShardedPlan):
             return spmm.execute_sharded(plan, stacked)
         return spmm.execute(plan, stacked)
+
+    def _expire_queue(self, name: str) -> None:
+        """Complete overdue tickets with DeadlineExceeded, keep the rest."""
+        queue = self._queues[name]
+        if not any(d is not None for _, _, d in queue):
+            return
+        now = self._clock()
+        keep: List[Tuple[int, jax.Array, Optional[float]]] = []
+        for ticket, panel, d in queue:
+            if d is not None and now >= d:
+                self._failed[ticket] = DeadlineExceeded(
+                    f"request {ticket} for {name!r} expired "
+                    f"{now - d:.3f}s past its deadline before a drain"
+                )
+                self.stats.deadline_expired += 1
+            else:
+                keep.append((ticket, panel, d))
+        queue[:] = keep
 
     def flush(self, name: Optional[str] = None) -> int:
         """Drain queues through batched dispatches; returns the number of
@@ -375,23 +546,26 @@ class SpmmService:
         done = 0
         for qname, queue in selected:
             plan = self._plans[qname]
+            # expired requests complete with DeadlineExceeded up front —
+            # they never join a batch, and the batch never waits for them
+            self._expire_queue(qname)
             while queue:
                 # FIFO head's shape defines this round's group
                 shape = tuple(queue[0][1].shape)
                 group = [item for item in queue
                          if tuple(item[1].shape) == shape][: self.max_batch]
                 bucket = _bucket(len(group), self.max_batch)
-                panels = [b for _, b in group]
+                panels = [b for _, b, _ in group]
                 if bucket > len(panels):  # pad to the bucket with zeros so
                     pad = jnp.zeros_like(panels[0])  # one trace per bucket
                     panels += [pad] * (bucket - len(panels))
-                out = self._execute(plan, jnp.stack(panels))
+                out = self._execute(qname, plan, jnp.stack(panels))
                 # dispatch succeeded: now dequeue and record
-                dispatched = {ticket for ticket, _ in group}
+                dispatched = {ticket for ticket, _, _ in group}
                 queue[:] = [it for it in queue if it[0] not in dispatched]
                 self.stats.dispatches += 1
                 self.stats.padded_slots += bucket - len(group)
-                for i, (ticket, _) in enumerate(group):
+                for i, (ticket, _, _) in enumerate(group):
                     self._results[ticket] = out[i]
                 done += len(group)
         self.stats.flushes += 1
@@ -400,11 +574,17 @@ class SpmmService:
     def fetch(self, ticket: int) -> jax.Array:
         """Pop a completed result (each ticket is fetchable exactly once).
 
-        Raises a KeyError that says *why* the ticket has no result:
-        never issued, still queued (flush first), or already fetched."""
+        A ticket that completed with a typed failure — shed by admission
+        control, or expired past its deadline — raises that
+        :class:`AdmissionError` / :class:`DeadlineExceeded` here (popped
+        once, like a result).  Otherwise raises a KeyError that says *why*
+        the ticket has no result: never issued, still queued (flush
+        first), or already fetched."""
         if ticket in self._results:
             return self._results.pop(ticket)
-        if any(t == ticket for q in self._queues.values() for t, _ in q):
+        if ticket in self._failed:
+            raise self._failed.pop(ticket)
+        if any(t == ticket for q in self._queues.values() for t, _, _ in q):
             raise KeyError(
                 f"ticket {ticket} is still queued; call flush() first"
             )
@@ -413,3 +593,59 @@ class SpmmService:
                 f"ticket {ticket} was already fetched (results pop once)"
             )
         raise KeyError(f"unknown ticket {ticket} (never issued)")
+
+    # -- observability ------------------------------------------------------
+    def _plan_sig(self, name: str):
+        p = self._inner_plan(name)
+        return p.sig if isinstance(p, spmm.ShardedPlan) else p.signature()
+
+    def health(self) -> Dict[str, Any]:
+        """Structured serving-health report.
+
+        Per-matrix state ladder:
+
+        - ``serving``     — healthy on its configured tier;
+        - ``degraded``    — its executor signature is retrying or demoted
+          to the XLA tier (see ``repro.exec.health``); results stay
+          bit-identical, throughput drops;
+        - ``quarantined`` — ``quarantine_after`` consecutive background
+          fold failures: the matrix keeps serving through its sidecar but
+          schedules no further folds (re-register to clear).
+
+        Plus queue depths, in-flight folds, service counters with the
+        executor health table and fault-seam counters folded in, and the
+        registry's generation-fallback count when one is attached."""
+        matrices: Dict[str, Dict[str, Any]] = {}
+        with self._fold_lock:
+            in_flight = set(self._folds)
+            failures = dict(self._fold_failures)
+        for name in sorted(self._plans):
+            streak = failures.get(name, 0)
+            if streak >= self.quarantine_after:
+                state = "quarantined"
+            elif HEALTH.is_degraded(self._plan_sig(name)):
+                state = "degraded"
+            else:
+                state = "serving"
+            matrices[name] = {
+                "state": state,
+                "queue_depth": len(self._queues.get(name, ())),
+                "fold_failures": streak,
+                "fold_in_flight": name in in_flight,
+            }
+        stats = self.stats.as_dict()
+        stats.update(
+            {f"executor_{k}": v for k, v in HEALTH.snapshot().items()}
+        )
+        stats["faults_fired"] = sum(
+            HARNESS.counters()["fired"].values()
+        )
+        if self.registry is not None:
+            stats["registry_generation_fallbacks"] = (
+                self.registry.generation_fallbacks
+            )
+        return {
+            "closed": self._closed,
+            "matrices": matrices,
+            "stats": stats,
+        }

@@ -169,7 +169,7 @@ def test_missing_entry_and_bad_names(tmp_path):
     reg = PlanRegistry(str(tmp_path))
     with pytest.raises(RegistryError, match="no registry entry"):
         reg.load("nope")
-    with pytest.raises(ValueError, match="filesystem-safe"):
+    with pytest.raises(RegistryError, match="filesystem-safe"):
         reg.save("../evil", None)
 
 
@@ -356,3 +356,92 @@ def test_registry_retention_keeps_newest(rng, tmp_path):
     steps = [x for x in os.listdir(d) if x.startswith("step_")]
     assert len(steps) == 2  # checkpoint-style GC
     reg.load("g")  # newest entry still loads
+
+
+# ---------------------------------------------------------------------------
+# write-path crash consistency: a save that dies mid-write must leave the
+# previous generation as the loadable latest step (atomic tmp + os.replace)
+# ---------------------------------------------------------------------------
+def test_crash_during_shard_write_preserves_previous_generation(
+        rng, tmp_path, monkeypatch):
+    from repro.checkpoint import checkpoint as ckpt
+
+    a, rows, cols, vals = _graph(rng)
+    reg = PlanRegistry(str(tmp_path))
+    dp = DynamicPlan(spmm.prepare(rows, cols, vals, a.shape, CFG))
+    reg.save("g", dp)
+
+    real_save, calls = np.save, []
+
+    def dying_save(path, arr, **kw):
+        calls.append(path)
+        if len(calls) >= 2:  # first shard lands, the next write crashes
+            raise OSError("disk died mid-shard")
+        return real_save(path, arr, **kw)
+
+    monkeypatch.setattr(ckpt.np, "save", dying_save)
+    with pytest.raises(RegistryError, match="persist"):
+        reg.save("g", dp)
+    monkeypatch.setattr(ckpt.np, "save", real_save)
+
+    # the half-written generation never replaced into place: generation 1
+    # is still the latest step and loads without any fallback
+    b = jnp.asarray(rng.randn(64, 8).astype(np.float32))
+    restored = reg.load("g")
+    assert np.array_equal(np.asarray(restored.execute(b)),
+                          np.asarray(dp.execute(b)))
+    assert reg.generation_fallbacks == 0
+
+
+def test_interrupted_manifest_replace_preserves_previous_generation(
+        rng, tmp_path, monkeypatch):
+    from repro.checkpoint import checkpoint as ckpt
+
+    a, rows, cols, vals = _graph(rng)
+    reg = PlanRegistry(str(tmp_path))
+    dp = DynamicPlan(spmm.prepare(rows, cols, vals, a.shape, CFG))
+    reg.save("g", dp)
+
+    def dying_replace(src, dst):
+        raise OSError("power loss during rename")
+
+    monkeypatch.setattr(ckpt.os, "replace", dying_replace)
+    with pytest.raises(RegistryError, match="persist"):
+        reg.save("g", dp)
+    monkeypatch.undo()
+
+    restored = reg.load("g")
+    assert restored.plan.shape == a.shape
+    assert reg.generation_fallbacks == 0
+
+
+def test_corrupt_newest_generation_falls_back_with_warning(rng, tmp_path):
+    import warnings
+
+    a, rows, cols, vals = _graph(rng)
+    reg = PlanRegistry(str(tmp_path), keep=2)
+    dp = DynamicPlan(spmm.prepare(rows, cols, vals, a.shape, CFG))
+    b = jnp.asarray(rng.randn(64, 8).astype(np.float32))
+    want = np.asarray(dp.execute(b))
+    reg.save("g", dp)
+    reg.save("g", dp)
+
+    # mangle the newest generation the way a torn write would
+    with open(os.path.join(_entry_dir(str(tmp_path), "g"),
+                           "manifest.json"), "w") as f:
+        f.write('{"meta": {')
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        restored = reg.load("g")
+    assert np.array_equal(np.asarray(restored.execute(b)), want)
+    assert reg.generation_fallbacks == 1
+    assert any(issubclass(w.category, RuntimeWarning)
+               and "serving step_" in str(w.message) for w in caught)
+
+    # once every retained generation is damaged, the failure aggregates
+    with open(os.path.join(str(tmp_path), "g", "step_000000001",
+                           "manifest.json"), "w") as f:
+        f.write("not json")
+    with pytest.raises(RegistryError, match="every retained generation"):
+        reg.load("g")

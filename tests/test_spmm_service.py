@@ -5,6 +5,7 @@ import pytest
 from repro.core import spmm
 from repro.data import graphs
 from repro.dynamic import GraphDelta
+from repro.errors import AdmissionError
 from repro.launch.mesh import make_spmm_mesh
 from repro.serve import SpmmService
 from conftest import make_sparse
@@ -125,7 +126,7 @@ def test_reregister_with_pending_requests_rejected(rng):
     svc = SpmmService(spmm.SpmmConfig(impl="xla"))
     a = _register(svc, rng)
     svc.submit("g", rng.randn(70, 8).astype(np.float32))
-    with pytest.raises(ValueError, match="pending"):
+    with pytest.raises(AdmissionError, match="pending"):
         _register(svc, rng, m=50, k=40)
 
 
@@ -295,10 +296,10 @@ def test_async_compaction_never_blocks_serving(rng, monkeypatch):
     real_build = svc_mod._compact_build
     started, release = threading.Event(), threading.Event()
 
-    def slow_build(dplan, rows, cols, vals):
+    def slow_build(name, dplan, rows, cols, vals):
         started.set()
         assert release.wait(30), "test never released the fold"
-        return real_build(dplan, rows, cols, vals)
+        return real_build(name, dplan, rows, cols, vals)
 
     monkeypatch.setattr(svc_mod, "_compact_build", slow_build)
 
@@ -345,10 +346,10 @@ def test_async_compaction_stale_snapshot_reschedules(rng, monkeypatch):
     real_build = svc_mod._compact_build
     started, release = threading.Event(), threading.Event()
 
-    def gated_build(dplan, rows, cols, vals):
+    def gated_build(name, dplan, rows, cols, vals):
         started.set()
         assert release.wait(30)
-        return real_build(dplan, rows, cols, vals)
+        return real_build(name, dplan, rows, cols, vals)
 
     monkeypatch.setattr(svc_mod, "_compact_build", gated_build)
 
@@ -402,10 +403,10 @@ def test_failed_fold_does_not_discard_other_folds(rng, monkeypatch):
 
     real_build = svc_mod._compact_build
 
-    def flaky_build(dplan, rows, cols, vals):
-        if dplan is svc.plan("bad"):
+    def flaky_build(name, dplan, rows, cols, vals):
+        if name == "bad":
             raise RuntimeError("injected build failure")
-        return real_build(dplan, rows, cols, vals)
+        return real_build(name, dplan, rows, cols, vals)
 
     monkeypatch.setattr(svc_mod, "_compact_build", flaky_build)
 

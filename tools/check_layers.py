@@ -8,11 +8,16 @@ top-level *and* function-local imports, plus ``importlib.import_module``
 calls with literal arguments — and fails CI when a package imports a layer
 above itself:
 
+    errors, robust          (shared taxonomy + fault harness: no deps)
     kernels, distributed    (leaf utilities)
         -> core             (plan IR + plan builders)
-        -> exec             (executor pipeline)
+        -> exec             (executor pipeline + health table)
         -> dynamic          (incremental plan maintenance)
         -> serve            (request batching / async compaction)
+
+``repro.errors`` (a top-level module) and ``repro.robust`` sit at the very
+bottom: any layer may import them, they import nothing above (``robust``
+may import ``errors`` and itself).
 
 One documented allowance: ``core/spmm.py`` is the public facade and
 forwards execution names to ``repro.exec.api`` through a lazy PEP 562
@@ -40,6 +45,10 @@ PKG = "repro"
 
 # package -> layers it must never import (prefix match on absolute module)
 FORBIDDEN = {
+    # bottom of the graph: the error taxonomy imports nothing from the
+    # package, the fault harness only repro.errors (see ALLOWED_PREFIXES)
+    "errors": ("repro",),
+    "robust": ("repro",),
     "kernels": ("repro.core", "repro.exec", "repro.dynamic", "repro.serve",
                 "repro.distributed", "repro.launch", "repro.models",
                 "repro.train"),
@@ -61,6 +70,8 @@ ALLOWED = {
 # docstring); expressed as an allowed *prefix* rather than per-file pairs.
 ALLOWED_PREFIXES = {
     "kernels": ("repro.core.cost_model",),
+    # the fault harness may import the taxonomy (and its own package)
+    "robust": ("repro.errors", "repro.robust"),
 }
 
 
@@ -111,7 +122,9 @@ def check_tree(src_root: str = SRC) -> List[str]:
                 continue
             path = os.path.join(dirpath, fname)
             rel = os.path.relpath(path, src_root).replace(os.sep, "/")
-            subpkg = rel.split("/")[1] if "/" in rel else ""
+            part = rel.split("/")[1] if "/" in rel else ""
+            # top-level modules (repro/errors.py) rule-match by stem
+            subpkg = part[:-3] if part.endswith(".py") else part
             rules = FORBIDDEN.get(subpkg)
             if not rules:
                 continue
