@@ -1,0 +1,65 @@
+"""GAT-style attention as three facade calls: sddmm -> with_values -> spmm.
+
+Dot-product attention over a graph: scores are a *sampled* dense-dense
+matmul — ``(Q K^T)/sqrt(d)`` evaluated only at the graph's edges — which
+is exactly the SDDMM operator on the prepared plan's pattern.  The
+softmaxed weights then replace the plan's values (retrace-free; the plan
+signature and its cached executor are untouched) and one coordinated
+SpMM aggregates.  No dense (N, N) attention matrix ever exists.
+
+    PYTHONPATH=src python examples/gat_attention.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.sparse as sp
+from gcn_training import make_graph
+
+
+def main():
+    rows, cols, vals, feats, _labels, _nc = make_graph(n=1024, avg_deg=10)
+    n, d = feats.shape
+    d_head = 32
+    A = sp.from_coo(rows, cols, vals, (n, n), impl="xla")
+    print(f"graph: {n} nodes, {A.nnz} edges")
+
+    rng = np.random.RandomState(0)
+    wq = jnp.asarray(rng.randn(d, d_head).astype(np.float32) / np.sqrt(d))
+    wk = jnp.asarray(rng.randn(d, d_head).astype(np.float32) / np.sqrt(d))
+    x = jnp.asarray(feats)
+    q, k = x @ wq, x @ wk
+
+    # 1) SDDMM: per-edge raw scores, one fused dispatch, original COO order
+    e = sp.sddmm(A, q, k.T) / np.sqrt(d_head)
+
+    # 2) edge softmax per destination row (segment ops over static rows)
+    seg = jnp.asarray(rows)
+    e_max = jax.ops.segment_max(e, seg, num_segments=n)
+    p = jnp.exp(e - e_max[seg])
+    alpha = p / jnp.maximum(jax.ops.segment_sum(p, seg, num_segments=n)[seg],
+                            1e-30)
+
+    # 3) swap the weights into the pattern and aggregate: same executor,
+    # zero retraces — with_values rides dynamic.update_values underneath
+    A_att = A.with_values(np.asarray(alpha))
+    out = sp.spmm(A_att, x)
+
+    # verify against the dense oracle
+    dense_scores = np.asarray(q @ k.T) / np.sqrt(d_head)
+    mask = np.zeros((n, n), bool)
+    mask[rows, cols] = True
+    dense_scores[~mask] = -np.inf
+    ref_alpha = np.exp(dense_scores - dense_scores.max(1, keepdims=True))
+    ref_alpha /= ref_alpha.sum(1, keepdims=True)
+    ref = ref_alpha.astype(np.float32) @ np.asarray(x)
+    err = float(np.abs(np.asarray(out) - ref).max() / np.abs(ref).max())
+    from repro.exec import dispatch_count, fused_trace_count
+    print(f"attention-weighted aggregation -> {out.shape}, "
+          f"rel err vs dense softmax: {err:.2e}; "
+          f"{dispatch_count()} dispatches, {fused_trace_count()} traces")
+    assert err < 1e-4, "GAT round trip diverged from the dense oracle"
+
+
+if __name__ == "__main__":
+    main()

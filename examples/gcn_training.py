@@ -11,8 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SpmmConfig
-from repro.core.spmm import SpMMOperator
+import repro.sparse as sp
 from repro.data import graphs
 
 
@@ -49,10 +48,11 @@ def main():
 
     rows, cols, vals, feats, labels, n_classes = make_graph()
     n = feats.shape[0]
-    agg = SpMMOperator(rows, cols, vals, (n, n), SpmmConfig(impl="xla"))
+    A = sp.from_coo(rows, cols, vals, (n, n), impl="xla")
+    agg = lambda h: sp.spmm(A, h)  # noqa: E731  — one fused dispatch per call
     print(f"graph: {n} nodes, {len(rows)} edges; "
-          f"alpha={agg.plan.stats_dict['alpha']:.4f}, "
-          f"fringe={agg.plan.stats_dict['fringe_fraction']:.1%}")
+          f"alpha={A.plan.stats_dict['alpha']:.4f}, "
+          f"fringe={A.plan.stats_dict['fringe_fraction']:.1%}")
 
     rng = jax.random.PRNGKey(0)
     k1, k2 = jax.random.split(rng)
@@ -81,7 +81,7 @@ def main():
 
     h = jax.nn.relu(agg(x @ params["w1"]))
     acc = float(jnp.mean(jnp.argmax(agg(h @ params["w2"]), -1) == y))
-    from repro.core.spmm import fused_trace_count
+    from repro.exec import fused_trace_count
     print(f"final loss {float(loss):.4f}, train acc {acc:.3f}, "
           f"{args.epochs} epochs in {dt:.1f}s "
           f"({1e3 * dt / args.epochs:.1f} ms/epoch); "

@@ -5,7 +5,7 @@
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SpmmConfig, neutron_spmm, prepare, execute
+import repro.sparse as sp
 from repro.data import graphs
 
 
@@ -17,9 +17,10 @@ def main():
     print(f"A: {shape}, nnz={int(stats['nnz'])}, "
           f"density={stats['density']:.2e}, skew={stats['skew_top10']:.2f}")
 
-    # 2) prepare once (cost-model split -> reorder -> tile stream -> fringe)
-    plan = prepare(rows, cols, vals, shape, SpmmConfig(impl="xla"))
-    sd = plan.stats_dict
+    # 2) prepare once (cost-model split -> reorder -> tile stream -> fringe);
+    # from_coo returns a SparseMatrix handle fronting the prepared plan
+    A = sp.from_coo(rows, cols, vals, shape, impl="xla")
+    sd = A.plan.stats_dict
     print(f"alpha={sd['alpha']:.4f}  fringe={sd['fringe_fraction']:.1%} of nnz"
           f"  tile_density={sd['tile_density']:.3f}"
           f"  reuse_factor={sd['reuse_factor']:.2f}")
@@ -29,16 +30,15 @@ def main():
     # plan signature, so epoch loops never retrace
     b = jnp.asarray(np.random.RandomState(0).randn(shape[1], 128),
                     jnp.float32)
-    from repro.core.spmm import fused_trace_count
-    out = execute(plan, b)
+    from repro.exec import fused_trace_count
+    out = sp.spmm(A, b)
     for _ in range(3):  # epochs reuse the compiled executable
-        out = execute(plan, b)
+        out = A @ b     # operator sugar for sp.spmm(A, b)
     print(f"fused executor traces after 4 epochs: {fused_trace_count()}")
 
     # 4) verify vs dense reference
-    dense = np.zeros(shape, np.float32)
-    dense[rows, cols] = vals
-    err = float(jnp.abs(out - dense @ np.asarray(b)).max())
+    err = float(jnp.abs(out - A.dense().astype(np.float32) @ np.asarray(b)
+                        ).max())
     print(f"C = A @ B -> {out.shape}, max abs err vs dense: {err:.2e}")
 
 

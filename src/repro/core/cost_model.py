@@ -323,3 +323,46 @@ def select_fringe_tier(
     if bk >= FRINGE_MIN_BK:
         return "ksharded", int(bk)
     return "xla", 0
+
+
+def assert_vmem_claim(claim_bytes: int, what: str) -> None:
+    """Hard physical-VMEM check shared by every pallas kernel entry point.
+
+    The dispatch tiers above keep working sets under the *soft* budget; this
+    is the backstop against a caller bypassing tier selection (or forcing a
+    tier) into a kernel whose working set cannot physically fit.  One
+    helper so the kernels and ``select_fringe_tier`` can never disagree
+    about what "fits" means.
+    """
+    if claim_bytes > VMEM_BYTES:
+        raise ValueError(
+            f"{what} needs ~{claim_bytes / 2**20:.1f} MB of VMEM "
+            f"(> {VMEM_BYTES / 2**20:.0f} MB physical); use the K-sharded "
+            "or XLA dispatch tier for this shape"
+        )
+
+
+# --- SDDMM dispatch tiers ----------------------------------------------------
+# The SDDMM fringe gather keeps *both* dense operand panels resident: the
+# full (M_pad, D) X panel and the (K_pad, D) Y^T panel (each nonzero reads
+# one row of each).  There is no useful K-sharded middle tier — the reduced
+# axis is D, and slicing D would re-stream both panels — so the selection is
+# binary: resident pallas gather, or the XLA reference gather.
+
+
+def sddmm_resident_bytes(d: int, n_src_rows: int, n_dst_rows: int,
+                         chunk: int = 64) -> int:
+    """SDDMM gather working set: X panel + Y^T panel + one output chunk."""
+    return (_pad_rows(n_src_rows) + _pad_rows(n_dst_rows)) * d * 4 + \
+        _pad_rows(chunk) * VPU_LANES * 4
+
+
+def select_sddmm_tier(
+    d: int, n_src_rows: int, n_dst_rows: int,
+    vmem_budget: Optional[int] = None,
+) -> str:
+    """Pick the SDDMM fringe-gather tier: ``"resident"`` or ``"xla"``."""
+    budget = FRINGE_VMEM_BUDGET if vmem_budget is None else int(vmem_budget)
+    if sddmm_resident_bytes(d, n_src_rows, n_dst_rows) <= budget:
+        return "resident"
+    return "xla"

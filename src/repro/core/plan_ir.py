@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..errors import PlanBuildError
 from ..kernels import ops
 from .cost_model import select_fringe_tier
 
@@ -75,6 +76,57 @@ def xla_fallback_sig(sig: Tuple) -> Tuple:
     demoted = list(sig)
     demoted[SIG_IMPL] = "xla"
     return tuple(demoted)
+
+
+# --- operator tagging --------------------------------------------------------
+# Non-SpMM operators on the same plan structure (SDDMM today) reuse the plan
+# signature with a trailing ("op", name, *extra) marker.  The suffix keeps
+# every positional consumer intact — ``sig[0]`` is still PLAN_FORMAT_VERSION,
+# ``sig[SIG_IMPL]`` is still the impl — so health gating, the XLA demotion,
+# and the bounded executor LRU all cover tagged signatures for free, while
+# ``(op, signature)`` pairs never alias each other's cached executors.
+
+OP_TAG = "op"
+
+
+def tag_op(sig: Tuple, op: str, *extra) -> Tuple:
+    """Suffix a plan signature with an operator tag (hashable extras only)."""
+    if sig_impl(sig) is None:
+        raise ValueError(f"not a plan-style signature: {sig!r}")
+    return sig + ((OP_TAG, op) + tuple(extra),)
+
+
+def sig_op(sig: Tuple) -> str:
+    """Operator name of a signature ("spmm" when untagged)."""
+    if (
+        isinstance(sig, tuple) and sig
+        and isinstance(sig[-1], tuple) and sig[-1]
+        and sig[-1][0] == OP_TAG
+    ):
+        return sig[-1][1]
+    return "spmm"
+
+
+def op_extra(sig: Tuple) -> Tuple:
+    """The tag's extra payload (empty for untagged signatures)."""
+    if (
+        isinstance(sig, tuple) and sig
+        and isinstance(sig[-1], tuple) and sig[-1]
+        and sig[-1][0] == OP_TAG
+    ):
+        return tuple(sig[-1][2:])
+    return ()
+
+
+def untag_sig(sig: Tuple) -> Tuple:
+    """The base plan signature with any operator tag stripped."""
+    if (
+        isinstance(sig, tuple) and sig
+        and isinstance(sig[-1], tuple) and sig[-1]
+        and sig[-1][0] == OP_TAG
+    ):
+        return sig[:-1]
+    return sig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -534,6 +586,90 @@ def build_update_maps(
         core_members_sorted=core_idx[cm_order],
         key_sorted=key_sorted, key_order=key_order,
     )
+
+
+# --- SDDMM gather maps -------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SddmmMaps:
+    """Device-resident index maps for SDDMM over a plan's pattern.
+
+    SDDMM inverts the SpMM dataflow: the matrix engine computes dense
+    ``X_window @ Y_kblock`` tiles for exactly the (window, k-block) pairs the
+    plan's tile stream names, and per-nonzero values are *extracted* from the
+    flat tile stream at the same linear slots ``prepare()`` scattered values
+    into (``UpdateMaps.core_lin``).  Fringe nonzeros bypass the tile path and
+    compute their dot products by row gather.  Output order is the plan's
+    original COO input order — layout-compatible with
+    ``dynamic.update_values(plan, arange(nnz), out)``.
+
+    Extraction (unlike accumulation) is duplicate-safe: duplicate COO
+    triplets share a tile slot but read the same dot product.
+    """
+
+    g_rows: jax.Array    # (nnz,) int32 original rows, every nonzero
+    g_cols: jax.Array    # (nnz,) int32 original cols, every nonzero
+    core_lin: jax.Array  # (nnz,) int32 flat tile slot, -1 on the fringe path
+    f_idx: jax.Array     # (nnz,) int32 index into the fringe subset, -1 core
+    f_rows: jax.Array    # (nnz_f,) int32 fringe-subset rows (>=1, padded)
+    f_cols: jax.Array    # (nnz_f,) int32 fringe-subset cols
+    nnz: int
+    nnz_f: int           # padded fringe-subset length
+
+    def leaves(self) -> Tuple[jax.Array, ...]:
+        return (self.g_rows, self.g_cols, self.core_lin, self.f_idx,
+                self.f_rows, self.f_cols)
+
+
+N_SDDMM_MAP_LEAVES = 6
+# sddmm executor-body args before the (x, y) operands: the plan-side tile
+# metadata (step_window, step_col, core_row_map, col_perm) + the map leaves
+N_SDDMM_BODY_LEAVES = 4 + N_SDDMM_MAP_LEAVES
+
+
+def sddmm_body_leaves(
+    plan: NeutronPlan, maps: "SddmmMaps"
+) -> Tuple[jax.Array, ...]:
+    """SDDMM executor-body args in fused-body order (without x, y)."""
+    return (
+        plan.step_window, plan.step_col, plan.core_row_map, plan.col_perm,
+    ) + maps.leaves()
+
+
+def build_sddmm_maps(plan: NeutronPlan) -> SddmmMaps:
+    """Invert a plan's update maps into SDDMM extraction indices (cached on
+    the maps instance — structure-only, so value updates never stale it)."""
+    maps = plan.update_maps
+    if maps is None:
+        raise PlanBuildError(
+            "sddmm needs the plan's COO->slot update maps; this plan lost "
+            "them (plans round-tripped through jax tree ops come back with "
+            "update_maps=None) — re-prepare from COO to use sddmm"
+        )
+    cached = getattr(maps, "_sddmm_maps", None)
+    if cached is not None:
+        return cached
+    core = maps.core_lin >= 0
+    f_sel = np.flatnonzero(~core)
+    f_idx = np.full(maps.nnz, -1, np.int64)
+    f_idx[f_sel] = np.arange(f_sel.size)
+    f_rows = maps.rows[f_sel]
+    f_cols = maps.cols[f_sel]
+    if f_rows.size == 0:  # keep the gather operand nonempty for the kernels
+        f_rows = np.zeros(1, np.int64)
+        f_cols = np.zeros(1, np.int64)
+    built = SddmmMaps(
+        g_rows=jnp.asarray(maps.rows, jnp.int32),
+        g_cols=jnp.asarray(maps.cols, jnp.int32),
+        core_lin=jnp.asarray(maps.core_lin, jnp.int32),
+        f_idx=jnp.asarray(f_idx, jnp.int32),
+        f_rows=jnp.asarray(f_rows, jnp.int32),
+        f_cols=jnp.asarray(f_cols, jnp.int32),
+        nnz=maps.nnz, nnz_f=int(f_rows.shape[0]),
+    )
+    maps._sddmm_maps = built
+    return built
 
 
 # --- mesh-uniform leaf stacking ---------------------------------------------

@@ -17,6 +17,11 @@ call sites keep working::
 
     from repro.core.spmm import prepare, execute, execute_sharded, ...
 
+New code should go through the :mod:`repro.sparse` facade instead — one
+``SparseMatrix`` handle fronting the whole operator family (spmm, bspmm,
+sddmm, spspmm); the execution forwarders here emit a one-per-process
+``DeprecationWarning``.
+
 Execution names are forwarded lazily (PEP 562) to keep the core layer's
 static import graph pointing strictly downward — ``tools/check_layers.py``
 enforces that ``core/`` never imports ``exec``/``dynamic``/``serve`` and
@@ -58,10 +63,25 @@ _EXEC_FORWARDS = (
 )
 
 
+_WARNED_FORWARD = False  # one DeprecationWarning per process, not per access
+
+
 def __getattr__(name: str):
     if name in _EXEC_FORWARDS:
         import importlib
 
+        global _WARNED_FORWARD
+        if not _WARNED_FORWARD:
+            import warnings
+
+            _WARNED_FORWARD = True
+            warnings.warn(
+                "importing execution names from repro.core.spmm is "
+                "deprecated; use the repro.sparse facade (or repro.exec "
+                "directly) instead",
+                DeprecationWarning,
+                stacklevel=2,
+            )
         return getattr(importlib.import_module("repro.exec.api"), name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 

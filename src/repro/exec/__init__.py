@@ -13,7 +13,8 @@ sites.
 from . import api, cache, health, pipeline
 from .api import (
     execute, execute_delta_contribution, execute_matrix_path,
-    execute_sharded, execute_vector_path, execute_with_delta, neutron_spmm,
+    execute_sddmm, execute_sharded, execute_spspmm, execute_vector_path,
+    execute_with_delta, neutron_spmm, validate_sddmm_operands,
     NeutronSpMM, SpMMOperator,
 )
 from .cache import (
@@ -26,8 +27,10 @@ from .pipeline import build_delta_only_executor, build_executor
 __all__ = [
     "api", "cache", "health", "pipeline",
     "execute", "execute_delta_contribution", "execute_matrix_path",
-    "execute_sharded", "execute_vector_path", "execute_with_delta",
-    "neutron_spmm", "NeutronSpMM", "SpMMOperator",
+    "execute_sddmm", "execute_sharded", "execute_spspmm",
+    "execute_vector_path", "execute_with_delta",
+    "neutron_spmm", "validate_sddmm_operands",
+    "NeutronSpMM", "SpMMOperator",
     "EXECUTOR_CACHE", "ExecutorCache", "dispatch_count",
     "fused_trace_count", "set_executor_cache_capacity",
     "sharded_trace_count",

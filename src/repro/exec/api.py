@@ -19,10 +19,10 @@ import numpy as np
 
 from ..core import plan_ir
 from ..core.plan_ir import (
-    NeutronPlan, ShardedPlan, SpmmConfig, gather_rows, permute_pad_b,
-    plan_leaves, validate_rhs,
+    NeutronPlan, ShardedPlan, SpmmConfig, build_sddmm_maps, gather_rows,
+    permute_pad_b, plan_leaves, sddmm_body_leaves, validate_rhs,
 )
-from ..errors import DispatchError, KernelLoweringError
+from ..errors import DispatchError, KernelLoweringError, PlanBuildError
 from ..kernels import ops
 from . import cache as _cache
 from .cache import (  # noqa: F401  (re-exported test hooks)
@@ -182,6 +182,198 @@ def execute_sharded(
         "sharded" if delta is None else "sharded+delta",
         lambda s: (s, splan.shard_axis, batch),
     )
+
+
+def validate_sddmm_operands(
+    x: jax.Array, y: jax.Array, shape: Tuple[int, int]
+):
+    """Validate SDDMM operands against the pattern's shape; returns batch.
+
+    ``x`` is ``(M, D)`` or ``(batch, M, D)``; ``y`` is ``(D, K)`` or
+    ``(batch, D, K)``.  Mixed batching is rejected — broadcasting one
+    operand silently would make the batched result's provenance ambiguous.
+    """
+    m, k = shape
+    if x.ndim not in (2, 3) or y.ndim not in (2, 3):
+        raise ValueError(
+            f"sddmm operands must be (M, D)/(D, K) or batched with one "
+            f"leading axis each; got x {tuple(x.shape)}, y {tuple(y.shape)}"
+        )
+    if x.ndim != y.ndim:
+        raise ValueError(
+            f"sddmm operands must be batched together; got x "
+            f"{tuple(x.shape)} and y {tuple(y.shape)}"
+        )
+    if x.ndim == 3 and int(x.shape[0]) != int(y.shape[0]):
+        raise ValueError(
+            f"sddmm batch sizes disagree: x {tuple(x.shape)} vs y "
+            f"{tuple(y.shape)}"
+        )
+    if int(x.shape[-2]) != m:
+        raise ValueError(
+            f"sddmm operand M={int(x.shape[-2])} does not match the "
+            f"pattern's M={m} (pattern shape {shape})"
+        )
+    if int(y.shape[-1]) != k:
+        raise ValueError(
+            f"sddmm operand K={int(y.shape[-1])} does not match the "
+            f"pattern's K={k} (pattern shape {shape})"
+        )
+    if int(x.shape[-1]) != int(y.shape[-2]):
+        raise ValueError(
+            f"sddmm operands disagree on D: x {tuple(x.shape)} vs y "
+            f"{tuple(y.shape)}"
+        )
+    return int(x.shape[0]) if x.ndim == 3 else None
+
+
+def execute_sddmm(plan, x: jax.Array, y: jax.Array) -> jax.Array:
+    """Sampled dense-dense matmul over a plan's sparsity pattern.
+
+    Computes ``(X @ Y)[i, j]`` for exactly the pattern's nonzero positions
+    and returns them as an fp32 value vector ``(nnz,)`` (batched operands
+    return ``(batch, nnz)``) in the plan's original COO input order —
+    layout-compatible with ``dynamic.update_values(plan, arange(nnz), out)``
+    so attention scores flow straight back into a dynamic plan.
+
+    One fused jitted dispatch per call: the matrix engine computes dense
+    products for the plan's active tiles (values extracted at the
+    ``core_lin`` slots), the vector engine gathers per-nonzero dots for the
+    fringe, and pallas-tier plans ride the same health gate / degrade-to-
+    XLA machinery as SpMM.  ``ShardedPlan`` patterns dispatch through the
+    flat global gather form (output is (nnz,) — tiny next to the operands).
+    """
+    if isinstance(plan, ShardedPlan):
+        return _execute_sddmm_sharded(plan, x, y)
+    smaps = build_sddmm_maps(plan)
+    batch = validate_sddmm_operands(x, y, plan.shape)
+    _apply_cache_capacity(plan.config)
+    if smaps.nnz == 0:
+        shape = (0,) if batch is None else (batch, 0)
+        return jnp.zeros(shape, jnp.float32)
+    sig = plan_ir.tag_op(
+        plan.signature(), "sddmm", smaps.nnz, smaps.nnz_f,
+        plan.config.fringe_vmem_budget,
+    )
+    return _guarded_call(
+        sig, plan.config,
+        lambda s: build_executor(s, batch=batch),
+        (*sddmm_body_leaves(plan, smaps), x, y),
+        "sddmm", lambda s: (s, batch),
+    )
+
+
+def _execute_sddmm_sharded(
+    splan: ShardedPlan, x: jax.Array, y: jax.Array
+) -> jax.Array:
+    maps = splan.update_maps
+    if maps is None:
+        raise PlanBuildError(
+            "sddmm on a sharded plan needs its global COO mirror "
+            "(ShardedUpdateMaps); this plan lost it — re-prepare from COO"
+        )
+    batch = validate_sddmm_operands(x, y, splan.shape)
+    _apply_cache_capacity(splan.config)
+    if maps.nnz == 0:
+        shape = (0,) if batch is None else (batch, 0)
+        return jnp.zeros(shape, jnp.float32)
+    flat = getattr(maps, "_sddmm_flat", None)
+    if flat is None:  # structure-only device mirror, cached on the maps
+        flat = (jnp.asarray(maps.rows, jnp.int32),
+                jnp.asarray(maps.cols, jnp.int32))
+        maps._sddmm_flat = flat
+    cfg = splan.config
+    sig = ("sddmm_flat", cfg.impl, maps.nnz, cfg.fringe_chunk)
+    return _guarded_call(
+        sig, cfg,
+        lambda s: build_executor(s, batch=batch),
+        (*flat, x, y), "sddmm", lambda s: (s, batch),
+    )
+
+
+def execute_spspmm(a_plan, b_plan) -> Tuple:
+    """Sparse x sparse matmul: ``C = A @ B`` from two prepared patterns.
+
+    Two phases.  The *symbolic* phase runs host-side on the plans' COO
+    mirrors: B's row-window occupancy (the plan IR's window metadata) is
+    intersected against A's column set to discard A nonzeros that cannot
+    meet any B row, survivors expand to per-term (A-nonzero, B-nonzero)
+    index pairs by binary search over B's row-sorted order, and the terms
+    are sorted/uniqued into C's output pattern.  The *numeric* phase is ONE
+    jitted dispatch — a sorted segment sum over the expansion products —
+    through the same executor cache and dispatch counters as every other
+    op.  Duplicate COO triplets in either input accumulate exactly like
+    the dense oracle (each triplet expands independently and the segment
+    sum adds them).
+
+    Accepts single-device or sharded plans (both keep global COO mirrors).
+    Returns ``(rows, cols, vals, shape)`` — a COO triple in row-major
+    order, ready for ``prepare()``/``repro.sparse.from_coo``.
+    """
+    ma, mb = a_plan.update_maps, b_plan.update_maps
+    if ma is None or mb is None:
+        raise PlanBuildError(
+            "spspmm needs both plans' COO mirrors (update_maps); a plan "
+            "round-tripped through jax tree ops lost them — re-prepare"
+        )
+    m, ka = a_plan.shape
+    kb, n = b_plan.shape
+    if ka != kb:
+        raise ValueError(
+            f"spspmm inner dimensions disagree: A is {a_plan.shape}, "
+            f"B is {b_plan.shape}"
+        )
+    _apply_cache_capacity(a_plan.config)
+
+    ar, ac = ma.rows, ma.cols
+    br, bc = mb.rows, mb.cols
+    empty = (np.zeros(0, np.int64), np.zeros(0, np.int64),
+             jnp.zeros(0, jnp.float32), (m, n))
+    if ar.size == 0 or br.size == 0:
+        return empty
+
+    # --- symbolic phase (host) --------------------------------------------
+    # coarse row-window intersection: a B row-window with no nonzeros can
+    # satisfy no A column that lands in it, so those A entries drop before
+    # the exact per-row search
+    bm_b = b_plan.config.bm
+    n_win = (kb + bm_b - 1) // bm_b
+    active_win = np.zeros(n_win, bool)
+    active_win[np.unique(br // bm_b)] = True
+    keep = np.flatnonzero(active_win[ac // bm_b])
+    if keep.size == 0:
+        return empty
+
+    ob = np.argsort(br, kind="stable")
+    brs = br[ob]
+    starts = np.searchsorted(brs, ac[keep])
+    deg = np.searchsorted(brs, ac[keep], side="right") - starts
+    n_exp = int(deg.sum())
+    if n_exp == 0:
+        return empty
+    ae = np.repeat(keep, deg)
+    cum = np.cumsum(deg) - deg
+    be = ob[np.arange(n_exp) - np.repeat(cum, deg) + np.repeat(starts, deg)]
+
+    key = ar[ae] * np.int64(n) + bc[be]
+    order = np.argsort(key, kind="stable")
+    ae, be, key = ae[order], be[order], key[order]
+    first = np.concatenate([[True], key[1:] != key[:-1]])
+    ce = np.cumsum(first) - 1
+    c_keys = key[first]
+    nnz_c = int(c_keys.size)
+
+    # --- numeric phase (one jitted dispatch) ------------------------------
+    sig = ("spspmm", n_exp, nnz_c)
+    vals = _guarded_call(
+        sig, a_plan.config,
+        lambda s: build_executor(s),
+        (jnp.asarray(ae, jnp.int32), jnp.asarray(be, jnp.int32),
+         jnp.asarray(ce, jnp.int32), jnp.asarray(ma.vals),
+         jnp.asarray(mb.vals)),
+        "spspmm", lambda s: s,
+    )
+    return c_keys // n, c_keys % n, vals, (m, n)
 
 
 def _pad_b(plan: NeutronPlan, b: jax.Array) -> jax.Array:

@@ -31,7 +31,8 @@ import jax.numpy as jnp
 
 from ..core.plan_ir import (
     DELTA_LEAF_RANKS, LEAF_COL_PERM, LEAF_RANKS, N_DELTA_LEAVES,
-    N_PLAN_LEAVES, delta_child_sig, gather_rows, permute_pad_b,
+    N_PLAN_LEAVES, N_SDDMM_BODY_LEAVES, delta_child_sig, gather_rows,
+    op_extra, permute_pad_b, sig_op, untag_sig,
 )
 from ..distributed.sharding import (
     axis_spec, leading_axis_spec, replicated_spec, shard_map,
@@ -90,6 +91,111 @@ def _fused_body(sig: Tuple):
     return _run
 
 
+def _sddmm_body(sig: Tuple):
+    """Fused SDDMM body for an op-tagged plan signature (untraced).
+
+    Inverts the SpMM dataflow on the same plan structure: the matrix engine
+    computes dense ``X_window @ Y_kblock`` products for exactly the tiles
+    the plan's stream names and per-nonzero values are *extracted* at the
+    plan's ``core_lin`` slots; fringe nonzeros gather one X row and one Y
+    column each on the vector engine.  Output is (nnz,) fp32 in the plan's
+    original COO input order — feed it straight to
+    ``dynamic.update_values(plan, arange(nnz), out)``.
+    """
+    (_version, shape, bm, bk, _bn, impl, reorder_cols, fringe_chunk,
+     _num_windows, _num_steps, _nnz_f, _n_fringe_rows, has_core, has_fringe,
+     _fringe_tier, _fringe_bk, _n_chunks, _nnz_kb) = untag_sig(sig)
+    _m, k = shape
+    # nnz / nnz_f key the cache (shapes come from the arrays at trace time);
+    # the budget must live in the sig so equal-structure plans with
+    # different budgets never alias one executor
+    _nnz, _nnz_fs, vmem_budget = op_extra(sig)
+
+    def _run(step_window, step_col, core_row_map, col_perm,
+             g_rows, g_cols, core_lin, f_idx, f_rows, f_cols, x, y):
+        record_fused_trace(sig)
+        if impl != "xla":  # pallas tiers lower here, at trace time
+            HARNESS.fire("pallas_lowering", context=sig)
+        yt = jnp.swapaxes(y, 0, 1)  # (K, D): both gathers address rows
+        if impl == "xla" or not (has_core or has_fringe):
+            # reference gather over every nonzero — also the complete
+            # degrade target xla_fallback_sig demotes pallas failures to
+            return ops.sddmm_gather(
+                g_rows, g_cols, x, yt, impl="xla", chunk=fringe_chunk,
+            )
+        core_vals = None
+        if has_core:
+            # matrix path: window-gathered X rows x column-permuted Y panel
+            xp = jnp.where(
+                (core_row_map >= 0)[:, None],
+                x[jnp.clip(core_row_map, 0, x.shape[0] - 1)], 0.0,
+            )
+            yp = y[:, col_perm] if reorder_cols else y
+            k_pad = ((k + bk - 1) // bk) * bk
+            if k_pad != k:
+                yp = jnp.pad(yp, ((0, 0), (0, k_pad - k)))
+            tiles = ops.sddmm_block_stream(
+                step_window, step_col, xp, yp, bm=bm, bk=bk, impl=impl,
+            )
+            core_vals = tiles.reshape(-1)[jnp.clip(core_lin, 0)]
+        fringe_vals = None
+        if has_fringe:
+            fv = ops.sddmm_gather(
+                f_rows, f_cols, x, yt, impl=impl, chunk=fringe_chunk,
+                vmem_budget=vmem_budget,
+            )
+            fringe_vals = fv[jnp.clip(f_idx, 0)]
+        if core_vals is None:
+            return fringe_vals
+        if fringe_vals is None:
+            return core_vals
+        return jnp.where(core_lin >= 0, core_vals, fringe_vals)
+
+    return _run
+
+
+def _sddmm_flat_body(sig: Tuple):
+    """Gather-only SDDMM body for ("sddmm_flat", impl, nnz, chunk) sigs.
+
+    The sharded-plan form: a ``ShardedPlan`` keeps one *global* COO mirror
+    (``ShardedUpdateMaps``), and SDDMM output is a flat (nnz,) vector —
+    tiny next to the dense operands — so the op runs as one replicated
+    gather program over the global maps instead of a per-shard shard_map
+    (no health gating on this synthetic signature; the gather has no
+    lowering-failure modes the plan path doesn't already cover).
+    """
+    _tag, impl, _nnz, chunk = sig
+
+    def _run(g_rows, g_cols, x, y):
+        record_fused_trace(sig)
+        yt = jnp.swapaxes(y, 0, 1)
+        return ops.sddmm_gather(g_rows, g_cols, x, yt, impl=impl, chunk=chunk)
+
+    return _run
+
+
+def _spspmm_body(sig: Tuple):
+    """Numeric SpGEMM body for ("spspmm", n_exp, nnz_c) signatures.
+
+    The symbolic phase (exec.api.execute_spspmm) intersects the two plans'
+    row-window metadata host-side and emits three index streams: expansion
+    term t multiplies A's nonzero ``ae[t]`` by B's nonzero ``be[t]`` and
+    accumulates into output slot ``ce[t]`` (sorted, so the segment sum
+    takes the contiguous-run path).  This body is the single jitted
+    dispatch of the numeric phase.
+    """
+    _tag, _n_exp, nnz_c = sig
+
+    def _run(ae, be, ce, va, vb):
+        record_fused_trace(sig)
+        prod = va[ae].astype(jnp.float32) * vb[be].astype(jnp.float32)
+        return jax.ops.segment_sum(
+            prod, ce, num_segments=nnz_c, indices_are_sorted=True,
+        )
+
+    return _run
+
+
 def _delta_contrib_body(m: int, bk_cfg: int, bn: int, impl,
                         reorder_cols: bool, fringe_chunk, dsig: Tuple):
     """Delta-sidecar contribution body: (delta leaves, col_perm, b) -> (m, N).
@@ -116,10 +222,30 @@ def _delta_contrib_body(m: int, bk_cfg: int, bn: int, impl,
 
 
 def _flat_body(sig: Tuple, dsig: Optional[Tuple]):
-    """(plan leaves, [delta leaves], b) -> (m, N): the per-device program."""
+    """(leaves, [delta leaves], *operands) -> out: the per-device program.
+
+    Operator dispatch point of the pipeline: every op on the plan IR is a
+    fused-body stage selected here by signature — not a separate executor
+    family — so caching, batching, health demotion, and the trace counters
+    cover new ops identically.  Returns ``(body, n_leaf_args, n_operands)``
+    where the body takes ``n_leaf_args`` broadcast leaf args followed by
+    ``n_operands`` dense operands (the axes vmapped in the batched flavor).
+    """
+    op = sig[0] if isinstance(sig[0], str) else sig_op(sig)
+    if op not in ("spmm",) and dsig is not None:
+        raise PlanBuildError(
+            f"op {op!r} does not take a delta sidecar; fold structural "
+            "deltas (DynamicPlan compaction) before dispatching it"
+        )
+    if op == "sddmm_flat":
+        return _sddmm_flat_body(sig), 2, 2
+    if op == "spspmm":
+        return _spspmm_body(sig), 3, 2
+    if op == "sddmm":
+        return _sddmm_body(sig), N_SDDMM_BODY_LEAVES, 2
     run = _fused_body(sig)
     if dsig is None:
-        return run, N_PLAN_LEAVES
+        return run, N_PLAN_LEAVES, 1
     (_version, shape, _bm, bk, bn, impl, reorder_cols, fringe_chunk,
      *_rest) = sig
     contrib = _delta_contrib_body(
@@ -132,7 +258,7 @@ def _flat_body(sig: Tuple, dsig: Optional[Tuple]):
         b = args[-1]
         return run(*leaves, b) + contrib(*dleaves, leaves[LEAF_COL_PERM], b)
 
-    return body, N_PLAN_LEAVES + N_DELTA_LEAVES
+    return body, N_PLAN_LEAVES + N_DELTA_LEAVES, 1
 
 
 def _build(sig: Tuple, batch: Optional[int], dsig: Optional[Tuple],
@@ -140,14 +266,23 @@ def _build(sig: Tuple, batch: Optional[int], dsig: Optional[Tuple],
     # fault seam: fires once per executor *build* (cache hits skip _build
     # entirely, so a demoted-then-cached executor never re-fires)
     HARNESS.fire("executor_build", context=sig)
-    body, n_leaf_args = _flat_body(sig, dsig)
+    body, n_leaf_args, n_operands = _flat_body(sig, dsig)
 
     if mesh is None:
         if batch is None:
             return jax.jit(body)
-        # plan (and delta) leaves broadcast; only the (batch, K, N) RHS
-        # carries the mapped axis
-        return jax.jit(jax.vmap(body, in_axes=(None,) * n_leaf_args + (0,)))
+        # plan (and delta) leaves broadcast; only the dense operands carry
+        # the mapped axis (one RHS for SpMM, the X/Y pair for SDDMM)
+        return jax.jit(jax.vmap(
+            body, in_axes=(None,) * n_leaf_args + (0,) * n_operands
+        ))
+
+    if n_operands != 1:
+        raise PlanBuildError(
+            "shard_map flavors exist for the SpMM body only; sddmm on "
+            "sharded plans dispatches through its flat gather form and "
+            "spspmm is a host-symbolic + single-device numeric op"
+        )
 
     # --- sharded flavors ---------------------------------------------------
     b_rank = 2 if batch is None else 3

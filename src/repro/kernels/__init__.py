@@ -1,8 +1,10 @@
-"""TPU Pallas kernels for the NeutronSparse dual-path SpMM."""
+"""TPU Pallas kernels for the NeutronSparse dual-path SpMM + SDDMM."""
 from . import ops, ref
 from .dense_tile_spmm import dense_tile_spmm
 from .gather_spmm import gather_spmm, gather_spmm_ksharded
+from .sddmm import dense_tile_sddmm, gather_sddmm
 
 __all__ = [
     "ops", "ref", "dense_tile_spmm", "gather_spmm", "gather_spmm_ksharded",
+    "dense_tile_sddmm", "gather_sddmm",
 ]

@@ -163,15 +163,17 @@ def gather_spmm(
     # raw call past it would die as an opaque Mosaic allocation failure.
     # Soft-budget policy (default 12 MB, user-overridable) belongs to the
     # tier dispatch in ops.fringe_spmm / cost_model.select_fringe_tier,
-    # which may legitimately route near-ceiling claims here.
-    nr_est = max(8, ((num_rows + 7) // 8) * 8)
-    vmem_claim = (k + nr_est) * bn * 4
-    if not interpret and vmem_claim > 16 * 1024 * 1024:
-        raise ValueError(
-            f"gather_spmm resident working set {vmem_claim} B "
-            f"(K={k} + rows={nr_est} at bn={bn}, fp32) cannot fit VMEM; "
-            "go through ops.fringe_spmm (tier dispatch) or call "
-            "gather_spmm_ksharded directly"
+    # which may legitimately route near-ceiling claims here.  The byte
+    # estimate is the cost model's own (one formula for tier selection and
+    # this guard — they cannot drift); lazy import because core imports
+    # kernels at module-init time.
+    from ..core.cost_model import assert_vmem_claim, fringe_resident_bytes
+
+    if not interpret:
+        assert_vmem_claim(
+            fringe_resident_bytes(k, num_rows, bn),
+            f"gather_spmm resident working set (K={k}, rows={num_rows}, "
+            f"bn={bn}, fp32)",
         )
 
     # pad the nonzero stream to a chunk multiple; padding entries replicate

@@ -25,9 +25,11 @@ import jax.numpy as jnp
 from . import ref
 from .dense_tile_spmm import dense_tile_spmm
 from .gather_spmm import gather_spmm, gather_spmm_ksharded
+from .sddmm import dense_tile_sddmm, gather_sddmm
 
 Impl = Literal["pallas", "pallas_interpret", "xla"]
 FringeTier = Literal["auto", "resident", "ksharded", "xla"]
+SddmmTier = Literal["auto", "resident", "xla"]
 
 
 def pow2_at_least(n: int) -> int:
@@ -191,6 +193,81 @@ def fringe_spmm(
             interpret=(impl == "pallas_interpret"),
         )
     return ref.ref_gather_spmm(rows, cols, vals, b, num_rows, chunk=chunk)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bk", "impl")
+)
+def sddmm_block_stream(
+    step_window: jax.Array,
+    step_col: jax.Array,
+    xp: jax.Array,
+    yp: jax.Array,
+    *,
+    bm: int,
+    bk: int,
+    impl: Impl = "xla",
+) -> jax.Array:
+    """SDDMM matrix-engine path; returns the fp32 tile stream (T, bm, bk).
+
+    ``xp`` is the window-gathered X row panel (num_windows*bm, D) and
+    ``yp`` the column-permuted, K-padded Y operand (D, K).  Per-nonzero
+    values are extracted from the returned stream at the plan's
+    ``UpdateMaps.core_lin`` slots — the same linear addressing prepare()
+    scattered input values under, so extraction needs no new metadata.
+    """
+    if impl == "xla":
+        return ref.ref_tile_sddmm(step_window, step_col, xp, yp, bm, bk)
+    return dense_tile_sddmm(
+        step_window, step_col, xp, yp, bm=bm, bk=bk,
+        interpret=(impl == "pallas_interpret"),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("impl", "chunk", "tier", "vmem_budget")
+)
+def sddmm_gather(
+    rows: jax.Array,
+    cols: jax.Array,
+    x: jax.Array,
+    yt: jax.Array,
+    *,
+    impl: Impl = "xla",
+    chunk: int | None = None,
+    tier: SddmmTier = "auto",
+    vmem_budget: int | None = None,
+) -> jax.Array:
+    """SDDMM vector-engine path: fp32 dots (nnz,) in input order.
+
+    ``yt`` is Y pre-transposed to (K, D) so both operands gather by row.
+    Pallas impls keep BOTH dense panels VMEM-resident, so the dispatch is
+    binary (core/cost_model.select_sddmm_tier): "resident" pallas gather,
+    or the XLA reference when the panels overflow the budget — there is no
+    useful K-sharded middle tier because the reduced axis is D and slicing
+    it would re-stream both panels every step.
+    """
+    if x.shape[-1] != yt.shape[-1]:
+        raise ValueError(
+            f"sddmm operands disagree on D: x {tuple(x.shape)} vs "
+            f"y^T {tuple(yt.shape)}"
+        )
+    if chunk is not None and chunk < 1:
+        raise ValueError(f"chunk must be a positive nonzero count, got {chunk}")
+    if impl == "xla":
+        return ref.ref_gather_sddmm(rows, cols, x, yt, chunk=chunk)
+    if tier == "auto":
+        from ..core.cost_model import select_sddmm_tier
+
+        tier = select_sddmm_tier(
+            x.shape[-1], x.shape[0], yt.shape[0], vmem_budget=vmem_budget
+        )
+    if tier == "resident":
+        return gather_sddmm(
+            rows, cols, x, yt, chunk=effective_chunk(chunk),
+            interpret=(impl == "pallas_interpret"),
+        )
+    return ref.ref_gather_sddmm(rows, cols, x, yt, chunk=chunk)
 
 
 def delta_fringe_spmm(

@@ -157,6 +157,64 @@ def ref_gather_spmm(
     return out
 
 
+def ref_tile_sddmm(
+    step_window: jax.Array,  # (T,) int32
+    step_col: jax.Array,     # (T,) int32
+    xp: jax.Array,           # (num_windows*bm, D) window-gathered X rows
+    yp: jax.Array,           # (D, K) — K a multiple of bk
+    bm: int,
+    bk: int,
+) -> jax.Array:
+    """Oracle for the SDDMM matrix path: for each active tile t,
+    tiles[t] = Xp[step_window[t]*bm : +bm] @ Yp[:, step_col[t]*bk : +bk].
+    Returns the fp32 tile stream (T, bm, bk)."""
+    d = xp.shape[1]
+    xw = xp.reshape(-1, bm, d)[step_window]                  # (T, bm, D)
+    yb = yp.reshape(d, -1, bk).transpose(1, 0, 2)[step_col]  # (T, D, bk)
+    return jnp.einsum(
+        "tmd,tdk->tmk", xw.astype(jnp.float32), yb.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def ref_gather_sddmm(
+    rows: jax.Array,  # (nnz,) int32 row ids into x
+    cols: jax.Array,  # (nnz,) int32 row ids into yt
+    x: jax.Array,     # (M, D)
+    yt: jax.Array,    # (K, D) — Y pre-transposed
+    chunk: int | None = None,
+) -> jax.Array:
+    """Oracle for the SDDMM vector path: out[i] = x[rows[i]] . yt[cols[i]].
+
+    ``chunk`` bounds the materialized gather to (chunk, D) per step via a
+    scanned dot — the XLA analogue of the Pallas kernel's grid step —
+    instead of the (nnz, D) one-shot intermediate.
+    """
+    nnz = rows.shape[0]
+    if chunk is None or nnz <= chunk:
+        return jnp.sum(
+            x[rows].astype(jnp.float32) * yt[cols].astype(jnp.float32),
+            axis=-1,
+        )
+
+    nnz_pad = ((nnz + chunk - 1) // chunk) * chunk
+    if nnz_pad != nnz:
+        pad = nnz_pad - nnz
+        rows = jnp.concatenate([rows, jnp.zeros(pad, rows.dtype)])
+        cols = jnp.concatenate([cols, jnp.zeros(pad, cols.dtype)])
+    n_chunks = nnz_pad // chunk
+    xs = (rows.reshape(n_chunks, chunk), cols.reshape(n_chunks, chunk))
+
+    def body(_, idx):
+        r, c = idx
+        return None, jnp.sum(
+            x[r].astype(jnp.float32) * yt[c].astype(jnp.float32), axis=-1
+        )
+
+    _, out = jax.lax.scan(body, None, xs)
+    return out.reshape(-1)[:nnz]
+
+
 def ref_gather_spmm_kblocked(
     chunk_kb: jax.Array,  # (num_chunks,) int32, chunk -> k-block id
     rows: jax.Array,  # (num_chunks*chunk,) int32, k-bucketed packed row ids

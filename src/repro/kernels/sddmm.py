@@ -1,0 +1,207 @@
+"""SDDMM kernels: sampled dense-dense matmul over a plan's sparsity pattern.
+
+SDDMM inverts the SpMM dataflow on the same two engines:
+
+``dense_tile_sddmm`` (matrix engine) — for each active (window, k-block)
+tile the plan's stream names, compute the dense product of the gathered X
+row panel and the Y column panel:
+
+  grid = (T,)                    T = active tiles (zero padding waste)
+  X panel  : Xp[w[t]*bm : , :]       (bm, D)    VMEM (consecutive steps of
+                                     one window elide the HBM->VMEM copy —
+                                     the same window-major reuse the SpMM
+                                     tile kernel exploits)
+  Y panel  : Yp[:, c[t]*bk : ]       (D, bk)    VMEM, streamed per step
+  out tile : tiles[t]                (bm, bk)   fp32
+
+The caller extracts per-nonzero values from the flat (T, bm, bk) stream at
+the plan's ``UpdateMaps.core_lin`` slots — the exact linear slots
+``prepare()`` scattered values into, so the result is layout-compatible
+with ``dynamic.update_values``.
+
+``gather_sddmm`` (vector engine) — fringe nonzeros bypass the tile path;
+each computes one dot product by gathering a row of X and a row of Y^T:
+
+  grid = (ceil(nnz / chunk),)    chunk nonzeros per grid step
+  X        : (M_pad, D)              resident across the whole grid
+  Y^T      : (K_pad, D)              resident across the whole grid
+  out      : (n_chunks, LANES)       one fp32 dot per lane slot
+
+Both operand panels stay VMEM-resident (each nonzero addresses arbitrary
+rows of each), so the dispatch tier is binary — resident pallas gather or
+the XLA reference — selected by ``core.cost_model.select_sddmm_tier``.
+Callers go through ``ops.sddmm_block_stream`` / ``ops.sddmm_gather``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ._compat import tpu_compiler_params
+
+LANES = 128  # VPU lane width: gather_sddmm's per-chunk output row
+
+
+def _pad_axis(a: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = a.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def _tile_kernel(
+    step_window_ref,  # scalar prefetch: (T,) int32
+    step_col_ref,     # scalar prefetch: (T,) int32
+    x_ref,            # (bm, D) gathered X rows of this step's window
+    y_ref,            # (D, bk) Y columns of this step's k-block
+    o_ref,            # (1, bm, bk) fp32 out tile
+):
+    o_ref[0] = jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bk", "interpret")
+)
+def dense_tile_sddmm(
+    step_window: jax.Array,  # (T,) int32, window-major sorted
+    step_col: jax.Array,     # (T,) int32
+    xp: jax.Array,           # (num_windows*bm, D) window-gathered X rows
+    yp: jax.Array,           # (D, K) — K a multiple of bk
+    *,
+    bm: int,
+    bk: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns the fp32 dense-product tile stream (T, bm, bk)."""
+    t_steps = step_window.shape[0]
+    assert xp.shape[0] % bm == 0, (xp.shape, bm)
+    assert yp.shape[1] % bk == 0, (yp.shape, bk)
+    assert xp.shape[1] == yp.shape[0], (xp.shape, yp.shape)
+    xp = _pad_axis(xp, 1, LANES)
+    yp = _pad_axis(yp, 0, LANES)
+    d = xp.shape[1]
+
+    # physical-ceiling backstop (double-buffered streamed panels + out tile)
+    from ..core.cost_model import assert_vmem_claim
+
+    if not interpret:
+        assert_vmem_claim(
+            (2 * bm * d + 2 * d * bk + bm * bk) * 4,
+            f"dense_tile_sddmm tile working set (bm={bm}, bk={bk}, D={d})",
+        )
+
+    grid = (t_steps,)
+    out = pl.pallas_call(
+        _tile_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, d), lambda t, w, c: (w[t], 0)),
+                pl.BlockSpec((d, bk), lambda t, w, c: (0, c[t])),
+            ],
+            out_specs=pl.BlockSpec((1, bm, bk), lambda t, w, c: (t, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct(
+            (t_steps, bm, bk), jnp.float32
+        ),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(step_window, step_col, xp, yp)
+    return out
+
+
+def _make_gather_kernel(chunk: int):
+    def _kernel(
+        rows_ref,  # scalar prefetch (n_chunks*chunk,) int32 X row ids
+        cols_ref,  # scalar prefetch (n_chunks*chunk,) int32 Y^T row ids
+        x_ref,     # (M_pad, D) resident X panel
+        yt_ref,    # (K_pad, D) resident Y^T panel
+        o_ref,     # (1, LANES) fp32: one dot per lane slot [0, chunk)
+    ):
+        i = pl.program_id(0)
+        base = i * chunk
+        lane = jax.lax.broadcasted_iota(jnp.int32, (1, LANES), 1)
+        acc = jnp.zeros((1, LANES), jnp.float32)
+        for g in range(chunk):
+            xr = pl.load(x_ref, (pl.ds(rows_ref[base + g], 1), slice(None)))
+            yr = pl.load(yt_ref, (pl.ds(cols_ref[base + g], 1), slice(None)))
+            dot = jnp.sum(xr.astype(jnp.float32) * yr.astype(jnp.float32))
+            acc = jnp.where(lane == g, dot, acc)
+        o_ref[...] = acc
+
+    return _kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "interpret")
+)
+def gather_sddmm(
+    rows: jax.Array,  # (nnz,) int32 row ids into x
+    cols: jax.Array,  # (nnz,) int32 row ids into yt
+    x: jax.Array,     # (M, D) dense source operand
+    yt: jax.Array,    # (K, D) dense destination operand, pre-transposed
+    *,
+    chunk: int = 32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Resident-panel SDDMM gather: fp32 dots (nnz,) in input order.
+
+    Claims both full operand panels in VMEM; callers go through
+    ``ops.sddmm_gather``, which demotes oversized shapes to the XLA
+    reference via ``cost_model.select_sddmm_tier``.
+    """
+    nnz = rows.shape[0]
+    assert x.shape[1] == yt.shape[1], (x.shape, yt.shape)
+    assert 1 <= chunk <= LANES, chunk
+    x = _pad_axis(_pad_axis(x, 1, LANES), 0, 8)
+    yt = _pad_axis(_pad_axis(yt, 1, LANES), 0, 8)
+    d = x.shape[1]
+
+    from ..core.cost_model import assert_vmem_claim, sddmm_resident_bytes
+
+    if not interpret:
+        assert_vmem_claim(
+            sddmm_resident_bytes(d, x.shape[0], yt.shape[0], chunk),
+            f"gather_sddmm resident working set (M={x.shape[0]}, "
+            f"K={yt.shape[0]}, D={d})",
+        )
+
+    # pad the nonzero stream to a chunk multiple; padding entries address
+    # row 0 of each panel and are sliced off below
+    nnz_pad = ((nnz + chunk - 1) // chunk) * chunk
+    if nnz_pad != nnz:
+        pad = nnz_pad - nnz
+        rows = jnp.concatenate([rows, jnp.zeros(pad, rows.dtype)])
+        cols = jnp.concatenate([cols, jnp.zeros(pad, cols.dtype)])
+    n_chunks = nnz_pad // chunk
+
+    out = pl.pallas_call(
+        _make_gather_kernel(chunk),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(n_chunks,),
+            in_specs=[
+                pl.BlockSpec((x.shape[0], d), lambda i, r, c: (0, 0)),
+                pl.BlockSpec((yt.shape[0], d), lambda i, r, c: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, LANES), lambda i, r, c: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_chunks, LANES), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(rows, cols, x, yt)
+    return out[:, :chunk].reshape(-1)[:nnz]

@@ -266,3 +266,86 @@ def apply_mlp(params: Params, x: jax.Array, kind: str) -> jax.Array:
     else:
         raise ValueError(f"unknown mlp kind {kind}")
     return jnp.einsum("bsf,fd->bsd", h, params["w_out"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Sparse graph layers (repro.sparse operator family)
+# ---------------------------------------------------------------------------
+# Unlike the functional blocks above, these carry a prepared SparseMatrix
+# (host-side plan state that cannot live in a params pytree), so they are
+# small classes: construct once per graph, call per forward pass.
+
+
+class SparseGraphConv:
+    """GCN aggregation layer: ``act(A @ (X W))`` with A a SparseMatrix.
+
+    The aggregation is one fused coordinated-SpMM dispatch
+    (``repro.sparse.spmm``); the layer is linear in X, so it composes
+    with ``jax.grad`` — only the graph itself is static.
+    """
+
+    def __init__(self, a, w: jax.Array):
+        from .. import sparse as _sp  # top-layer import, kept call-local
+
+        self._sp = _sp
+        self.a = a if isinstance(a, _sp.SparseMatrix) else _sp.from_plan(a)
+        self.w = w
+
+    @classmethod
+    def init(cls, rng: jax.Array, a, d_in: int, d_out: int,
+             dtype=jnp.float32) -> "SparseGraphConv":
+        w = jax.random.normal(rng, (d_in, d_out), dtype) / np.sqrt(d_in)
+        return cls(a, w)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return self._sp.spmm(self.a, x @ self.w.astype(x.dtype))
+
+
+class SparseGraphAttention:
+    """Single-head dot-product graph attention (GAT-style).
+
+    Scores are an SDDMM over the graph pattern — ``(Q K^T)/sqrt(d)``
+    evaluated only at edges — followed by a per-destination-row edge
+    softmax and one SpMM aggregation with the attention weights swapped
+    in via ``SparseMatrix.with_values`` (retrace-free, same executor).
+    The attention-weight swap scatters through host update maps, so this
+    layer is inference/forward oriented; training would hold the scores
+    in a delta-free dynamic plan the same way.
+    """
+
+    def __init__(self, a, wq: jax.Array, wk: jax.Array, wv: jax.Array):
+        from .. import sparse as _sp
+
+        self._sp = _sp
+        self.a = a if isinstance(a, _sp.SparseMatrix) else _sp.from_plan(a)
+        self.wq, self.wk, self.wv = wq, wk, wv
+        # edge endpoints are static per graph; softmax segments by dst row
+        self._rows = np.asarray(self.a.row)
+
+    @classmethod
+    def init(cls, rng: jax.Array, a, d_in: int, d_head: int,
+             dtype=jnp.float32) -> "SparseGraphAttention":
+        k1, k2, k3 = jax.random.split(rng, 3)
+        s = 1.0 / np.sqrt(d_in)
+        return cls(a,
+                   jax.random.normal(k1, (d_in, d_head), dtype) * s,
+                   jax.random.normal(k2, (d_in, d_head), dtype) * s,
+                   jax.random.normal(k3, (d_in, d_head), dtype) * s)
+
+    def edge_scores(self, x: jax.Array) -> jax.Array:
+        """Softmaxed attention weight per edge, original COO order."""
+        q = x @ self.wq.astype(x.dtype)
+        k = x @ self.wk.astype(x.dtype)
+        e = self._sp.sddmm(self.a, q, jnp.swapaxes(k, 0, 1))
+        e = e / np.sqrt(self.wq.shape[1])
+        rows = jnp.asarray(self._rows)
+        m = self.a.shape[0]
+        e_max = jax.ops.segment_max(e, rows, num_segments=m)
+        p = jnp.exp(e - e_max[rows])
+        denom = jax.ops.segment_sum(p, rows, num_segments=m)
+        return p / jnp.maximum(denom[rows], 1e-30)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        alpha = self.edge_scores(x)
+        a_att = self.a.with_values(np.asarray(alpha))
+        return self._sp.spmm(a_att, x @ self.wv.astype(x.dtype))

@@ -14,6 +14,8 @@ above itself:
         -> exec             (executor pipeline + health table)
         -> dynamic          (incremental plan maintenance)
         -> serve            (request batching / async compaction)
+        -> sparse           (the user-facing operator facade; imports
+                             anything, imported by nothing below)
 
 ``repro.errors`` (a top-level module) and ``repro.robust`` sit at the very
 bottom: any layer may import them, they import nothing above (``robust``
@@ -51,12 +53,13 @@ FORBIDDEN = {
     "robust": ("repro",),
     "kernels": ("repro.core", "repro.exec", "repro.dynamic", "repro.serve",
                 "repro.distributed", "repro.launch", "repro.models",
-                "repro.train"),
+                "repro.train", "repro.sparse"),
     "distributed": ("repro.core", "repro.exec", "repro.dynamic",
-                    "repro.serve"),
-    "core": ("repro.exec", "repro.dynamic", "repro.serve"),
-    "exec": ("repro.dynamic", "repro.serve"),
-    "dynamic": ("repro.serve",),
+                    "repro.serve", "repro.sparse"),
+    "core": ("repro.exec", "repro.dynamic", "repro.serve", "repro.sparse"),
+    "exec": ("repro.dynamic", "repro.serve", "repro.sparse"),
+    "dynamic": ("repro.serve", "repro.sparse"),
+    "serve": ("repro.sparse",),
 }
 
 # (module path relative to src, imported target) pairs that are allowed
