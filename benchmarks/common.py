@@ -9,12 +9,12 @@ artifacts (benchmarks/bench_roofline.py).
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Dict, List, Tuple
 
 import jax
 import numpy as np
 
+from repro.core.tuner import timed_best_of
 from repro.data import graphs
 
 # scaled-down dataset panel (paper Table 2 character, CPU-friendly sizes)
@@ -34,15 +34,13 @@ def load_dataset(name: str, max_dim: int = 4096):
 
 def time_fn(fn: Callable[[], jax.Array], repeats: int = 3,
             warmup: int = 1) -> float:
-    """Best-of wall time in microseconds (compile excluded)."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn())
-    best = float("inf")
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        best = min(best, time.perf_counter() - t0)
-    return best * 1e6
+    """Best-of wall time in microseconds (compile excluded).
+
+    The synchronized best-of-N loop itself lives in ``repro.core.tuner``
+    (it is also what the autotuner measures with); this is the
+    microsecond-unit CSV-facing wrapper.
+    """
+    return timed_best_of(fn, repeats=repeats, warmup=warmup) * 1e6
 
 
 def geomean(values) -> float:

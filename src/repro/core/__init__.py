@@ -6,7 +6,7 @@ importing the core package never pulls the executor (or any upper) layer.
 """
 from . import (
     coordinator, cost_model, formats, partition, plan_ir, reorder, reuse,
-    spmm,
+    spmm, tuner,
 )
 from .cost_model import EngineCostModel, default_cost_model
 from .plan_ir import NeutronPlan, ShardedPlan, SpmmConfig
@@ -25,7 +25,8 @@ def __getattr__(name: str):
 
 __all__ = [
     "coordinator", "cost_model", "formats", "partition", "plan_ir",
-    "reorder", "reuse", "spmm", "EngineCostModel", "default_cost_model",
+    "reorder", "reuse", "spmm", "tuner", "EngineCostModel",
+    "default_cost_model",
     "NeutronPlan", "NeutronSpMM", "ShardedPlan", "SpmmConfig", "execute",
     "execute_sharded", "neutron_spmm", "prepare", "prepare_sharded",
 ]

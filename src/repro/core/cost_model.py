@@ -33,7 +33,6 @@ Two calibration modes:
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Optional
 
 import numpy as np
@@ -106,17 +105,15 @@ class EngineCostModel:
         ``*_bench`` are zero-arg callables that run one synchronized pass of
         the respective path over a workload of the given size.
         """
-        def _time(fn: Callable[[], None]) -> float:
-            fn()  # warmup / compile
-            best = float("inf")
-            for _ in range(repeats):
-                t0 = time.perf_counter()
-                fn()
-                best = min(best, time.perf_counter() - t0)
-            return max(best, 1e-9)
+        # a jitted bench returns when its work is *enqueued* (JAX async
+        # dispatch), so timing it without synchronization measures the
+        # enqueue and calibrates near-infinite rates; route through the one
+        # shared synchronized timer (function-local import: tuner imports
+        # this module at top level)
+        from .tuner import timed_best_of
 
-        tm = _time(matrix_bench)
-        tv = _time(vector_bench)
+        tm = timed_best_of(matrix_bench, repeats=repeats, warmup=1)
+        tv = timed_best_of(vector_bench, repeats=repeats, warmup=1)
         return cls(
             p_matrix=matrix_work_elems / tm,
             p_vector=vector_work_nnz / tv,
@@ -147,6 +144,38 @@ class EngineCostModel:
         tv = self.cost_vector(max(nnz_vec, 1.0))
         tm = self.cost_matrix(max(m_mat, 1.0), k)
         return max(tv, tm) / max(min(tv, tm), 1e-12)
+
+    # --- dispatch-decision hooks -----------------------------------------
+    # prepare()/the executor consult every dispatch decision through the
+    # model instance, so the measurement-backed subclass
+    # (core.tuner.TunedCostModel) can override any of them; the analytic
+    # base delegates to the module-level policies below.
+
+    def select_fringe_tier(
+        self, k: int, num_rows: int, bn: int,
+        vmem_budget: Optional[int] = None,
+    ) -> tuple:
+        return select_fringe_tier(k, num_rows, bn, vmem_budget=vmem_budget)
+
+    def select_sddmm_tier(
+        self, d: int, n_src_rows: int, n_dst_rows: int,
+        vmem_budget: Optional[int] = None,
+    ) -> str:
+        return select_sddmm_tier(
+            d, n_src_rows, n_dst_rows, vmem_budget=vmem_budget
+        )
+
+    def imbalance_threshold(self) -> float:
+        """Max tolerated LPT row imbalance before rhs-sharding wins."""
+        return ROWS_IMBALANCE_THRESHOLD
+
+    def compaction_thresholds(self) -> tuple:
+        """``(max_delta_fraction, max_slowdown)`` for should_compact."""
+        return DELTA_MAX_FRACTION, DELTA_MAX_SLOWDOWN
+
+    def densify_occupancy(self) -> Optional[float]:
+        """Occupancy above which the core densifies (None: kernel default)."""
+        return None
 
 
 def default_cost_model(n_cols: int = 256) -> EngineCostModel:
@@ -249,6 +278,12 @@ def select_shard_axis(
 # matrix/vector split price this trigger.
 DELTA_MAX_FRACTION = 0.25   # delta nnz / base nnz before a forced fold
 DELTA_MAX_SLOWDOWN = 1.25   # predicted (base+delta)/base exec cost ratio
+# denominator floor for the fraction trigger: a plan built (near-)empty and
+# grown via GraphDelta inserts would otherwise fold on its very first
+# batches (fraction ~ delta/1), churning exactly where the sidecar is
+# cheapest.  Deltas below FLOOR * DELTA_MAX_FRACTION nonzeros never force a
+# fold on fraction grounds.
+DELTA_BASE_NNZ_FLOOR = 256
 
 
 @dataclasses.dataclass(frozen=True)
@@ -275,15 +310,32 @@ def should_compact(
     ``core_rows`` is the matrix-path packed row count (num_windows * bm) and
     ``fringe_nnz`` the base plan's vector-path nonzeros; together they give
     the cost-model estimate of the base execution the sidecar rides on.
+
+    Empty-base policy: a plan with no core rows and no fringe nonzeros has
+    ``base_cost == 0``, so the slowdown ratio is undefined — the sidecar IS
+    the execution, and "1.25x slower than nothing" can never be a sane
+    trigger.  Such plans fold only on the nnz-fraction trigger, whose
+    denominator is floored at ``DELTA_BASE_NNZ_FLOOR`` so the first small
+    insert batches ride the sidecar instead of forcing a fold per update.
     """
-    fraction = delta_nnz / max(base_nnz, 1)
+    fraction = delta_nnz / max(base_nnz, DELTA_BASE_NNZ_FLOOR)
     base_cost = cm.cost_matrix(core_rows, k) + cm.cost_vector(fringe_nnz)
-    slowdown = (
-        (base_cost + cm.cost_vector(delta_nnz)) / base_cost
-        if base_cost > 0 else float("inf")
-    )
     if delta_nnz == 0:
         return CompactionDecision(False, 0.0, 1.0, "empty delta")
+    if base_cost <= 0.0:
+        if fraction > max_delta_fraction:
+            return CompactionDecision(
+                True, fraction, 1.0,
+                f"empty base: delta nnz fraction {fraction:.3f} > "
+                f"{max_delta_fraction:.2f} (floored base "
+                f"{max(base_nnz, DELTA_BASE_NNZ_FLOOR)})",
+            )
+        return CompactionDecision(
+            False, fraction, 1.0,
+            f"empty base: delta within floored fraction budget "
+            f"({fraction:.3f})",
+        )
+    slowdown = (base_cost + cm.cost_vector(delta_nnz)) / base_cost
     if fraction > max_delta_fraction:
         return CompactionDecision(
             True, fraction, slowdown,
@@ -301,6 +353,32 @@ def should_compact(
     )
 
 
+def ksharded_bk_cap(k: int, num_rows: int, bn: int, budget: int) -> int:
+    """Largest legal ``bk`` for the K-sharded fringe tier, or 0 if none.
+
+    Two clamps, both required for the tier to be worth selecting:
+
+    - the VMEM budget: the double-buffered (bk, bn) slice pair plus the
+      packed output block must fit ``budget`` bytes;
+    - strict byte-superiority over the resident tier: streaming only makes
+      sense while the double-buffered working set is *smaller* than keeping
+      the whole K panel resident, i.e. ``2*bk < k``.  With the historical
+      ``_pad_rows(k)`` clamp this invariant was emergent from the budget
+      arithmetic (resident rejected => k > budget_rows => 2*bk < k); making
+      it structural means no caller — including the tuner's bk sweep, which
+      uses this helper for its candidate grid — can select a "cheaper"
+      streaming tier with a larger VMEM claim than the resident tier it
+      rejected.
+
+    The result is a sublane multiple; candidates below ``FRINGE_MIN_BK``
+    are illegal and collapse to 0 (caller falls back to the XLA tier).
+    """
+    bk_budget = (int(budget) // (bn * 4) - _pad_rows(num_rows)) // 2
+    bk_superior = (int(k) - 1) // 2  # strictly cheaper in bytes: 2*bk < k
+    bk = (min(bk_budget, bk_superior) // SUBLANES) * SUBLANES
+    return int(bk) if bk >= FRINGE_MIN_BK else 0
+
+
 def select_fringe_tier(
     k: int, num_rows: int, bn: int, vmem_budget: Optional[int] = None
 ) -> tuple:
@@ -311,17 +389,17 @@ def select_fringe_tier(
         stays in VMEM (fastest: B loaded once per n-block).
       - ``("ksharded", bk)`` — K-sharded streaming kernel; only a (bk, bn)
         B slice is resident per step, with bk the largest sublane multiple
-        that fits the budget (least redundant streaming).
+        that fits the budget AND is strictly cheaper in bytes than the
+        resident tier it replaces (see ksharded_bk_cap).
       - ``("xla", 0)``       — even one minimal (8, bn) slice plus the
         packed output block overflows; fall back to the XLA gather.
     """
     budget = FRINGE_VMEM_BUDGET if vmem_budget is None else int(vmem_budget)
     if fringe_resident_bytes(k, num_rows, bn) <= budget:
         return "resident", 0
-    bk_max = (budget // (bn * 4) - _pad_rows(num_rows)) // 2
-    bk = min((bk_max // SUBLANES) * SUBLANES, _pad_rows(k))
-    if bk >= FRINGE_MIN_BK:
-        return "ksharded", int(bk)
+    bk = ksharded_bk_cap(k, num_rows, bn, budget)
+    if bk:
+        return "ksharded", bk
     return "xla", 0
 
 

@@ -26,7 +26,7 @@ knowledge of meshes beyond leaf stacking and never imports upward
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -153,6 +153,16 @@ class SpmmConfig:
     # the XLA reference tier (bounded retry first — see repro.exec.health)
     # instead of raising; False surfaces a KernelLoweringError instead
     degrade_to_xla: bool = True
+    # measurement-backed dispatch (core.tuner):
+    #   False      — analytic cost model only (the default)
+    #   True       — serve decisions from the persisted tuning table;
+    #                microbenchmark inline on first sight of a shape class
+    #   "offline"  — table-or-analytic, never benchmarks inline (serving
+    #                processes; tables come from the offline collector or a
+    #                background tune adopted by SpmmService)
+    # NOT execution-only: tuned models can change plan *structure* (split,
+    # tiers), so autotune stays part of the registry fingerprint.
+    autotune: Union[bool, str] = False
 
 
 @dataclasses.dataclass

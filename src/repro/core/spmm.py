@@ -41,10 +41,8 @@ from . import formats, partition, plan_ir, reorder, reuse
 from .coordinator import (
     balance_row_window_list, list_imbalance, window_costs_from_coo,
 )
-from .cost_model import (
-    EngineCostModel, default_cost_model, select_fringe_tier,
-    select_shard_axis,
-)
+from .cost_model import EngineCostModel, select_shard_axis
+from .tuner import resolve_cost_model
 from .plan_ir import (  # noqa: F401  (public re-exports; layout owned by plan_ir)
     LEAF_FLAT_VALUES, LEAF_FRINGE_VALS, LEAF_KB_VALS, PATH_CORE, PATH_FRINGE,
     PLAN_FORMAT_VERSION, NeutronPlan, ShardedPlan, ShardedUpdateMaps,
@@ -112,7 +110,12 @@ def prepare(
     rows, cols, vals = plan_ir.validate_coo(rows, cols, vals, shape)
     global _PREPARE_CALL_COUNT
     _PREPARE_CALL_COUNT += 1
-    cm = cost_model or default_cost_model(n_cols=config.bn)
+    # analytic model unless config.autotune enables the measured table
+    # (core.tuner); every dispatch decision below consults cm so a tuned
+    # model can override any of them
+    cm = cost_model if cost_model is not None else resolve_cost_model(
+        "spmm", int(m), int(k), int(rows.shape[0]), config
+    )
     t0 = time.perf_counter()
 
     # 1) heterogeneous workload partitioning (§5.2)
@@ -240,7 +243,7 @@ def prepare(
     # stream built by plan_ir.bucket_fringe_kblocks; empty k-blocks get no
     # chunks (their B slices are never fetched).
     k_pad = ((k + config.bk - 1) // config.bk) * config.bk
-    fringe_tier, fringe_bk = select_fringe_tier(
+    fringe_tier, fringe_bk = cm.select_fringe_tier(
         k_pad, int(fringe_row_ids.shape[0]), config.bn,
         vmem_budget=config.fringe_vmem_budget,
     )
@@ -356,10 +359,14 @@ def prepare_sharded(
         )
     axis_name = axis_name or mesh.axis_names[0]
     n_shards = int(mesh.shape[axis_name])
-    cm = cost_model or default_cost_model(n_cols=config.bn)
+    cm = cost_model if cost_model is not None else resolve_cost_model(
+        "spmm", int(m), int(k), int(rows.shape[0]), config
+    )
 
     wc = window_costs_from_coo(rows, m, config.bm, k, cm, alpha=config.alpha)
-    decision = select_shard_axis(wc, n_shards)
+    decision = select_shard_axis(
+        wc, n_shards, imbalance_threshold=cm.imbalance_threshold()
+    )
     if shard_axis == "auto":
         shard_axis = decision.shard_axis
     if shard_axis not in ("rows", "rhs"):
@@ -453,7 +460,7 @@ def prepare_sharded(
     nfr_max = max(int(p.fringe_row_ids.shape[0]) for p in plans)
     has_core = any(p.has_core for p in plans)
     has_fringe = any(p.has_fringe for p in plans)
-    u_tier, u_bk = select_fringe_tier(
+    u_tier, u_bk = cm.select_fringe_tier(
         k_pad, nfr_max, cfg.bn, vmem_budget=cfg.fringe_vmem_budget
     )
     chunk_eff = ops.effective_chunk(cfg.fringe_chunk)

@@ -2,16 +2,18 @@
 graphs — retrace-free value updates, a structural delta sidecar with
 cost-model compaction, and a persistent plan registry for warm-started
 serving."""
-from . import delta, registry
+from . import delta, registry, tuning
 from .delta import (
     DeltaFringe, DynamicPlan, GraphDelta, ShardedDeltaFringe,
     build_delta_fringe, build_sharded_delta_fringe, update_values,
 )
 from .registry import PlanRegistry, RegistryError, coo_fingerprint
+from .tuning import RegistryTuningStore, install_registry_store
 
 __all__ = [
-    "delta", "registry",
+    "delta", "registry", "tuning",
     "DeltaFringe", "DynamicPlan", "GraphDelta", "ShardedDeltaFringe",
     "build_delta_fringe", "build_sharded_delta_fringe", "update_values",
     "PlanRegistry", "RegistryError", "coo_fingerprint",
+    "RegistryTuningStore", "install_registry_store",
 ]

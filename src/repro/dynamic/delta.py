@@ -45,11 +45,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import plan_ir, spmm
+from ..core import plan_ir, spmm, tuner
 from ..errors import PlanBuildError
 from ..core.cost_model import (
-    CompactionDecision, DELTA_MAX_FRACTION, DELTA_MAX_SLOWDOWN,
-    EngineCostModel, default_cost_model, should_compact,
+    CompactionDecision, EngineCostModel, should_compact,
 )
 from ..core.plan_ir import (  # noqa: F401  (re-exported; layout owned by plan_ir)
     DeltaFringe, ShardedDeltaFringe, build_delta_fringe,
@@ -327,8 +326,8 @@ class DynamicPlan:
         self,
         plan: PlanLike,
         cost_model: Optional[EngineCostModel] = None,
-        max_delta_fraction: float = DELTA_MAX_FRACTION,
-        max_slowdown: float = DELTA_MAX_SLOWDOWN,
+        max_delta_fraction: Optional[float] = None,
+        max_slowdown: Optional[float] = None,
         auto_compact: bool = True,
     ):
         if plan.update_maps is None:
@@ -342,11 +341,24 @@ class DynamicPlan:
                 "columns address the un-permuted operand"
             )
         self.plan = plan
-        self.cost_model = cost_model or default_cost_model(
-            n_cols=plan.config.bn
+        # analytic model unless config.autotune enables the measured table;
+        # the compaction thresholds resolve explicit-arg > cost model
+        # (tuned or analytic) so a tuned table retunes the fold policy too
+        self.cost_model = (
+            cost_model if cost_model is not None
+            else tuner.resolve_cost_model(
+                "spmm", int(plan.shape[0]), int(plan.shape[1]),
+                int(plan.update_maps.nnz), plan.config,
+            )
         )
-        self.max_delta_fraction = float(max_delta_fraction)
-        self.max_slowdown = float(max_slowdown)
+        cm_fraction, cm_slowdown = self.cost_model.compaction_thresholds()
+        self.max_delta_fraction = float(
+            max_delta_fraction if max_delta_fraction is not None
+            else cm_fraction
+        )
+        self.max_slowdown = float(
+            max_slowdown if max_slowdown is not None else cm_slowdown
+        )
         self.auto_compact = bool(auto_compact)
         # logical overlay: key -> target value (None = deleted base entry).
         # The sidecar stream is derived from this against base values.
@@ -367,6 +379,31 @@ class DynamicPlan:
     def _refresh_base_costs(self) -> None:
         self._base_fringe_nnz = self._fringe_nnz()
         self._base_core_rows = self._core_rows()
+
+    def refresh_cost_model(self) -> bool:
+        """Re-resolve the cost model from the tuner; True if it changed.
+
+        Serving adopts tuned tables *after* plans are built (tuning runs
+        off-thread); this lets the compaction policy pick up the measured
+        thresholds without rebuilding the plan.  Explicitly-passed
+        thresholds are not disturbed — only ones that came from the model.
+        """
+        was_fraction, was_slowdown = self.cost_model.compaction_thresholds()
+        cm = tuner.resolve_cost_model(
+            "spmm", int(self.plan.shape[0]), int(self.plan.shape[1]),
+            int(self.plan.update_maps.nnz), self.plan.config,
+        )
+        changed = (
+            type(cm) is not type(self.cost_model)
+            or cm.compaction_thresholds() != (was_fraction, was_slowdown)
+        )
+        self.cost_model = cm
+        new_fraction, new_slowdown = cm.compaction_thresholds()
+        if self.max_delta_fraction == float(was_fraction):
+            self.max_delta_fraction = float(new_fraction)
+        if self.max_slowdown == float(was_slowdown):
+            self.max_slowdown = float(new_slowdown)
+        return changed
 
     # -- introspection ------------------------------------------------------
     @property

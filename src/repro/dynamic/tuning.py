@@ -1,0 +1,117 @@
+"""Registry-backed persistence for the autotuner table (``core.tuner``).
+
+The tuner lives in ``core`` and must not import upward, so persistence is
+dependency-inverted: this module (dynamic layer, where ``PlanRegistry``
+lives) implements the store protocol — ``save(table)`` / ``load()`` — and
+hands an instance *down* through ``core.tuner.install_store``.
+
+Tables ride ``PlanRegistry``'s generational atomic layout as ``kind=
+"tuning"`` entries named by device fingerprint: the JSON-encoded table is
+one uint8 array leaf, written via the same tmp-dir + ``os.replace`` path as
+plans (crash mid-save leaves the previous generation loadable) and read via
+the same newest->oldest generation fallback.  Entries are versioned by both
+``PLAN_FORMAT_VERSION`` (checked by the registry's ``_read_step``) and the
+tuner's ``TABLE_FORMAT_VERSION`` (checked per record on load), so stale
+tables degrade to the analytic model rather than misread.
+
+A corrupt or missing table is never an error on the load path: ``load``
+returns ``None`` (missing) or raises ``RegistryError`` (corrupt), and the
+tuner maps both to analytic-model fallback with a surfaced counter.
+"""
+from __future__ import annotations
+
+import json
+import re
+from typing import Optional, Union
+
+import numpy as np
+
+from ..core import spmm
+from ..core import tuner as core_tuner
+from ..errors import RegistryError
+from .registry import REGISTRY_FORMAT_VERSION, PlanRegistry
+
+# tuning entries share the plan namespace; the prefix keeps them listable
+# and un-collidable with matrix names that pass _safe_name
+ENTRY_PREFIX = "tuning-"
+
+
+def _entry_name(device: Optional[str] = None) -> str:
+    device = device or core_tuner.device_fingerprint()
+    return ENTRY_PREFIX + re.sub(r"[^A-Za-z0-9._-]", "_", device)
+
+
+class RegistryTuningStore:
+    """``core.tuner`` store protocol over a :class:`PlanRegistry`."""
+
+    def __init__(self, registry: PlanRegistry):
+        self.registry = registry
+
+    def save(self, table: dict) -> None:
+        device = core_tuner.device_fingerprint()
+        payload = json.dumps({"device": device, "table": table},
+                             sort_keys=True).encode("utf-8")
+        tree = {
+            "tuning_json": np.frombuffer(payload, dtype=np.uint8).copy()
+        }
+        meta = {
+            "registry_format_version": REGISTRY_FORMAT_VERSION,
+            "plan_format_version": spmm.PLAN_FORMAT_VERSION,
+            "kind": "tuning",
+            "name": _entry_name(device),
+            "device_fingerprint": device,
+            "table_format_version": core_tuner.TABLE_FORMAT_VERSION,
+            "n_records": len(table),
+        }
+        self.registry._write_entry(_entry_name(device), tree, meta)
+
+    def load(self) -> Optional[dict]:
+        """The persisted table for this device, or None if never saved.
+
+        Raises :class:`RegistryError` when every retained generation is
+        corrupt — the tuner catches it, counts it, and serves the analytic
+        model (fallback, never a failure).
+        """
+        name = _entry_name()
+        if not self.registry.has(name):
+            return None
+        meta, arrays = self.registry._read_entry(name)
+        if meta.get("kind") != "tuning":
+            raise RegistryError(
+                f"registry entry {name!r} is kind={meta.get('kind')!r}, "
+                "expected 'tuning'"
+            )
+        device = core_tuner.device_fingerprint()
+        if meta.get("device_fingerprint") != device:
+            # a table measured on different hardware is not a fallback
+            # candidate; treat as absent
+            return None
+        try:
+            payload = json.loads(
+                arrays["tuning_json"].tobytes().decode("utf-8"))
+        except (KeyError, UnicodeDecodeError, json.JSONDecodeError) as e:
+            raise RegistryError(
+                f"corrupt tuning table payload in {name!r}: {e}"
+            ) from e
+        if payload.get("device") != device:
+            raise RegistryError(
+                f"tuning table {name!r} payload/meta device mismatch"
+            )
+        table = payload.get("table")
+        return table if isinstance(table, dict) else None
+
+
+def install_registry_store(
+    registry: Union[PlanRegistry, str]
+) -> RegistryTuningStore:
+    """Build a registry-backed tuning store and install it into the tuner.
+
+    Accepts an existing :class:`PlanRegistry` or a root path.  This is the
+    sanctioned caller of ``core.tuner.install_store`` (enforced by
+    ``tools/check_layers.py``): the seam points downward only.
+    """
+    if not isinstance(registry, PlanRegistry):
+        registry = PlanRegistry(str(registry))
+    store = RegistryTuningStore(registry)
+    core_tuner.install_store(store)
+    return store

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import plan_ir
+from ..core import plan_ir, tuner
 from ..core.plan_ir import (
     NeutronPlan, ShardedPlan, SpmmConfig, build_sddmm_maps, gather_rows,
     permute_pad_b, plan_leaves, sddmm_body_leaves, validate_rhs,
@@ -36,6 +36,34 @@ from .pipeline import build_delta_only_executor, build_executor
 def _apply_cache_capacity(config: SpmmConfig) -> None:
     if config.executor_cache_capacity is not None:
         _cache.EXECUTOR_CACHE.set_capacity(config.executor_cache_capacity)
+
+
+def _plan_nnz(plan) -> int:
+    stats = plan.stats_dict
+    if "nnz" in stats:
+        return int(stats["nnz"])
+    if "shard_nnz" in stats:
+        return int(sum(stats["shard_nnz"]))
+    um = getattr(plan, "update_maps", None)
+    return int(um.nnz) if um is not None else 0
+
+
+def _tuned_densify(plan) -> float | None:
+    """Measured densify-occupancy crossover for this plan, or None.
+
+    Resolved through ``core.tuner`` (a no-op unless ``config.autotune``).
+    The value rides the executor cache key rather than the plan signature:
+    tuned and analytic processes share plan layouts (and registry entries
+    keyed by signature) but never alias one lowered program.
+    """
+    config = plan.config
+    if not getattr(config, "autotune", False):
+        return None
+    cm = tuner.resolve_cost_model(
+        "spmm", int(plan.shape[0]), int(plan.shape[1]), _plan_nnz(plan),
+        config,
+    )
+    return cm.densify_occupancy()
 
 
 def _guarded_call(sig, config: SpmmConfig, make_fn, args, kind: str, key_of):
@@ -101,9 +129,10 @@ def execute(plan: NeutronPlan, b: jax.Array) -> jax.Array:
     validate_rhs(b, plan.shape)
     _apply_cache_capacity(plan.config)
     batch = int(b.shape[0]) if b.ndim == 3 else None
+    docc = _tuned_densify(plan)
     return _guarded_call(
         plan.signature(), plan.config,
-        lambda s: build_executor(s, batch=batch),
+        lambda s: build_executor(s, batch=batch, densify_occupancy=docc),
         (*plan_leaves(plan), b), "fused", lambda s: (s, batch),
     )
 
@@ -119,9 +148,11 @@ def execute_with_delta(plan: NeutronPlan, delta, b: jax.Array) -> jax.Array:
     validate_rhs(b, plan.shape)
     _apply_cache_capacity(plan.config)
     batch = int(b.shape[0]) if b.ndim == 3 else None
+    docc = _tuned_densify(plan)
     return _guarded_call(
         plan.signature(), plan.config,
-        lambda s: build_executor(s, batch=batch, delta_sig=delta.sig),
+        lambda s: build_executor(s, batch=batch, delta_sig=delta.sig,
+                                 densify_occupancy=docc),
         (*plan_leaves(plan), *delta.leaves, b),
         "fused+delta", lambda s: (s, batch),
     )
@@ -170,13 +201,14 @@ def execute_sharded(
         args = (*splan.leaves, *dleaves, splan.assemble, b)
     else:
         args = (*splan.leaves, *dleaves, b)
+    docc = _tuned_densify(splan)
     return _guarded_call(
         splan.sig, splan.config,
         lambda s: build_executor(
             s, batch=batch,
             delta_sig=None if delta is None else delta.sig,
             mesh=splan.mesh, axis_name=splan.axis_name,
-            shard_axis=splan.shard_axis,
+            shard_axis=splan.shard_axis, densify_occupancy=docc,
         ),
         args,
         "sharded" if delta is None else "sharded+delta",
@@ -251,9 +283,23 @@ def execute_sddmm(plan, x: jax.Array, y: jax.Array) -> jax.Array:
     if smaps.nnz == 0:
         shape = (0,) if batch is None else (batch, 0)
         return jnp.zeros(shape, jnp.float32)
+    vmem_budget = plan.config.fringe_vmem_budget
+    if getattr(plan.config, "autotune", False) and plan.config.impl != "xla":
+        cm = tuner.resolve_cost_model(
+            "sddmm", int(plan.shape[0]), int(plan.shape[1]), smaps.nnz,
+            plan.config,
+        )
+        tier = cm.select_sddmm_tier(
+            int(x.shape[-1]), int(plan.shape[0]), int(plan.shape[1]),
+            vmem_budget=vmem_budget,
+        )
+        if tier == "xla":
+            # measured demotion, encoded as a zero budget in the op tag so
+            # the fused body's tier="auto" resolves to the XLA gather; the
+            # table can demote past the analytic budget but never promote
+            vmem_budget = 0
     sig = plan_ir.tag_op(
-        plan.signature(), "sddmm", smaps.nnz, smaps.nnz_f,
-        plan.config.fringe_vmem_budget,
+        plan.signature(), "sddmm", smaps.nnz, smaps.nnz_f, vmem_budget,
     )
     return _guarded_call(
         sig, plan.config,

@@ -44,13 +44,18 @@ from ..robust.faults import HARNESS
 from .cache import EXECUTOR_CACHE, record_fused_trace, record_sharded_trace
 
 
-def _fused_body(sig: Tuple):
+def _fused_body(sig: Tuple, densify_occupancy: Optional[float] = None):
     """Raw fused executor body for a plan signature (untraced).
 
     Every flavor — the single-device jit, the batched vmap, the per-shard
     ``shard_map`` body — wraps this one function, so every dispatch flavor
     runs identical math.  The trace-hook append runs once per *trace*, so
     retraces anywhere in the pipeline are observable.
+    ``densify_occupancy`` overrides the matrix-path densify crossover (the
+    tuner's measured value arrives via build_executor; None keeps the
+    kernel default) — it is part of the executor cache key, not the plan
+    signature, because it changes the lowered program but not the plan
+    layout.
     """
     (_version, shape, bm, bk, bn, impl, reorder_cols, fringe_chunk,
      num_windows, _num_steps, _nnz_f, n_fringe_rows, has_core, has_fringe,
@@ -72,6 +77,7 @@ def _fused_body(sig: Tuple):
                 step_window, step_col, flat_values, bp,
                 num_windows=num_windows, bm=bm, bk=bk, bn=bn, impl=impl,
                 assume_unique=True,  # prepare() emits unique pairs
+                densify_occupancy=densify_occupancy,
             )[:, :n]
             c = gather_rows(packed_m, gsrc_m)
         if has_fringe:
@@ -221,7 +227,8 @@ def _delta_contrib_body(m: int, bk_cfg: int, bn: int, impl,
     return contrib
 
 
-def _flat_body(sig: Tuple, dsig: Optional[Tuple]):
+def _flat_body(sig: Tuple, dsig: Optional[Tuple],
+               densify_occupancy: Optional[float] = None):
     """(leaves, [delta leaves], *operands) -> out: the per-device program.
 
     Operator dispatch point of the pipeline: every op on the plan IR is a
@@ -243,7 +250,7 @@ def _flat_body(sig: Tuple, dsig: Optional[Tuple]):
         return _spspmm_body(sig), 3, 2
     if op == "sddmm":
         return _sddmm_body(sig), N_SDDMM_BODY_LEAVES, 2
-    run = _fused_body(sig)
+    run = _fused_body(sig, densify_occupancy)
     if dsig is None:
         return run, N_PLAN_LEAVES, 1
     (_version, shape, _bm, bk, bn, impl, reorder_cols, fringe_chunk,
@@ -262,11 +269,12 @@ def _flat_body(sig: Tuple, dsig: Optional[Tuple]):
 
 
 def _build(sig: Tuple, batch: Optional[int], dsig: Optional[Tuple],
-           mesh: Any, axis_name: Optional[str], shard_axis: Optional[str]):
+           mesh: Any, axis_name: Optional[str], shard_axis: Optional[str],
+           densify_occupancy: Optional[float] = None):
     # fault seam: fires once per executor *build* (cache hits skip _build
     # entirely, so a demoted-then-cached executor never re-fires)
     HARNESS.fire("executor_build", context=sig)
-    body, n_leaf_args, n_operands = _flat_body(sig, dsig)
+    body, n_leaf_args, n_operands = _flat_body(sig, dsig, densify_occupancy)
 
     if mesh is None:
         if batch is None:
@@ -349,6 +357,7 @@ def build_executor(
     mesh: Any = None,
     axis_name: Optional[str] = None,
     shard_axis: Optional[str] = None,
+    densify_occupancy: Optional[float] = None,
 ):
     """Build (or fetch) the executor for one plan structure + flavor.
 
@@ -368,11 +377,12 @@ def build_executor(
     if mesh is not None and shard_axis not in ("rows", "rhs"):
         raise PlanBuildError(
             f"shard_axis must be rows|rhs, got {shard_axis!r}")
-    key = (sig, batch, delta_sig, mesh, axis_name, shard_axis)
+    key = (sig, batch, delta_sig, mesh, axis_name, shard_axis,
+           densify_occupancy)
     return EXECUTOR_CACHE.get_or_build(
         key,
         functools.partial(_build, sig, batch, delta_sig, mesh, axis_name,
-                          shard_axis),
+                          shard_axis, densify_occupancy),
     )
 
 

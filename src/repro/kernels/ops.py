@@ -54,9 +54,16 @@ def effective_chunk(chunk: int | None) -> int:
     return min(chunk or 8, 64)
 
 
+# occupancy (active tiles / total slots) above which the xla impl switches
+# from the streamed per-tile form to one densified GEMM; overridable per
+# call (the tuner measures the actual crossover per device)
+DENSIFY_OCCUPANCY = 0.25
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("num_windows", "bm", "bk", "bn", "impl", "assume_unique"),
+    static_argnames=("num_windows", "bm", "bk", "bn", "impl", "assume_unique",
+                     "densify_occupancy"),
 )
 def block_stream_spmm(
     step_window: jax.Array,
@@ -70,6 +77,7 @@ def block_stream_spmm(
     bn: int = 256,
     impl: Impl = "xla",
     assume_unique: bool = False,
+    densify_occupancy: float | None = None,
 ) -> jax.Array:
     """Matrix-engine path; returns packed (num_windows*bm, N) fp32.
 
@@ -80,6 +88,8 @@ def block_stream_spmm(
     ``assume_unique=True`` (a static guarantee plan-driven callers can
     make — ``prepare()`` emits one tile per pair by construction) selects
     the ~4x-faster index-scatter + gather densify instead.
+    ``densify_occupancy`` overrides the module default crossover (the
+    executor pipeline passes the tuner's measured value when autotuning).
     """
     if b.ndim != 2:
         raise ValueError(
@@ -97,7 +107,12 @@ def block_stream_spmm(
         t_steps = flat_values.shape[0]
         slots = max(num_windows * (b.shape[0] // bk), 1)
         core_elems = num_windows * bm * b.shape[0]
-        if num_windows and t_steps / slots >= 0.25 and core_elems <= 2 ** 26:
+        occ_threshold = (
+            DENSIFY_OCCUPANCY if densify_occupancy is None
+            else float(densify_occupancy)
+        )
+        if (num_windows and t_steps / slots >= occ_threshold
+                and core_elems <= 2 ** 26):
             densify = (
                 ref.densified_block_stream_spmm_unique
                 if assume_unique else ref.densified_block_stream_spmm

@@ -49,7 +49,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import spmm
+from ..core import tuner as core_tuner
 from ..dynamic import DynamicPlan, GraphDelta, PlanRegistry
+from ..dynamic.tuning import install_registry_store
 from ..errors import (
     AdmissionError, CompactionError, DeadlineExceeded, DispatchError,
     PlanBuildError, RegistryError, ReproError,
@@ -79,6 +81,17 @@ def _bucket(batch: int, max_batch: int) -> int:
     return min(pow2_at_least(batch), max_batch)
 
 
+def _plan_nnz(plan) -> int:
+    """Structural nnz of any plan flavor (tuner shape-class input)."""
+    stats = plan.stats_dict
+    if "nnz" in stats:
+        return int(stats["nnz"])
+    if "shard_nnz" in stats:
+        return int(sum(stats["shard_nnz"]))
+    um = getattr(plan, "update_maps", None)
+    return int(um.nnz) if um is not None else 0
+
+
 @dataclasses.dataclass
 class ServiceStats:
     requests: int = 0
@@ -95,6 +108,9 @@ class ServiceStats:
     admission_shed: int = 0         # oldest requests dropped ("shed-oldest")
     deadline_expired: int = 0       # requests expired before their drain
     quarantines: int = 0            # matrices quarantined (fold failures)
+    tunings_scheduled: int = 0      # background microbenchmark runs started
+    tunings_applied: int = 0        # tuned records adopted into the table
+    tunings_failed: int = 0         # background tunes whose build raised
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -123,6 +139,16 @@ class SpmmService:
         if quarantine_after < 1:
             raise PlanBuildError(
                 f"quarantine_after must be >= 1, got {quarantine_after}")
+        # measurement-backed dispatch: the serving thread never
+        # microbenchmarks inline.  autotune=True is rewritten to "offline"
+        # (plans read the tuned table or fall back to the analytic model)
+        # and the measurements themselves run on the background worker,
+        # adopted atomically between drains like compaction swaps.
+        self._background_tune = config.autotune is True
+        if self._background_tune:
+            config = dataclasses.replace(config, autotune="offline")
+        if registry is not None and config.autotune:
+            install_registry_store(registry)
         self.config = config
         # registry.save serializes the whole plan (O(matrix), blocking disk
         # I/O) — durable-by-default, but heavy mutation streams over large
@@ -153,6 +179,9 @@ class SpmmService:
         # Workers only *build*; the swap (adopt_compacted) always runs on
         # the serving thread, between drains, under _fold_lock.
         self._folds: Dict[str, Tuple[int, Future]] = {}
+        # background tunes: name -> (table key, Future[(key, record)]);
+        # same build-off-thread / adopt-between-drains discipline as folds
+        self._tunes: Dict[str, Tuple[str, Future]] = {}
         self._fold_errors: Dict[str, BaseException] = {}
         self._fold_failures: Dict[str, int] = {}  # consecutive, per matrix
         self._fold_lock = threading.Lock()
@@ -199,6 +228,7 @@ class SpmmService:
             )
         self._plans[name] = dplan
         self._queues.setdefault(name, [])
+        self._maybe_schedule_tune(name)
 
     def warm_start(self, name: str, mesh=None) -> None:
         """Restore a matrix purely from the registry (no COO).
@@ -215,6 +245,7 @@ class SpmmService:
         )
         self.stats.warm_starts += 1
         self._queues.setdefault(name, [])
+        self._maybe_schedule_tune(name)
 
     def register_sharded(self, name: str, splan: spmm.ShardedPlan) -> None:
         """Serve a matrix through an already-prepared multi-device plan."""
@@ -224,6 +255,7 @@ class SpmmService:
             if splan.update_maps is not None else splan
         )
         self._queues.setdefault(name, [])
+        self._maybe_schedule_tune(name)
 
     def _check_reregister(self, name: str) -> None:
         if self._closed:
@@ -243,6 +275,9 @@ class SpmmService:
             stale = self._folds.pop(name, None)
             if stale is not None:
                 stale[1].cancel()  # running folds finish but are orphaned
+            stale_tune = self._tunes.pop(name, None)
+            if stale_tune is not None:
+                stale_tune[1].cancel()
             self._fold_errors.pop(name, None)
             self._fold_failures.pop(name, None)
 
@@ -353,6 +388,85 @@ class SpmmService:
         errors, self._fold_errors = self._fold_errors, {}
         return errors
 
+    # -- background autotuning ----------------------------------------------
+    def _maybe_schedule_tune(self, name: str) -> None:
+        """Queue a microbenchmark pass for a cold shape class.
+
+        Only with ``autotune=True`` (rewritten to "offline" for the
+        serving-path resolves) — the measurement runs on the same
+        background worker as compaction folds, and the record is adopted
+        between drains by ``poll_tunings``.  Warm shape classes (already
+        in the table) schedule nothing."""
+        if not self._background_tune:
+            return
+        plan = self._inner_plan(name)
+        m, k = plan.shape
+        tun = core_tuner.get_tuner()
+        nnz = _plan_nnz(plan)
+        if tun.peek("spmm", int(m), int(k), nnz, plan.config) is not None:
+            return
+        with self._fold_lock:
+            if self._closed:
+                return
+            if name in self._tunes:
+                return  # one in-flight tune per matrix
+            if self._fold_pool is None:
+                self._fold_pool = ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix="spmm-compact"
+                )
+            key = core_tuner.table_key(
+                "spmm", int(m), int(k), nnz, plan.config)
+            fut = self._fold_pool.submit(
+                tun.build_record, "spmm", int(m), int(k), nnz, plan.config
+            )
+            self._tunes[name] = (key, fut)
+            self.stats.tunings_scheduled += 1
+
+    def poll_tunings(self) -> int:
+        """Adopt any finished background tunes; returns records adopted.
+
+        Runs on the serving thread (also at every ``flush``), mirroring
+        ``poll_compactions``: the tuned table and each affected matrix's
+        compaction policy change only between drains.  A failed
+        measurement is counted and dropped — serving continues on the
+        analytic model; it is never an error."""
+        with self._fold_lock:
+            ready = [(n, k, f) for n, (k, f) in self._tunes.items()
+                     if f.done()]
+            for n, _, _ in ready:
+                del self._tunes[n]
+        adopted = 0
+        tun = core_tuner.get_tuner()
+        for name, _, fut in ready:
+            if fut.exception() is not None:
+                self.stats.tunings_failed += 1
+                continue
+            key, rec = fut.result()
+            tun.adopt(key, rec)
+            adopted += 1
+            self.stats.tunings_applied += 1
+            dplan = self._plans.get(name)
+            if isinstance(dplan, DynamicPlan):
+                dplan.refresh_cost_model()
+        return adopted
+
+    def drain_tunings(self) -> int:
+        """Block until every in-flight tune finished and was adopted (or
+        counted as failed).  Returns records adopted.  Test helper."""
+        adopted = 0
+        while True:
+            with self._fold_lock:
+                futs = [f for _, f in self._tunes.values()]
+            if not futs:
+                return adopted
+            for f in futs:
+                f.exception()  # wait; failures surface via poll counters
+            adopted += self.poll_tunings()
+
+    def tuning_report(self) -> dict:
+        """Process-wide tuner observability (device, counters, records)."""
+        return core_tuner.tuning_report()
+
     def drain_compactions(self, timeout: Optional[float] = None) -> int:
         """Block until every in-flight fold has finished and been swapped
         in (or discarded as stale, rescheduled, and finished).  Returns the
@@ -411,6 +525,7 @@ class SpmmService:
                 return
             self._closed = True
         try:
+            self.drain_tunings()
             self.drain_compactions()
         finally:
             with self._fold_lock:
@@ -539,6 +654,8 @@ class SpmmService:
             raise KeyError(f"no matrix registered under {name!r}")
         if self.async_compaction:
             self.poll_compactions()  # swap finished folds in between drains
+        if self._background_tune:
+            self.poll_tunings()  # adopt finished tunes between drains
         selected = (
             self._queues.items() if name is None
             else [(name, self._queues[name])]
@@ -639,6 +756,10 @@ class SpmmService:
         )
         stats["faults_fired"] = sum(
             HARNESS.counters()["fired"].values()
+        )
+        stats.update(
+            {f"tuner_{k}": v
+             for k, v in core_tuner.get_tuner().counters().items()}
         )
         if self.registry is not None:
             stats["registry_generation_fallbacks"] = (

@@ -465,6 +465,35 @@ def test_auto_compaction_triggers_and_preserves_answer(rng):
     _check_against_dense(dp, dense, b)
 
 
+def test_grow_from_empty_never_churns_compaction(rng):
+    """Bug regression: a plan prepared with zero edges has base_cost == 0,
+    and the old slowdown trigger computed inf -> a full fold on every
+    update batch.  Growing a graph from empty must ride the sidecar until
+    the floored nnz-fraction budget is actually exceeded."""
+    m = k = 40
+    empty = np.array([], np.int64)
+    dp = DynamicPlan(
+        spmm.prepare(empty, empty, np.array([], np.float64), (m, k),
+                     spmm.SpmmConfig(impl="xla")),
+    )
+    dense = np.zeros((m, k), np.float64)
+    b = jnp.asarray(rng.randn(k, 8).astype(np.float32))
+    lin = rng.choice(m * k, 30, replace=False)
+    before = spmm.prepare_call_count()
+    for j in range(6):
+        batch = lin[5 * j: 5 * (j + 1)]
+        ins = GraphDelta.inserts(batch // k, batch % k, rng.randn(5))
+        dp.update(ins)
+        _apply_delta_dense(dense, ins)
+        assert dp.last_decision is not None
+        assert np.isfinite(dp.last_decision.est_slowdown)
+    # 30 inserted edges sit far under the floored fraction budget: no fold
+    assert dp.compactions == 0
+    assert spmm.prepare_call_count() == before
+    assert dp.delta_nnz == 30
+    _check_against_dense(dp, dense, b)
+
+
 def test_should_compact_policy():
     cm = default_cost_model()
     no = should_compact(cm, base_nnz=1000, delta_nnz=0, core_rows=128,

@@ -1,0 +1,365 @@
+"""Measurement-backed dispatch: the persistent per-device autotuner.
+
+Contract under test (mirrors the registry corruption suites): a warm
+process resolves every decision from the persisted table with **zero**
+microbenchmark calls; a cold, missing, or corrupt table always degrades to
+the analytic model with a surfaced counter — never an error; and no tuned
+decision may ever change a result, only which engine computes it (pinned
+property-style on exact-arithmetic integer data, where any legal
+split/tier/densify choice yields bit-identical fp32 outputs).
+"""
+import dataclasses
+import glob
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import spmm, tuner
+from repro.core.cost_model import (
+    EngineCostModel, default_cost_model, fringe_ksharded_bytes,
+    fringe_resident_bytes,
+)
+from repro.dynamic import PlanRegistry
+from repro.dynamic.tuning import RegistryTuningStore, install_registry_store
+from repro.serve import SpmmService
+from _hyp import given, settings, st
+
+XLA = spmm.SpmmConfig(impl="xla")
+
+
+@pytest.fixture(autouse=True)
+def _fresh_tuner():
+    tuner.reset_for_tests()
+    yield
+    tuner.reset_for_tests()
+
+
+def _fake_timer(value=1e-3):
+    """Timer double: never runs fn (no compiles), fixed wall time."""
+    return lambda fn: value
+
+
+def _tuned(decisions, **over):
+    am = default_cost_model()
+    kw = dict(p_matrix=am.p_matrix, p_vector=am.p_vector, r=am.r,
+              n_cols=am.n_cols, decisions=decisions)
+    kw.update(over)
+    return tuner.TunedCostModel(**kw)
+
+
+# --- resolve modes ---------------------------------------------------------
+
+
+def test_autotune_off_resolves_analytic_with_zero_benchmarks():
+    cm = tuner.resolve_cost_model("spmm", 64, 64, 300, XLA)
+    assert type(cm) is EngineCostModel
+    assert tuner.tune_call_count() == 0
+
+
+def test_offline_cold_falls_back_to_analytic_and_counts():
+    cfg = dataclasses.replace(XLA, autotune="offline")
+    cm = tuner.resolve_cost_model("spmm", 64, 64, 300, cfg)
+    assert type(cm) is EngineCostModel  # analytic, not tuned
+    assert tuner.tune_call_count() == 0  # offline NEVER benchmarks inline
+    assert tuner.tuning_fallback_count() == 1
+    assert tuner.get_tuner().counters()["cold_misses"] == 1
+
+
+def test_inline_measure_then_table_serves_second_resolve():
+    tuner.set_timer(_fake_timer())
+    cfg = dataclasses.replace(XLA, autotune=True)
+    cm = tuner.resolve_cost_model("spmm", 64, 64, 300, cfg)
+    assert isinstance(cm, tuner.TunedCostModel) and cm.source == "measured"
+    assert tuner.tune_call_count() > 0
+    tuner.reset_tune_call_count()
+    # same shape class: table-served, zero further microbenchmarks
+    cm2 = tuner.resolve_cost_model("spmm", 64, 64, 300, cfg)
+    assert isinstance(cm2, tuner.TunedCostModel) and cm2.source == "table"
+    assert tuner.tune_call_count() == 0
+    assert tuner.get_tuner().counters()["table_hits"] == 1
+
+
+def test_shape_class_buckets_families_not_exact_shapes():
+    a = tuner.shape_class("spmm", 64, 64, 300, XLA)
+    assert a == tuner.shape_class("spmm", 60, 50, 280, XLA)  # same buckets
+    assert a != tuner.shape_class("spmm", 64, 2048, 300, XLA)
+    assert a != tuner.shape_class("sddmm", 64, 64, 300, XLA)
+
+
+# --- tuned decisions are validated, never load-bearing ---------------------
+
+
+def test_tuned_resident_preference_demotes_when_it_cannot_fit():
+    cm = _tuned({"fringe_tier": ["resident", 0]})
+    # the table says resident, but this exact fringe cannot fit the budget:
+    # the decision is re-validated and the analytic choice wins
+    assert fringe_resident_bytes(20_000, 100, 256) > 12 * 1024 * 1024
+    tier, bk = cm.select_fringe_tier(20_000, 100, 256)
+    assert (tier, bk) == default_cost_model().select_fringe_tier(
+        20_000, 100, 256)
+
+
+def test_tuned_ksharded_bk_is_clamped_to_the_legal_cap():
+    cm = _tuned({"fringe_tier": ["ksharded", 1 << 20]})
+    tier, bk = cm.select_fringe_tier(20_000, 100, 256)
+    assert tier == "ksharded"
+    assert fringe_ksharded_bytes(bk, 100, 256) <= 12 * 1024 * 1024
+    assert 2 * bk < 20_000  # strictly cheaper in bytes than resident
+    # a shape with no legal bk (k=16: no sublane bk with 2*bk < k) ignores
+    # the preference entirely and falls back to the analytic choice
+    assert cm.select_fringe_tier(16, 16, 256)[0] == "resident"
+
+
+def test_tuned_xla_demotion_always_honored():
+    cm = _tuned({"fringe_tier": ["xla", 0]})
+    assert cm.select_fringe_tier(64, 16, 256) == ("xla", 0)
+    assert cm.select_fringe_tier(20_000, 100, 256) == ("xla", 0)
+
+
+def test_tuned_sddmm_tier_is_demote_only():
+    promote = _tuned({"sddmm_tier": "resident"})
+    demote = _tuned({"sddmm_tier": "xla"})
+    # budget 0: the analytic check says xla; a measured "resident" must
+    # not promote past it
+    assert promote.select_sddmm_tier(64, 100, 100, vmem_budget=0) == "xla"
+    # a measured xla demotion wins even where resident would fit
+    assert demote.select_sddmm_tier(64, 100, 100) == "xla"
+
+
+def test_tuned_thresholds_and_occupancy_come_from_decisions():
+    cm = _tuned({
+        "delta_max_fraction": 0.4, "delta_max_slowdown": 2.0,
+        "densify_occupancy": 0.6, "shard_imbalance_threshold": 1.7,
+    })
+    assert cm.compaction_thresholds() == (0.4, 2.0)
+    assert cm.densify_occupancy() == 0.6
+    assert cm.imbalance_threshold() == 1.7
+    empty = _tuned({})
+    assert empty.compaction_thresholds() == \
+        default_cost_model().compaction_thresholds()
+    assert empty.densify_occupancy() is None
+
+
+# --- persistence: registry round-trip, warm process, corruption ------------
+
+
+def _entry_steps(root):
+    name = "tuning-" + tuner.device_fingerprint().replace(":", "_")
+    d = os.path.join(root, name)
+    return sorted(
+        os.path.join(d, s) for s in os.listdir(d) if s.startswith("step_"))
+
+
+def test_registry_round_trip_warm_process_zero_benchmarks(tmp_path):
+    tuner.set_timer(_fake_timer())
+    install_registry_store(str(tmp_path))
+    cfg = dataclasses.replace(XLA, autotune=True)
+    tuner.resolve_cost_model("spmm", 64, 64, 300, cfg)
+    assert tuner.tune_call_count() > 0
+    assert _entry_steps(str(tmp_path))  # table persisted
+
+    # "new process": fresh tuner state, same store on disk
+    tuner.reset_for_tests(keep_store=True)
+    cm = tuner.resolve_cost_model("spmm", 64, 64, 300, cfg)
+    assert isinstance(cm, tuner.TunedCostModel) and cm.source == "table"
+    assert tuner.tune_call_count() == 0  # the acceptance criterion
+    assert tuner.get_tuner().counters()["store_errors"] == 0
+
+
+def test_corrupt_table_degrades_to_analytic_with_counter(tmp_path):
+    tuner.set_timer(_fake_timer())
+    install_registry_store(str(tmp_path))
+    cfg = dataclasses.replace(XLA, autotune=True)
+    tuner.resolve_cost_model("spmm", 64, 64, 300, cfg)
+    # mangle every retained generation's payload
+    for step in _entry_steps(str(tmp_path)):
+        for f in glob.glob(os.path.join(step, "*.npy")):
+            with open(f, "r+b") as fh:
+                fh.truncate(os.path.getsize(f) // 2)
+
+    tuner.reset_for_tests(keep_store=True)
+    off = dataclasses.replace(XLA, autotune="offline")
+    cm = tuner.resolve_cost_model("spmm", 64, 64, 300, off)
+    assert type(cm) is EngineCostModel  # analytic fallback, no raise
+    assert tuner.get_tuner().counters()["store_errors"] == 1
+    assert tuner.tuning_fallback_count() >= 1
+
+
+def test_corrupt_newest_generation_falls_back_to_older(tmp_path):
+    tuner.set_timer(_fake_timer())
+    reg = PlanRegistry(str(tmp_path))
+    install_registry_store(reg)
+    cfg = dataclasses.replace(XLA, autotune=True)
+    tuner.resolve_cost_model("spmm", 64, 64, 300, cfg)
+    tuner.resolve_cost_model("spmm", 64, 2048, 3000, cfg)  # second save
+    steps = _entry_steps(str(tmp_path))
+    assert len(steps) == 2
+    for f in glob.glob(os.path.join(steps[-1], "*.npy")):
+        with open(f, "r+b") as fh:
+            fh.truncate(os.path.getsize(f) // 2)
+
+    tuner.reset_for_tests(keep_store=True)
+    install_registry_store(reg)
+    off = dataclasses.replace(XLA, autotune="offline")
+    cm = tuner.resolve_cost_model("spmm", 64, 64, 300, off)
+    assert isinstance(cm, tuner.TunedCostModel)  # served from generation 1
+    assert reg.generation_fallbacks == 1
+    assert tuner.get_tuner().counters()["store_errors"] == 0
+
+
+def test_table_from_other_device_is_ignored(tmp_path):
+    reg = PlanRegistry(str(tmp_path))
+    store = RegistryTuningStore(reg)
+    store.save({"other|spmm|m6|k6|d-2|bn256|xla": {
+        "table_format_version": tuner.TABLE_FORMAT_VERSION}})
+    # rewrite the manifest's device fingerprint so it looks foreign
+    import json
+    step = _entry_steps(str(tmp_path))[-1]
+    manifest_path = os.path.join(step, "manifest.json")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    manifest["meta"]["device_fingerprint"] = "tpu:v9"
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f)
+    assert store.load() is None  # foreign table == absent, not an error
+
+
+def test_save_failure_is_counted_never_raised():
+    class BrokenStore:
+        def load(self):
+            return None
+
+        def save(self, table):
+            raise IOError("disk full")
+
+    tuner.install_store(BrokenStore())
+    tuner.set_timer(_fake_timer())
+    cfg = dataclasses.replace(XLA, autotune=True)
+    cm = tuner.resolve_cost_model("spmm", 64, 64, 300, cfg)
+    assert isinstance(cm, tuner.TunedCostModel)  # record still adopted
+    assert tuner.get_tuner().counters()["store_errors"] == 1
+
+
+def test_stale_format_version_records_are_dropped_on_load():
+    class Store:
+        def __init__(self):
+            key = tuner.table_key("spmm", 64, 64, 300, XLA)
+            self.table = {key: {"table_format_version": -1}}
+
+        def load(self):
+            return self.table
+
+        def save(self, table):
+            self.table = table
+
+    tuner.install_store(Store())
+    off = dataclasses.replace(XLA, autotune="offline")
+    cm = tuner.resolve_cost_model("spmm", 64, 64, 300, off)
+    assert type(cm) is EngineCostModel  # stale record never served
+    assert tuner.get_tuner().counters()["cold_misses"] == 1
+
+
+# --- decisions may differ, results may not ---------------------------------
+
+
+def _exact_coo(rng, m, k, density=0.12):
+    """Integer-valued fp32 matrix: any summation order is exact."""
+    mask = rng.rand(m, k) < density
+    rows, cols = np.nonzero(mask)
+    vals = rng.randint(-4, 5, rows.size).astype(np.float64)
+    return rows.astype(np.int64), cols.astype(np.int64), vals
+
+
+def _variant_models():
+    am = default_cost_model()
+    return [
+        _tuned({"fringe_tier": ["xla", 0]}),
+        _tuned({}, p_matrix=am.p_matrix * 64),   # vector-hungry split
+        _tuned({}, p_vector=am.p_vector * 64),   # matrix-hungry split
+        _tuned({"densify_occupancy": 0.05}),
+        _tuned({"densify_occupancy": 0.9}),
+    ]
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(24, 72), st.integers(16, 64))
+def test_dispatch_decisions_never_change_results(seed, m, k):
+    """Analytic model, tuned table, and forced tiers must agree bitwise.
+
+    Decisions route work between engines; on exact-arithmetic data every
+    legal routing produces the identical fp32 output, so any mismatch here
+    is a tuned decision changing *what* is computed, not *where*."""
+    rng = np.random.RandomState(seed)
+    rows, cols, vals = _exact_coo(rng, m, k)
+    b = jnp.asarray(rng.randint(-4, 5, (k, 8)).astype(np.float32))
+    ref = np.asarray(
+        spmm.execute(spmm.prepare(rows, cols, vals, (m, k), XLA), b))
+    for cm in _variant_models():
+        plan = spmm.prepare(rows, cols, vals, (m, k), XLA, cost_model=cm)
+        assert np.array_equal(np.asarray(spmm.execute(plan, b)), ref)
+    # forced-tier override through the budget knob
+    forced = dataclasses.replace(XLA, fringe_vmem_budget=16)
+    plan = spmm.prepare(rows, cols, vals, (m, k), forced)
+    assert np.array_equal(np.asarray(spmm.execute(plan, b)), ref)
+
+
+def test_tuned_table_execution_is_bit_identical(rng):
+    """End-to-end through the autotune config path: adopt a table record
+    with aggressive decisions, resolve it via autotune="offline", and the
+    executed result must match the analytic plan bitwise."""
+    rows, cols, vals = _exact_coo(rng, 48, 40)
+    b = jnp.asarray(rng.randint(-4, 5, (40, 8)).astype(np.float32))
+    ref = np.asarray(
+        spmm.execute(spmm.prepare(rows, cols, vals, (48, 40), XLA), b))
+
+    off = dataclasses.replace(XLA, autotune="offline")
+    am = default_cost_model()
+    key = tuner.table_key("spmm", 48, 40, len(vals), off)
+    tuner.get_tuner().adopt(key, {
+        "table_format_version": tuner.TABLE_FORMAT_VERSION,
+        "p_matrix": am.p_matrix * 64, "p_vector": am.p_vector,
+        "r": am.r, "n_cols": am.n_cols, "key": key,
+        "decisions": {"fringe_tier": ["xla", 0], "densify_occupancy": 0.9},
+    })
+    plan = spmm.prepare(rows, cols, vals, (48, 40), off)
+    assert np.array_equal(np.asarray(spmm.execute(plan, b)), ref)
+    assert tuner.get_tuner().counters()["table_hits"] >= 1
+
+
+# --- service integration ---------------------------------------------------
+
+
+def test_service_background_tune_and_warm_health(rng, tmp_path):
+    tuner.set_timer(_fake_timer())
+    m = k = 64
+    mask = rng.rand(m, k) < 0.08
+    rows, cols = np.nonzero(mask)
+    vals = rng.randn(rows.size)
+    reg = PlanRegistry(str(tmp_path))
+    cfg = dataclasses.replace(XLA, autotune=True)
+
+    with SpmmService(config=cfg, registry=reg) as svc:
+        assert svc.config.autotune == "offline"  # never benchmarks inline
+        svc.register("g", rows, cols, vals, (m, k))
+        t = svc.submit("g", jnp.asarray(
+            rng.randn(k, 8).astype(np.float32)))
+        svc.flush()
+        svc.fetch(t)
+        svc.drain_tunings()
+        h = svc.health()
+        assert h["stats"]["tunings_scheduled"] == 1
+        assert h["stats"]["tunings_applied"] == 1
+        assert h["stats"]["tuner_records"] == 1
+        assert "tuner_store_errors" in h["stats"]
+        assert svc.tuning_report()["records"]
+
+    # warm process: table comes off disk, nothing schedules or measures
+    tuner.reset_for_tests(keep_store=True)
+    tuner.set_timer(_fake_timer())
+    with SpmmService(config=cfg, registry=reg) as svc2:
+        svc2.register("g", rows, cols, vals, (m, k))
+        svc2.drain_tunings()
+        assert svc2.stats.tunings_scheduled == 0
+        assert tuner.tune_call_count() == 0

@@ -32,6 +32,16 @@ Exception note: ``kernels`` may import ``core.cost_model`` (the fringe
 dispatch-tier selection used by ``tier="auto"``) — the cost model is leaf
 math with no plan/executor dependencies.
 
+Dependency-inverted seam: the autotuner (``core/tuner.py``) persists its
+table through ``PlanRegistry``, which lives two layers *up* in ``dynamic``.
+Rather than import upward, core defines a store protocol and a module hook,
+``install_store``, and ``dynamic/tuning.py`` hands the registry-backed
+store down.  The seam only stays downward if nothing in the lower layers
+ever *calls* the hook itself — so beyond the import rules, this script
+AST-scans for ``install_store(...)`` call sites and fails CI when one
+appears outside the ``dynamic``/``serve`` layers (defining it in core is
+fine; calling it there would collapse the inversion).
+
 Usage: python tools/check_layers.py  (exit 1 on violation)
 """
 from __future__ import annotations
@@ -77,6 +87,11 @@ ALLOWED_PREFIXES = {
     "robust": ("repro.errors", "repro.robust"),
 }
 
+# the tuner persistence hook may only be *called* from these layers — the
+# store flows downward into core, never the other way (see docstring)
+STORE_SEAM_HOOK = "install_store"
+STORE_SEAM_CALLERS = ("dynamic", "serve")
+
 
 def _resolve_relative(module_path: str, level: int, name: str) -> str:
     """Absolute module of a ``from ..x import y`` seen in ``module_path``."""
@@ -116,6 +131,20 @@ def iter_imports(module_rel: str, tree: ast.AST) -> Iterator[Tuple[int, str]]:
                 yield node.lineno, node.args[0].value
 
 
+def iter_store_seam_calls(tree: ast.AST) -> Iterator[int]:
+    """Line numbers of ``install_store(...)`` call sites in the AST."""
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        func = node.func
+        name = (
+            func.attr if isinstance(func, ast.Attribute)
+            else func.id if isinstance(func, ast.Name) else None
+        )
+        if name == STORE_SEAM_HOOK:
+            yield node.lineno
+
+
 def check_tree(src_root: str = SRC) -> List[str]:
     violations: List[str] = []
     pkg_root = os.path.join(src_root, PKG)
@@ -128,15 +157,22 @@ def check_tree(src_root: str = SRC) -> List[str]:
             part = rel.split("/")[1] if "/" in rel else ""
             # top-level modules (repro/errors.py) rule-match by stem
             subpkg = part[:-3] if part.endswith(".py") else part
-            rules = FORBIDDEN.get(subpkg)
-            if not rules:
-                continue
             with open(path, encoding="utf-8") as f:
                 try:
                     tree = ast.parse(f.read(), filename=path)
                 except SyntaxError as e:  # pragma: no cover
                     violations.append(f"{rel}: unparseable ({e})")
                     continue
+            if subpkg not in STORE_SEAM_CALLERS:
+                for lineno in iter_store_seam_calls(tree):
+                    violations.append(
+                        f"{rel}:{lineno}: {STORE_SEAM_HOOK}() may only be "
+                        f"called from {'/'.join(STORE_SEAM_CALLERS)} — the "
+                        f"tuner store seam points downward only"
+                    )
+            rules = FORBIDDEN.get(subpkg)
+            if not rules:
+                continue
             for lineno, target in iter_imports(rel, tree):
                 if not target.startswith("repro."):
                     continue
