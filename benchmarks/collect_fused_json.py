@@ -55,7 +55,12 @@ def main(argv=None) -> None:
     p.add_argument("--out", default="BENCH_fused_executor.json")
     p.add_argument("--skip-prepare", action="store_true",
                    help="skip the host prepare() timing panel")
+    p.add_argument("--telemetry-out", default=None, metavar="PATH",
+                   help="run the exec panel with SpmmConfig.telemetry "
+                        "enabled and dump the repro.obs snapshot (metrics "
+                        "+ traces + roofline attribution) as JSON")
     args = p.parse_args(argv)
+    telemetry = args.telemetry_out is not None
 
     rng = np.random.RandomState(0)
     calib_us = _calibration_us(rng)
@@ -65,7 +70,8 @@ def main(argv=None) -> None:
         rows, cols, vals, shape = load_dataset(name, max_dim=args.max_dim)
         b = jnp.asarray(rng.randn(shape[1], args.n).astype(np.float32))
         plan = spmm.prepare(rows, cols, vals, shape,
-                            spmm.SpmmConfig(impl="xla"))
+                            spmm.SpmmConfig(impl="xla",
+                                            telemetry=telemetry))
         exec_after[name] = time_fn(lambda: spmm.execute(plan, b))
 
     record = {
@@ -118,6 +124,15 @@ def main(argv=None) -> None:
     with open(args.out, "w") as f:
         json.dump(record, f, indent=2)
     print(json.dumps(record, indent=2))
+
+    if telemetry:
+        import repro.obs as obs
+        snap = obs.snapshot()
+        snap["prometheus"] = obs.prometheus_text()
+        with open(args.telemetry_out, "w") as f:
+            json.dump(snap, f, indent=2)
+        from repro.obs import format_report
+        print(format_report(snap["roofline"]))
 
 
 if __name__ == "__main__":

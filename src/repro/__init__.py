@@ -2,3 +2,4 @@
 __version__ = "0.1.0"
 
 from . import errors  # noqa: F401  (shared taxonomy; zero heavy imports)
+from . import obs  # noqa: F401  (telemetry registry; zero heavy imports)

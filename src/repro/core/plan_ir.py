@@ -163,6 +163,10 @@ class SpmmConfig:
     # NOT execution-only: tuned models can change plan *structure* (split,
     # tiers), so autotune stays part of the registry fingerprint.
     autotune: Union[bool, str] = False
+    # host-side telemetry (repro.obs): per-dispatch roofline profiling and
+    # per-request tracing.  Never part of signature() — toggling it must
+    # not retrace, re-dispatch, or change any numeric output.
+    telemetry: bool = False
 
 
 @dataclasses.dataclass

@@ -49,7 +49,10 @@ from .plan_ir import (  # noqa: F401  (public re-exports; layout owned by plan_i
     SpmmConfig, UpdateMaps,
 )
 
-_PREPARE_CALL_COUNT = 0  # incremented per prepare() call (test hook)
+from ..obs import REGISTRY
+
+_PREPARES = REGISTRY.counter(
+    "core_prepares_total", "host-side prepare() preprocessing runs")
 
 # execution API lives in repro.exec.api; forwarded lazily so importing the
 # core layer never pulls the executor pipeline (or anything above it) in
@@ -93,8 +96,9 @@ def prepare_call_count() -> int:
 
     Test hook for the warm-start guarantees: a service restoring plans from
     the on-disk registry must serve without re-running preprocessing.
+    Reads the ``core_prepares_total`` registry counter.
     """
-    return _PREPARE_CALL_COUNT
+    return int(_PREPARES.total())
 
 
 def prepare(
@@ -108,8 +112,7 @@ def prepare(
     """Host-side preprocessing (one-time; amortized across epochs)."""
     m, k = shape
     rows, cols, vals = plan_ir.validate_coo(rows, cols, vals, shape)
-    global _PREPARE_CALL_COUNT
-    _PREPARE_CALL_COUNT += 1
+    _PREPARES.inc()
     # analytic model unless config.autotune enables the measured table
     # (core.tuner); every dispatch decision below consults cm so a tuned
     # model can override any of them

@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import REGISTRY, instance_label
 from .cost_model import (
     DELTA_MAX_FRACTION,
     DELTA_MAX_SLOWDOWN,
@@ -105,7 +106,18 @@ def timed_best_of(
 
 # --- test hooks: microbenchmark counter + injectable timer -------------------
 
-_TUNE_CALL_COUNT = 0
+# tuner observability lives on the repro.obs registry; the per-``instance``
+# label keeps each Tuner's counts independent (reset_for_tests swaps the
+# tuner, and the fresh instance's series start at zero)
+_TUNER_EVENTS = REGISTRY.counter(
+    "tuner_events_total",
+    "cost-model tuner events (table_hit/cold_miss/measured/store_error)",
+    labelnames=("event", "instance"),
+    max_series=8192,
+)
+_MICROBENCH = REGISTRY.counter(
+    "tuner_microbench_total", "inline microbenchmark invocations")
+
 _TIMER: Callable[[Callable[[], Any]], float] = timed_best_of
 
 
@@ -113,14 +125,13 @@ def tune_call_count() -> int:
     """Microbenchmark invocations since process start (or last reset).
 
     The warm-start acceptance check: a process resolving every decision
-    from a persisted table reports 0.
+    from a persisted table reports 0.  Reads ``tuner_microbench_total``.
     """
-    return _TUNE_CALL_COUNT
+    return int(_MICROBENCH.total())
 
 
 def reset_tune_call_count() -> None:
-    global _TUNE_CALL_COUNT
-    _TUNE_CALL_COUNT = 0
+    _MICROBENCH.reset()
 
 
 def set_timer(timer: Callable[[Callable[[], Any]], float]) -> None:
@@ -270,10 +281,30 @@ class Tuner:
         self._lock = threading.RLock()
         self._table: Dict[str, dict] = {}
         self._loaded = False
-        self.table_hits = 0      # resolves served from a (loaded) record
-        self.cold_misses = 0     # offline resolves with no record: analytic
-        self.measured = 0        # records produced by inline measurement
-        self.store_errors = 0    # load/save failures (corrupt table, IO)
+        self._label = instance_label("tuner")
+
+    def _count(self, event: str) -> None:
+        _TUNER_EVENTS.inc(event=event, instance=self._label)
+
+    def _value(self, event: str) -> int:
+        return int(_TUNER_EVENTS.value(event=event, instance=self._label))
+
+    # registry-backed views of the counters this class used to own
+    @property
+    def table_hits(self) -> int:    # resolves served from a (loaded) record
+        return self._value("table_hit")
+
+    @property
+    def cold_misses(self) -> int:   # offline resolves with no record
+        return self._value("cold_miss")
+
+    @property
+    def measured(self) -> int:      # records produced by inline measurement
+        return self._value("measured")
+
+    @property
+    def store_errors(self) -> int:  # load/save failures (corrupt table, IO)
+        return self._value("store_error")
 
     # -- store interaction ----------------------------------------------------
 
@@ -290,7 +321,7 @@ class Tuner:
             # corrupt/unreadable table: analytic fallback, surfaced — never
             # an error on the resolve path
             with self._lock:
-                self.store_errors += 1
+                self._count("store_error")
             return
         if not isinstance(table, dict):
             return
@@ -312,7 +343,7 @@ class Tuner:
             _STORE.save(snap)
         except Exception:
             with self._lock:
-                self.store_errors += 1
+                self._count("store_error")
 
     # -- resolution -----------------------------------------------------------
 
@@ -329,11 +360,11 @@ class Tuner:
             rec = self._table.get(key)
         if rec is not None:
             with self._lock:
-                self.table_hits += 1
+                self._count("table_hit")
             return self._model_from(rec, source="table")
         if mode == "offline":
             with self._lock:
-                self.cold_misses += 1
+                self._count("cold_miss")
             return default_cost_model(n_cols=config.bn)
         key, rec = self.build_record(op, m, k, nnz, config)
         self.adopt(key, rec)
@@ -353,7 +384,7 @@ class Tuner:
         """
         with self._lock:
             self._table[key] = rec
-            self.measured += 1
+            self._count("measured")
         self._persist()
 
     def _model_from(self, rec: dict, source: str) -> TunedCostModel:
@@ -370,8 +401,7 @@ class Tuner:
     # -- measurement ----------------------------------------------------------
 
     def _timed(self, label: str, fn: Callable[[], Any], rec: dict) -> float:
-        global _TUNE_CALL_COUNT
-        _TUNE_CALL_COUNT += 1
+        _MICROBENCH.inc()
         t = float(_TIMER(fn))
         rec["bench_us"][label] = t * 1e6
         return max(t, 1e-9)

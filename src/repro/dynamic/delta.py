@@ -55,8 +55,20 @@ from ..core.plan_ir import (  # noqa: F401  (re-exported; layout owned by plan_i
     build_sharded_delta_fringe,
 )
 from ..exec import api as exec_api
+from ..obs import REGISTRY
 
 PlanLike = Union[spmm.NeutronPlan, spmm.ShardedPlan]
+
+_UPDATES = REGISTRY.counter(
+    "dynamic_updates_total",
+    "mutation batches applied to dynamic plans",
+    labelnames=("route",),
+)
+_COMPACTIONS = REGISTRY.counter(
+    "dynamic_compactions_total",
+    "compaction lifecycle events across all dynamic plans",
+    labelnames=("event",),
+)
 
 
 def _as_1d(a, dtype) -> np.ndarray:
@@ -589,6 +601,7 @@ class DynamicPlan:
         if structural:
             self._delta = None  # rematerialized lazily at next execute
 
+        _UPDATES.inc(route="structural" if structural else "fast_path")
         stats = {
             "fast_path": len(pending),
             "delta_nnz": self.delta_nnz,
@@ -649,6 +662,7 @@ class DynamicPlan:
 
     def snapshot_for_compaction(self):
         """(version, rows, cols, vals) of the current logical matrix."""
+        _COMPACTIONS.inc(event="snapshot")
         rows, cols, vals = self.to_coo()
         return self.version, rows, cols, vals
 
@@ -661,7 +675,9 @@ class DynamicPlan:
         plan is stale and the caller should re-snapshot.
         """
         if expected_version is not None and expected_version != self.version:
+            _COMPACTIONS.inc(event="stale")
             return False
+        _COMPACTIONS.inc(event="adopt")
         self.plan = plan
         self._overlay = {}
         self._delta = None

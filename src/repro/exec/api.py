@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import zlib
 from typing import Tuple
 
 import jax
@@ -18,12 +19,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import plan_ir, tuner
+from ..core.cost_model import HBM_BW, PEAK_FLOPS_BF16
 from ..core.plan_ir import (
     NeutronPlan, ShardedPlan, SpmmConfig, build_sddmm_maps, gather_rows,
     permute_pad_b, plan_leaves, sddmm_body_leaves, validate_rhs,
 )
 from ..errors import DispatchError, KernelLoweringError, PlanBuildError
 from ..kernels import ops
+from ..obs import PROFILER
 from . import cache as _cache
 from .cache import (  # noqa: F401  (re-exported test hooks)
     dispatch_count, fused_trace_count, sharded_trace_count,
@@ -31,6 +34,11 @@ from .cache import (  # noqa: F401  (re-exported test hooks)
 )
 from .health import HEALTH
 from .pipeline import build_delta_only_executor, build_executor
+
+# roofline ceilings the telemetry profiler reports modeled work against;
+# the analytic cost model's device constants (obs itself never imports the
+# cost model, so they ride on every record)
+_PEAKS = {"flops_per_s": PEAK_FLOPS_BF16, "bytes_per_s": HBM_BW}
 
 
 def _apply_cache_capacity(config: SpmmConfig) -> None:
@@ -66,7 +74,43 @@ def _tuned_densify(plan) -> float | None:
     return cm.densify_occupancy()
 
 
-def _guarded_call(sig, config: SpmmConfig, make_fn, args, kind: str, key_of):
+def _sig_key(sig) -> str:
+    """Short deterministic key for a plan signature (telemetry label)."""
+    return f"{zlib.crc32(repr(sig).encode()):08x}"
+
+
+def _maybe_profiled(fn, args, *, kind, sig, tier, prof):
+    """Invoke the executor, measuring it when telemetry asked for it.
+
+    ``prof is None`` (telemetry off) is the production path: the executor
+    is called exactly as before — no synchronization, no clock reads.
+    With telemetry on, the call is timed with the ``timed_best_of``
+    discipline (block on the result before reading the clock, so under
+    JAX async dispatch the measurement covers the compute, not the
+    enqueue) and one :class:`repro.obs.DispatchRecord` is written joining
+    the measurement with the caller's modeled FLOP/byte terms.  Host-side
+    only: the same single ``fn(*args)`` dispatch either way, and sig/
+    cache keys never see the telemetry flag.
+    """
+    if prof is None:
+        return fn(*args)
+    traces0 = _cache.fused_trace_count() + _cache.sharded_trace_count()
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    measured_us = (time.perf_counter() - t0) * 1e6
+    traced = (_cache.fused_trace_count()
+              + _cache.sharded_trace_count()) > traces0
+    PROFILER.record(
+        op=prof["op"], tier=str(tier), sig_key=_sig_key(sig), kind=kind,
+        measured_us=measured_us, traced=traced, batch=prof.get("batch"),
+        terms=prof["terms"], peaks=_PEAKS,
+    )
+    return out
+
+
+def _guarded_call(sig, config: SpmmConfig, make_fn, args, kind: str, key_of,
+                  prof=None):
     """Build + dispatch with health gating and degrade-to-XLA fallback.
 
     ``make_fn(sig) -> fn`` builds (or fetches) the executor for a
@@ -81,17 +125,24 @@ def _guarded_call(sig, config: SpmmConfig, make_fn, args, kind: str, key_of):
     into a raised :class:`KernelLoweringError`.  Failures *after* a
     successful synchronous dispatch (async device-side errors surfacing at
     a later block) are out of scope here.
+
+    ``prof`` (built by the entry points only when ``config.telemetry``)
+    carries the op name and modeled per-engine-path FLOP/byte terms for
+    the roofline profiler; every dispatch branch reports the tier it
+    actually ran on.
     """
     impl = plan_ir.sig_impl(sig)
     if impl is None or impl == "xla":
         fn = make_fn(sig)
         _cache.record_dispatch(kind, key_of(sig))
-        return fn(*args)
+        return _maybe_profiled(fn, args, kind=kind, sig=sig,
+                               tier=impl or "xla", prof=prof)
     if HEALTH.should_try_accel(sig):
         try:
             fn = make_fn(sig)
             _cache.record_dispatch(kind, key_of(sig))
-            out = fn(*args)
+            out = _maybe_profiled(fn, args, kind=kind, sig=sig, tier=impl,
+                                  prof=prof)
             HEALTH.record_success(sig)
             return out
         except Exception as err:  # noqa: BLE001 — any accel failure degrades
@@ -106,12 +157,82 @@ def _guarded_call(sig, config: SpmmConfig, make_fn, args, kind: str, key_of):
     try:
         fn = make_fn(fsig)
         _cache.record_dispatch(kind + ":degraded", key_of(fsig))
-        return fn(*args)
+        return _maybe_profiled(fn, args, kind=kind + ":degraded", sig=fsig,
+                               tier="xla", prof=prof)
     except Exception as err:
         raise DispatchError(
             f"dispatch failed on every tier (accel impl={impl!r} degraded, "
             f"then XLA fallback raised: {err})"
         ) from err
+
+
+# --- modeled roofline terms (telemetry only) ---------------------------------
+#
+# Modeled FLOPs/bytes are *lower bounds* on each engine path's work, in the
+# cost model's own currency (cost_matrix/cost_vector): the matrix path as
+# dense (bm x bk) tile matmuls against streamed B blocks, the fringe path
+# as per-nonzero gather dot-products.  Sharded plans lack per-path stats
+# (stats carry shard totals only), so their whole dispatch models on the
+# matrix path from total nnz.
+
+
+def _spmm_prof(plan, b: jax.Array):
+    config = plan.config
+    if not getattr(config, "telemetry", False):
+        return None
+    stats = plan.stats_dict
+    n = int(b.shape[-1])
+    batch = int(b.shape[0]) if b.ndim == 3 else None
+    scale = float(batch or 1)
+    fringe_nnz = int(stats.get("fringe_nnz", 0))
+    num_steps = int(stats.get("num_steps", 0))
+    num_windows = int(stats.get("num_windows", 0))
+    if num_steps:
+        mat_flops = 2.0 * num_steps * config.bm * config.bk * n
+        mat_bytes = (num_steps * (config.bm * config.bk + config.bk * n)
+                     + num_windows * config.bm * n) * 4.0
+    else:
+        core_nnz = max(_plan_nnz(plan) - fringe_nnz, 0)
+        mat_flops = 2.0 * core_nnz * n
+        mat_bytes = core_nnz * (12.0 + 4.0 * n)
+    return {
+        "op": "spmm", "batch": batch,
+        "terms": {
+            "matrix": {"flops": mat_flops * scale,
+                       "bytes": mat_bytes * scale},
+            "fringe": {"flops": 2.0 * fringe_nnz * n * scale,
+                       "bytes": fringe_nnz * (12.0 + 4.0 * n) * scale},
+        },
+    }
+
+
+def _sddmm_prof(config, nnz: int, nnz_f: int, d: int, batch):
+    if not getattr(config, "telemetry", False):
+        return None
+    scale = float(batch or 1)
+    core = max(int(nnz) - int(nnz_f), 0)
+    return {
+        "op": "sddmm", "batch": batch,
+        "terms": {
+            "matrix": {"flops": 2.0 * core * d * scale,
+                       "bytes": core * (8.0 * d + 4.0) * scale},
+            "fringe": {"flops": 2.0 * int(nnz_f) * d * scale,
+                       "bytes": int(nnz_f) * (8.0 * d + 12.0) * scale},
+        },
+    }
+
+
+def _spspmm_prof(config, n_exp: int, nnz_c: int):
+    if not getattr(config, "telemetry", False):
+        return None
+    # expansion products + segment sum: pure vector-engine work
+    return {
+        "op": "spspmm", "batch": None,
+        "terms": {
+            "fringe": {"flops": 2.0 * int(n_exp),
+                       "bytes": 12.0 * int(n_exp) + 4.0 * int(nnz_c)},
+        },
+    }
 
 
 def execute(plan: NeutronPlan, b: jax.Array) -> jax.Array:
@@ -134,6 +255,7 @@ def execute(plan: NeutronPlan, b: jax.Array) -> jax.Array:
         plan.signature(), plan.config,
         lambda s: build_executor(s, batch=batch, densify_occupancy=docc),
         (*plan_leaves(plan), b), "fused", lambda s: (s, batch),
+        prof=_spmm_prof(plan, b),
     )
 
 
@@ -155,6 +277,7 @@ def execute_with_delta(plan: NeutronPlan, delta, b: jax.Array) -> jax.Array:
                                  densify_occupancy=docc),
         (*plan_leaves(plan), *delta.leaves, b),
         "fused+delta", lambda s: (s, batch),
+        prof=_spmm_prof(plan, b),
     )
 
 
@@ -213,6 +336,7 @@ def execute_sharded(
         args,
         "sharded" if delta is None else "sharded+delta",
         lambda s: (s, splan.shard_axis, batch),
+        prof=_spmm_prof(splan, b),
     )
 
 
@@ -306,6 +430,8 @@ def execute_sddmm(plan, x: jax.Array, y: jax.Array) -> jax.Array:
         lambda s: build_executor(s, batch=batch),
         (*sddmm_body_leaves(plan, smaps), x, y),
         "sddmm", lambda s: (s, batch),
+        prof=_sddmm_prof(plan.config, smaps.nnz, smaps.nnz_f,
+                         int(x.shape[-1]), batch),
     )
 
 
@@ -334,6 +460,8 @@ def _execute_sddmm_sharded(
         sig, cfg,
         lambda s: build_executor(s, batch=batch),
         (*flat, x, y), "sddmm", lambda s: (s, batch),
+        # flat global gather form: every nonzero rides the vector path
+        prof=_sddmm_prof(cfg, maps.nnz, maps.nnz, int(x.shape[-1]), batch),
     )
 
 
@@ -418,6 +546,7 @@ def execute_spspmm(a_plan, b_plan) -> Tuple:
          jnp.asarray(ce, jnp.int32), jnp.asarray(ma.vals),
          jnp.asarray(mb.vals)),
         "spspmm", lambda s: s,
+        prof=_spspmm_prof(a_plan.config, n_exp, nnz_c),
     )
     return c_keys // n, c_keys % n, vals, (m, n)
 

@@ -8,14 +8,22 @@ capacity default is generous (hundreds of distinct plan structures) and can
 be set per deployment through ``SpmmConfig.executor_cache_capacity`` or
 :func:`set_executor_cache_capacity`.
 
-The trace/dispatch hooks are the pipeline's test surface:
+All counts live on the ``repro.obs`` registry — one source of truth for
+retrace/dispatch accounting:
 
-- ``fused_trace_count``    — times any fused body was traced (jit, vmap,
-  per-shard shard_map body alike; a retrace anywhere shows up here);
-- ``sharded_trace_count``  — times a sharded top-level program was traced;
-- ``dispatch_count``       — executor invocations issued by ``exec.api``
-  (one fused/sharded program launch each).  The sharded-dynamic
-  single-dispatch guarantee is asserted against this counter.
+- ``exec_traces_total{kind}``        — ``fused`` (jit, vmap, per-shard
+  shard_map body alike; a retrace anywhere shows up here) and ``sharded``
+  (top-level sharded program) traces;
+- ``exec_dispatches_total{kind}``    — executor invocations issued by
+  ``exec.api``, labelled by dispatch kind (``fused``, ``sharded+delta``,
+  ``sddmm:degraded``, ...).  The sharded-dynamic single-dispatch guarantee
+  is asserted against this counter;
+- ``exec_cache_events_total{event}`` — executor-cache ``hit`` / ``miss`` /
+  ``eviction``.
+
+The module-level ``fused_trace_count()`` / ``sharded_trace_count()`` /
+``dispatch_count()`` hooks stay as thin registry reads so existing tests
+and callers are unchanged.
 """
 from __future__ import annotations
 
@@ -24,8 +32,24 @@ from collections import OrderedDict
 from typing import Any, Callable, Hashable, List
 
 from ..errors import PlanBuildError
+from ..obs import REGISTRY
 
 DEFAULT_EXECUTOR_CACHE_CAPACITY = 256
+
+# Counters, never payload lists: with a *bounded* executor cache, evicted
+# structures legitimately retrace on return, so traces (like dispatches)
+# scale with request patterns in a long-lived serving process —
+# accumulating per-event tuples would be a slow leak in exactly the
+# deployment the LRU bounds memory for.
+_TRACES = REGISTRY.counter(
+    "exec_traces_total", "executor program traces (compilations)",
+    labelnames=("kind",))
+_DISPATCHES = REGISTRY.counter(
+    "exec_dispatches_total", "executor dispatches issued by exec.api",
+    labelnames=("kind",))
+_CACHE_EVENTS = REGISTRY.counter(
+    "exec_cache_events_total", "executor-cache hits/misses/evictions",
+    labelnames=("event",))
 
 
 class ExecutorCache:
@@ -38,9 +62,20 @@ class ExecutorCache:
         self._data: "OrderedDict[Hashable, Any]" = OrderedDict()
         self._capacity = int(capacity)
         self._lock = threading.Lock()
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
+
+    # hit/miss/eviction counts are registry series shared by every cache
+    # instance in the process (tests only construct extras transiently)
+    @property
+    def hits(self) -> int:
+        return int(_CACHE_EVENTS.value(event="hit"))
+
+    @property
+    def misses(self) -> int:
+        return int(_CACHE_EVENTS.value(event="miss"))
+
+    @property
+    def evictions(self) -> int:
+        return int(_CACHE_EVENTS.value(event="eviction"))
 
     @property
     def capacity(self) -> int:
@@ -57,13 +92,13 @@ class ExecutorCache:
     def _evict_locked(self) -> None:
         while len(self._data) > self._capacity:
             self._data.popitem(last=False)
-            self.evictions += 1
+            _CACHE_EVENTS.inc(event="eviction")
 
     def get_or_build(self, key: Hashable, builder: Callable[[], Any]) -> Any:
         with self._lock:
             if key in self._data:
                 self._data.move_to_end(key)
-                self.hits += 1
+                _CACHE_EVENTS.inc(event="hit")
                 return self._data[key]
         # build outside the lock: builders only close over static metadata
         # (tracing happens lazily at first call), so a racing double-build
@@ -71,7 +106,7 @@ class ExecutorCache:
         fn = builder()
         with self._lock:
             if key not in self._data:
-                self.misses += 1
+                _CACHE_EVENTS.inc(event="miss")
                 self._data[key] = fn
                 self._evict_locked()
             self._data.move_to_end(key)
@@ -103,52 +138,37 @@ def set_executor_cache_capacity(capacity: int) -> None:
 
 # --- trace/dispatch hooks ---------------------------------------------------
 
-# All observability hooks are plain counters, never payload lists: with a
-# *bounded* executor cache, evicted structures legitimately retrace on
-# return, so traces (like dispatches) scale with request patterns in a
-# long-lived serving process — accumulating per-event tuples would be a
-# slow leak in exactly the deployment the LRU bounds memory for.
-_FUSED_TRACE_COUNT = 0
-_SHARDED_TRACE_COUNT = 0
-_DISPATCH_COUNT = 0
-_HOOK_LOCK = threading.Lock()
-
 
 def fused_trace_count() -> int:
     """Number of fused-body traces since process start (test hook)."""
-    return _FUSED_TRACE_COUNT
+    return int(_TRACES.value(kind="fused"))
 
 
 def sharded_trace_count() -> int:
     """Number of sharded-executor traces since process start (test hook)."""
-    return _SHARDED_TRACE_COUNT
+    return int(_TRACES.value(kind="sharded"))
 
 
 def dispatch_count() -> int:
     """Number of executor dispatches issued by ``exec.api`` (test hook).
 
-    Each fused/batched/sharded program launch counts once; the sharded
-    dynamic path's single-dispatch guarantee is asserted against this.
+    Each fused/batched/sharded program launch counts once (summed over
+    dispatch kinds); the sharded dynamic path's single-dispatch guarantee
+    is asserted against this.
     """
-    return _DISPATCH_COUNT
+    return int(_DISPATCHES.total())
 
 
 def record_fused_trace(sig: Hashable = None) -> None:
     del sig
-    global _FUSED_TRACE_COUNT
-    with _HOOK_LOCK:
-        _FUSED_TRACE_COUNT += 1
+    _TRACES.inc(kind="fused")
 
 
 def record_sharded_trace(key: Hashable = None) -> None:
     del key
-    global _SHARDED_TRACE_COUNT
-    with _HOOK_LOCK:
-        _SHARDED_TRACE_COUNT += 1
+    _TRACES.inc(kind="sharded")
 
 
 def record_dispatch(kind: str, key: Hashable = None) -> None:
-    del kind, key
-    global _DISPATCH_COUNT
-    with _HOOK_LOCK:
-        _DISPATCH_COUNT += 1
+    del key
+    _DISPATCHES.inc(kind=str(kind))

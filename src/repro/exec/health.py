@@ -15,12 +15,30 @@ Counting dispatches instead of wall-clock keeps the schedule deterministic
 tests pin down.  State is process-wide (one table next to the executor
 cache) and keyed by the exact plan signature, so one broken kernel shape
 never poisons its neighbours.
+
+Aggregate counts publish to ``exec_health_events_total{event,table}`` on
+the ``repro.obs`` registry; the per-``table`` instance label keeps one
+table's ``reset()`` from zeroing another's history.  Registry increments
+happen inside the table lock, so :meth:`HealthTable.snapshot` — which
+reads the per-signature dicts *and* the counters under that same lock —
+is an atomic point-in-time view even while dispatch threads are calling
+``record_*`` (previously the counters object could be swapped by a
+concurrent ``reset()`` mid-snapshot).
 """
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
+
+from ..obs import REGISTRY, instance_label
+
+_EVENTS = REGISTRY.counter(
+    "exec_health_events_total",
+    "executor health events (failure/fallback/demotion/recovery)",
+    labelnames=("event", "table"),
+    max_series=8192,
+)
 
 
 @dataclass
@@ -50,14 +68,32 @@ class HealthCounters:
 
 
 class HealthTable:
-    """Thread-safe per-signature health records + aggregate counters."""
+    """Thread-safe per-signature health records + registry-backed counters."""
 
     def __init__(self, max_retries: int = 3, backoff_base: int = 2) -> None:
         self.max_retries = max_retries
         self.backoff_base = backoff_base
         self._lock = threading.Lock()
         self._sigs: Dict[Tuple, _SigHealth] = {}
-        self.counters = HealthCounters()
+        self._label = instance_label("health")
+
+    def _count(self, event: str) -> None:
+        # lock ordering is always table lock -> registry lock; the registry
+        # never calls back into the table, so this cannot deadlock
+        _EVENTS.inc(event=event, table=self._label)
+
+    def _value(self, event: str) -> int:
+        return int(_EVENTS.value(event=event, table=self._label))
+
+    @property
+    def counters(self) -> HealthCounters:
+        """Aggregate counters (compat view over the registry series)."""
+        return HealthCounters(
+            failures=self._value("failure"),
+            fallbacks=self._value("fallback"),
+            demotions=self._value("demotion"),
+            recoveries=self._value("recovery"),
+        )
 
     def _rec(self, sig: Tuple) -> _SigHealth:
         rec = self._sigs.get(sig)
@@ -82,11 +118,11 @@ class HealthTable:
             rec.failures += 1
             rec.consecutive_failures += 1
             rec.last_error = f"{type(err).__name__}: {err}"
-            self.counters.failures += 1
+            self._count("failure")
             if rec.consecutive_failures > self.max_retries:
                 if not rec.demoted:
                     rec.demoted = True
-                    self.counters.demotions += 1
+                    self._count("demotion")
             else:
                 rec.next_retry_call = rec.calls_seen + (
                     self.backoff_base ** rec.consecutive_failures)
@@ -95,7 +131,7 @@ class HealthTable:
         with self._lock:
             rec = self._rec(sig)
             if rec.consecutive_failures and not rec.demoted:
-                self.counters.recoveries += 1
+                self._count("recovery")
             if not rec.demoted:
                 rec.consecutive_failures = 0
                 rec.next_retry_call = 0
@@ -103,7 +139,7 @@ class HealthTable:
     def record_fallback(self, sig: Tuple) -> None:
         with self._lock:
             self._rec(sig)
-            self.counters.fallbacks += 1
+            self._count("fallback")
 
     def is_degraded(self, sig: Tuple) -> bool:
         with self._lock:
@@ -121,23 +157,29 @@ class HealthTable:
             return rec.last_error or None if rec else None
 
     def snapshot(self) -> Dict[str, object]:
-        """Aggregate view folded into ``SpmmService.health()``."""
+        """Aggregate view folded into ``SpmmService.health()``.
+
+        Atomic: signature states and counters are read under the same lock
+        the ``record_*`` mutators take.
+        """
         with self._lock:
             states = [r.state for r in self._sigs.values()]
             return {
                 "signatures": len(self._sigs),
                 "demoted": states.count("demoted"),
                 "retrying": states.count("retrying"),
-                "failures": self.counters.failures,
-                "fallbacks": self.counters.fallbacks,
-                "demotions": self.counters.demotions,
-                "recoveries": self.counters.recoveries,
+                "failures": self._value("failure"),
+                "fallbacks": self._value("fallback"),
+                "demotions": self._value("demotion"),
+                "recoveries": self._value("recovery"),
             }
 
     def reset(self) -> None:
         with self._lock:
             self._sigs.clear()
-            self.counters = HealthCounters()
+            # fresh instance label: this table's series restart at zero
+            # without disturbing any other table's history
+            self._label = instance_label("health")
 
 
 #: Process-wide table used by ``exec.api``'s guarded dispatch.

@@ -40,8 +40,14 @@ from ..distributed.sharding import (
 )
 from ..errors import PlanBuildError
 from ..kernels import ops
+from ..obs import REGISTRY
 from ..robust.faults import HARNESS
 from .cache import EXECUTOR_CACHE, record_fused_trace, record_sharded_trace
+
+_BUILDS = REGISTRY.counter(
+    "exec_executor_builds_total",
+    "executors actually constructed (cache hits skip the build)",
+    labelnames=("kind",))
 
 
 def _fused_body(sig: Tuple, densify_occupancy: Optional[float] = None):
@@ -274,6 +280,10 @@ def _build(sig: Tuple, batch: Optional[int], dsig: Optional[Tuple],
     # fault seam: fires once per executor *build* (cache hits skip _build
     # entirely, so a demoted-then-cached executor never re-fires)
     HARNESS.fire("executor_build", context=sig)
+    if mesh is None:
+        _BUILDS.inc(kind="fused" if batch is None else "batched")
+    else:
+        _BUILDS.inc(kind=f"sharded:{shard_axis}")
     body, n_leaf_args, n_operands = _flat_body(sig, dsig, densify_occupancy)
 
     if mesh is None:
@@ -400,6 +410,7 @@ def build_delta_only_executor(
     key = ("delta_only", m, bk_cfg, bn, impl, fringe_chunk, dsig, batch)
 
     def _builder():
+        _BUILDS.inc(kind="delta_only")
         contrib = _delta_contrib_body(
             m, bk_cfg, bn, impl, False, fringe_chunk, dsig
         )

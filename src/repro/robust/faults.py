@@ -47,6 +47,18 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterator, Optional, Type
 
 from repro.errors import FaultInjected
+from repro.obs import REGISTRY, instance_label
+
+# seam activity publishes to the shared metrics registry; the per-
+# ``harness`` instance label keeps ``reset()`` (fresh label) from erasing
+# another harness's history, and gives health()/Prometheus one view of
+# seam traffic
+_SEAM_CALLS = REGISTRY.counter(
+    "fault_seam_calls_total", "fire-site traversals per fault seam",
+    labelnames=("seam", "harness"), max_series=8192)
+_SEAM_FIRED = REGISTRY.counter(
+    "fault_seam_fired_total", "injected faults raised per seam",
+    labelnames=("seam", "harness"), max_series=8192)
 
 SEAMS = frozenset({
     "executor_build",
@@ -109,8 +121,15 @@ class FaultHarness:
     def __init__(self) -> None:
         self._lock = threading.Lock()
         self._policies: Dict[str, FaultPolicy] = {}
-        self._calls: Dict[str, int] = {}
-        self._fired: Dict[str, int] = {}
+        self._label = instance_label("harness")
+
+    def _series(self, counter) -> Dict[str, int]:
+        """{seam: count} for this harness's series of ``counter``."""
+        return {
+            seam: int(v)
+            for (seam, label), v in counter.series().items()
+            if label == self._label
+        }
 
     # -- arming -----------------------------------------------------------
     def arm(self, seam: str, *, exc: Type[BaseException] = FaultInjected,
@@ -131,8 +150,8 @@ class FaultHarness:
         """Disarm every seam and zero all counters."""
         with self._lock:
             self._policies.clear()
-            self._calls.clear()
-            self._fired.clear()
+            # fresh instance label: this harness's series restart at zero
+            self._label = instance_label("harness")
 
     # -- the production hook ---------------------------------------------
     def fire(self, seam: str, context: Any = None) -> None:
@@ -142,34 +161,40 @@ class FaultHarness:
         Armed: raises the policy's exception when the policy says so.
         """
         with self._lock:
-            self._calls[seam] = self._calls.get(seam, 0) + 1
+            _SEAM_CALLS.inc(seam=seam, harness=self._label)
             policy = self._policies.get(seam)
             if policy is None or not policy.should_fire(context):
                 return
-            self._fired[seam] = self._fired.get(seam, 0) + 1
+            _SEAM_FIRED.inc(seam=seam, harness=self._label)
             raise policy.build_exc(seam, context)
 
     # -- introspection ----------------------------------------------------
     def calls(self, seam: str) -> int:
         with self._lock:
-            return self._calls.get(_check_seam(seam), 0)
+            return int(_SEAM_CALLS.value(seam=_check_seam(seam),
+                                         harness=self._label))
 
     def fired(self, seam: Optional[str] = None) -> int:
         with self._lock:
             if seam is None:
-                return sum(self._fired.values())
-            return self._fired.get(_check_seam(seam), 0)
+                return sum(self._series(_SEAM_FIRED).values())
+            return int(_SEAM_FIRED.value(seam=_check_seam(seam),
+                                         harness=self._label))
 
     def armed_seams(self) -> Dict[str, FaultPolicy]:
         with self._lock:
             return dict(self._policies)
 
     def counters(self) -> Dict[str, Dict[str, int]]:
-        """Snapshot for ``SpmmService.health()``: calls + fires per seam."""
+        """Snapshot for ``SpmmService.health()``: calls + fires per seam.
+
+        Same shape as the pre-registry dicts: only seams actually seen
+        appear (a registry series exists only after its first increment).
+        """
         with self._lock:
             return {
-                "calls": dict(self._calls),
-                "fired": dict(self._fired),
+                "calls": self._series(_SEAM_CALLS),
+                "fired": self._series(_SEAM_FIRED),
             }
 
 

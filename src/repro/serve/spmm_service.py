@@ -58,6 +58,7 @@ from ..errors import (
 )
 from ..exec.health import HEALTH
 from ..kernels.ops import pow2_at_least
+from ..obs import REGISTRY, TRACES, instance_label
 from ..robust.faults import HARNESS
 
 #: Admission policies for a full per-matrix queue (``max_queue`` set).
@@ -92,28 +93,70 @@ def _plan_nnz(plan) -> int:
     return int(um.nnz) if um is not None else 0
 
 
-@dataclasses.dataclass
+#: Every service's lifecycle counters in one registry metric; the per-
+#: ``instance`` label keeps each ``SpmmService``'s counts independent (a
+#: fresh service starts from zero, as its tests expect).
+_SERVICE_EVENTS = REGISTRY.counter(
+    "service_events_total", "SpmmService lifecycle counters",
+    labelnames=("event", "instance"), max_series=65536)
+
+
 class ServiceStats:
-    requests: int = 0
-    flushes: int = 0
-    dispatches: int = 0
-    padded_slots: int = 0  # zero panels added to reach a bucket size
-    updates: int = 0       # update_matrix calls applied
-    warm_starts: int = 0   # registrations served from the registry
-    compactions_scheduled: int = 0  # background folds submitted
-    compactions_applied: int = 0    # background folds swapped in
-    compactions_stale: int = 0      # folds discarded (snapshot went stale)
-    compactions_failed: int = 0     # folds whose build raised (see fold_errors)
-    admission_rejected: int = 0     # submits refused (queue full, "reject")
-    admission_shed: int = 0         # oldest requests dropped ("shed-oldest")
-    deadline_expired: int = 0       # requests expired before their drain
-    quarantines: int = 0            # matrices quarantined (fold failures)
-    tunings_scheduled: int = 0      # background microbenchmark runs started
-    tunings_applied: int = 0        # tuned records adopted into the table
-    tunings_failed: int = 0         # background tunes whose build raised
+    """Monotone serving counters, stored on the ``repro.obs`` registry.
+
+    Call sites read and ``+=``-mutate named attributes exactly as they did
+    when this was a dataclass of ints; the attributes are now views over
+    ``service_events_total{event,instance}`` series, so ``health()`` / the
+    Prometheus export see the same numbers with no second bookkeeping
+    path.  Counters only go up — assigning a smaller value raises.
+    """
+
+    _FIELDS = (
+        "requests",
+        "flushes",
+        "dispatches",
+        "padded_slots",            # zero panels added to reach a bucket size
+        "updates",                 # update_matrix calls applied
+        "warm_starts",             # registrations served from the registry
+        "compactions_scheduled",   # background folds submitted
+        "compactions_applied",     # background folds swapped in
+        "compactions_stale",       # folds discarded (snapshot went stale)
+        "compactions_failed",      # folds whose build raised (fold_errors)
+        "admission_rejected",      # submits refused (queue full, "reject")
+        "admission_shed",          # oldest requests dropped ("shed-oldest")
+        "deadline_expired",        # requests expired before their drain
+        "quarantines",             # matrices quarantined (fold failures)
+        "tunings_scheduled",       # background microbenchmark runs started
+        "tunings_applied",         # tuned records adopted into the table
+        "tunings_failed",          # background tunes whose build raised
+    )
+
+    def __init__(self) -> None:
+        object.__setattr__(self, "_label", instance_label("svc"))
+
+    def __getattr__(self, name: str) -> int:
+        # only reached when normal lookup fails — i.e. for counter fields
+        if name in self._FIELDS:
+            return int(_SERVICE_EVENTS.value(event=name,
+                                             instance=self._label))
+        raise AttributeError(
+            f"ServiceStats has no counter {name!r}; known: {self._FIELDS}")
+
+    def __setattr__(self, name: str, value: int) -> None:
+        if name not in self._FIELDS:
+            raise AttributeError(
+                f"ServiceStats has no counter {name!r}; known: "
+                f"{self._FIELDS}")
+        delta = int(value) - getattr(self, name)
+        if delta < 0:
+            raise ValueError(
+                f"ServiceStats.{name} is monotone; cannot go from "
+                f"{getattr(self, name)} to {value}")
+        if delta:
+            _SERVICE_EVENTS.inc(delta, event=name, instance=self._label)
 
     def as_dict(self) -> Dict[str, int]:
-        return dataclasses.asdict(self)
+        return {f: getattr(self, f) for f in self._FIELDS}
 
 
 class SpmmService:
@@ -190,6 +233,13 @@ class SpmmService:
         # injectable monotonic clock (deadline tests pin time)
         self._clock = time.monotonic
         self.stats = ServiceStats()
+        # per-request tracing (SpmmConfig.telemetry): open traces keyed by
+        # ticket, published to the repro.obs ring when the request
+        # completes (fetch / shed / expired).  Timestamps come from
+        # self._clock, so the deadline tests' injected clock also pins
+        # span structure exactly.
+        self._trace_enabled = bool(getattr(config, "telemetry", False))
+        self._traces: Dict[int, Any] = {}
 
     @property
     def _dynamic_kwargs(self) -> Dict[str, bool]:
@@ -545,6 +595,18 @@ class SpmmService:
                 raise
         return False
 
+    # -- per-request tracing ------------------------------------------------
+    def _now_us(self) -> float:
+        return self._clock() * 1e6
+
+    def _trace_fail(self, ticket: int, outcome: str) -> None:
+        """Close a traced request that completed with a typed failure."""
+        tr = self._traces.pop(ticket, None)
+        if tr is None:
+            return
+        tr.attrs["outcome"] = outcome
+        TRACES.end(tr, self._now_us())
+
     # -- request queue ------------------------------------------------------
     def submit(self, name: str, b: jax.Array,
                deadline: Optional[float] = None,
@@ -564,6 +626,7 @@ class SpmmService:
         (``admission_policy="reject"``) or sheds the oldest queued request
         (``"shed-oldest"`` — the shed ticket completes with
         :class:`AdmissionError`)."""
+        t_admit = self._now_us() if self._trace_enabled else 0.0
         if self._closed:
             raise AdmissionError("service is closed")
         if name not in self._plans:
@@ -597,6 +660,7 @@ class SpmmService:
                 f"newer request (queue full at {self.max_queue})"
             )
             self.stats.admission_shed += 1
+            self._trace_fail(shed_ticket, "shed")
         if timeout is not None:
             deadline = self._clock() + timeout if deadline is None else min(
                 deadline, self._clock() + timeout)
@@ -604,6 +668,16 @@ class SpmmService:
         self._next_ticket += 1
         queue.append((ticket, jnp.asarray(b), deadline))
         self.stats.requests += 1
+        if self._trace_enabled:
+            now = self._now_us()
+            tr = TRACES.begin(
+                f"spmm:{name}", start_us=t_admit,
+                ticket=ticket, matrix=name, n=int(b.shape[1]),
+            )
+            TRACES.add_span(tr, "admit", t_admit, now, deadline=deadline)
+            # queue_wait opens here and closes when flush picks the panel up
+            tr.attrs["queued_us"] = now
+            self._traces[ticket] = tr
         return ticket
 
     def pending(self, name: Optional[str] = None) -> int:
@@ -634,6 +708,7 @@ class SpmmService:
                     f"{now - d:.3f}s past its deadline before a drain"
                 )
                 self.stats.deadline_expired += 1
+                self._trace_fail(ticket, "expired")
             else:
                 keep.append((ticket, panel, d))
         queue[:] = keep
@@ -667,6 +742,7 @@ class SpmmService:
             # they never join a batch, and the batch never waits for them
             self._expire_queue(qname)
             while queue:
+                t_asm0 = self._now_us() if self._trace_enabled else 0.0
                 # FIFO head's shape defines this round's group
                 shape = tuple(queue[0][1].shape)
                 group = [item for item in queue
@@ -676,7 +752,16 @@ class SpmmService:
                 if bucket > len(panels):  # pad to the bucket with zeros so
                     pad = jnp.zeros_like(panels[0])  # one trace per bucket
                     panels += [pad] * (bucket - len(panels))
-                out = self._execute(qname, plan, jnp.stack(panels))
+                stacked = jnp.stack(panels)
+                t_disp0 = self._now_us() if self._trace_enabled else 0.0
+                out = self._execute(qname, plan, stacked)
+                if self._trace_enabled:
+                    t_disp1 = self._now_us()
+                    # the one telemetry-visible sync: waiting on the same
+                    # dispatch (no extra device work) so the span split
+                    # between enqueue and compute is real
+                    jax.block_until_ready(out)
+                    t_block = self._now_us()
                 # dispatch succeeded: now dequeue and record
                 dispatched = {ticket for ticket, _, _ in group}
                 queue[:] = [it for it in queue if it[0] not in dispatched]
@@ -684,6 +769,19 @@ class SpmmService:
                 self.stats.padded_slots += bucket - len(group)
                 for i, (ticket, _, _) in enumerate(group):
                     self._results[ticket] = out[i]
+                    if not self._trace_enabled:
+                        continue
+                    tr = self._traces.get(ticket)
+                    if tr is None:
+                        continue
+                    TRACES.add_span(tr, "queue_wait",
+                                    tr.attrs.get("queued_us", t_asm0),
+                                    t_asm0)
+                    TRACES.add_span(tr, "batch_assembly", t_asm0, t_disp0,
+                                    batch=len(group), bucket=bucket)
+                    TRACES.add_span(tr, "dispatch", t_disp0, t_disp1)
+                    TRACES.add_span(tr, "block_until_ready", t_disp1,
+                                    t_block)
                 done += len(group)
         self.stats.flushes += 1
         return done
@@ -698,7 +796,15 @@ class SpmmService:
         the ticket has no result: never issued, still queued (flush
         first), or already fetched."""
         if ticket in self._results:
-            return self._results.pop(ticket)
+            t0 = self._now_us() if self._trace_enabled else 0.0
+            out = self._results.pop(ticket)
+            tr = self._traces.pop(ticket, None)
+            if tr is not None:
+                t1 = self._now_us()
+                TRACES.add_span(tr, "fetch", t0, t1)
+                tr.attrs["outcome"] = "ok"
+                TRACES.end(tr, t1)
+            return out
         if ticket in self._failed:
             raise self._failed.pop(ticket)
         if any(t == ticket for q in self._queues.values() for t, _, _ in q):

@@ -49,6 +49,7 @@ from .dynamic import DynamicPlan
 from .dynamic import update_values as _dynamic_update_values
 from .errors import DeadlineExceeded, PlanBuildError
 from .exec import api as _exec
+from .obs import TRACES
 
 __all__ = [
     "SparseMatrix", "from_coo", "from_plan",
@@ -56,6 +57,36 @@ __all__ = [
 ]
 
 PlanLike = Union[NeutronPlan, ShardedPlan, DynamicPlan]
+
+
+def _telemetry_on(plan: PlanLike) -> bool:
+    """Whether the plan's config opts into host-side tracing."""
+    p = plan.plan if isinstance(plan, DynamicPlan) else plan
+    return bool(getattr(p.config, "telemetry", False))
+
+
+def _traced_call(name: str, plan: PlanLike, attrs, fn):
+    """Run ``fn()``; when the plan opts in, record an obs trace around it.
+
+    The trace wraps the dispatch *and* the deadline await in a single
+    ``dispatch`` span — host-side bookkeeping only, so the off path is
+    exactly the bare call.
+    """
+    if not _telemetry_on(plan):
+        return fn()
+    tr = TRACES.begin(f"facade:{name}", **attrs)
+    t0 = TRACES.now_us()
+    try:
+        out = fn()
+    except BaseException as err:
+        TRACES.add_span(tr, "dispatch", t0, TRACES.now_us())
+        tr.attrs["outcome"] = type(err).__name__
+        TRACES.end(tr)
+        raise
+    TRACES.add_span(tr, "dispatch", t0, TRACES.now_us())
+    tr.attrs["outcome"] = "ok"
+    TRACES.end(tr)
+    return out
 
 
 def _await(out: Any, deadline: Optional[float], t0: float, what: str):
@@ -265,15 +296,23 @@ def spmm(a, b, *, deadline: Optional[float] = None) -> jax.Array:
     ``b`` is ``(K, N)``.  Batched operands go through :func:`bspmm`.
     """
     a = _as_matrix(a, "spmm")
-    t0 = time.monotonic()
+    b = jnp.asarray(b)
     p = a.plan
-    if isinstance(p, DynamicPlan):
-        out = p.execute(jnp.asarray(b))
-    elif isinstance(p, ShardedPlan):
-        out = _exec.execute_sharded(p, jnp.asarray(b))
-    else:
-        out = _exec.execute(p, jnp.asarray(b))
-    return _await(out, deadline, t0, "spmm")
+
+    def run():
+        t0 = time.monotonic()
+        if isinstance(p, DynamicPlan):
+            out = p.execute(b)
+        elif isinstance(p, ShardedPlan):
+            out = _exec.execute_sharded(p, b)
+        else:
+            out = _exec.execute(p, b)
+        return _await(out, deadline, t0, "spmm")
+
+    return _traced_call(
+        "bspmm" if b.ndim == 3 else "spmm", p,
+        {"shape": a.shape, "n": int(b.shape[-1])}, run,
+    )
 
 
 def bspmm(a, b, *, deadline: Optional[float] = None) -> jax.Array:
@@ -302,9 +341,13 @@ def sddmm(a, x, y, *, deadline: Optional[float] = None) -> jax.Array:
     """
     a = _as_matrix(a, "sddmm")
     plan = a._static_plan("sddmm")
-    t0 = time.monotonic()
-    out = _exec.execute_sddmm(plan, jnp.asarray(x), jnp.asarray(y))
-    return _await(out, deadline, t0, "sddmm")
+
+    def run():
+        t0 = time.monotonic()
+        out = _exec.execute_sddmm(plan, jnp.asarray(x), jnp.asarray(y))
+        return _await(out, deadline, t0, "sddmm")
+
+    return _traced_call("sddmm", plan, {"shape": a.shape}, run)
 
 
 def spspmm(a, b, *, deadline: Optional[float] = None) -> SparseMatrix:
@@ -319,9 +362,16 @@ def spspmm(a, b, *, deadline: Optional[float] = None) -> SparseMatrix:
     b = _as_matrix(b, "spspmm")
     a_plan = a._static_plan("spspmm")
     b_plan = b._static_plan("spspmm")
-    t0 = time.monotonic()
-    cr, cc, cv, cshape = _exec.execute_spspmm(a_plan, b_plan)
-    _await(cv, deadline, t0, "spspmm")
+
+    def run():
+        t0 = time.monotonic()
+        out = _exec.execute_spspmm(a_plan, b_plan)
+        _await(out[2], deadline, t0, "spspmm")
+        return out
+
+    cr, cc, cv, cshape = _traced_call(
+        "spspmm", a_plan, {"shape": a.shape}, run
+    )
     cfg = a_plan.config
     if isinstance(a_plan, ShardedPlan) or isinstance(b_plan, ShardedPlan):
         # the product pattern has no window assignment yet — prepare it

@@ -29,3 +29,23 @@ def test_guard_catches_stringly_imports():
 
 def test_facade_allowance_is_exactly_one_pair():
     assert check_layers.ALLOWED == {("repro/core/spmm.py", "repro.exec.api")}
+
+
+def test_obs_is_a_bottom_layer():
+    """obs may import nothing from repro except itself; everything above —
+    including robust — may import it."""
+    assert check_layers.FORBIDDEN["obs"] == ("repro",)
+    assert check_layers.ALLOWED_PREFIXES["obs"] == ("repro.obs",)
+    assert "repro.obs" in check_layers.ALLOWED_PREFIXES["robust"]
+
+
+def test_guard_catches_obs_importing_upward():
+    tree = ast.parse("from ..core import plan_ir\n")
+    hits = list(check_layers.iter_imports("repro/obs/metrics.py", tree))
+    assert hits == [(1, "repro.core")]
+    # and the rule set flags it: repro.core matches the "repro" prefix and
+    # no obs allowance covers it
+    assert not any(
+        "repro.core".startswith(p)
+        for p in check_layers.ALLOWED_PREFIXES["obs"]
+    )

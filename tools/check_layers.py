@@ -8,7 +8,8 @@ top-level *and* function-local imports, plus ``importlib.import_module``
 calls with literal arguments — and fails CI when a package imports a layer
 above itself:
 
-    errors, robust          (shared taxonomy + fault harness: no deps)
+    errors, obs             (shared taxonomy + telemetry: no repro deps)
+    robust                  (fault harness: errors + obs only)
     kernels, distributed    (leaf utilities)
         -> core             (plan IR + plan builders)
         -> exec             (executor pipeline + health table)
@@ -17,9 +18,12 @@ above itself:
         -> sparse           (the user-facing operator facade; imports
                              anything, imported by nothing below)
 
-``repro.errors`` (a top-level module) and ``repro.robust`` sit at the very
-bottom: any layer may import them, they import nothing above (``robust``
-may import ``errors`` and itself).
+``repro.errors`` (a top-level module), ``repro.obs`` (the telemetry
+registry/trace/profiler package) and ``repro.robust`` sit at the very
+bottom: any layer may import them, they import nothing above (``obs``
+imports only itself; ``robust`` may import ``errors``, ``obs`` and
+itself).  Keeping ``obs`` dependency-free is what lets every counter
+island in the stack publish into one registry without bending the graph.
 
 One documented allowance: ``core/spmm.py`` is the public facade and
 forwards execution names to ``repro.exec.api`` through a lazy PEP 562
@@ -58,8 +62,10 @@ PKG = "repro"
 # package -> layers it must never import (prefix match on absolute module)
 FORBIDDEN = {
     # bottom of the graph: the error taxonomy imports nothing from the
-    # package, the fault harness only repro.errors (see ALLOWED_PREFIXES)
+    # package, the telemetry registry only itself, the fault harness only
+    # repro.errors + repro.obs (see ALLOWED_PREFIXES)
     "errors": ("repro",),
+    "obs": ("repro",),
     "robust": ("repro",),
     "kernels": ("repro.core", "repro.exec", "repro.dynamic", "repro.serve",
                 "repro.distributed", "repro.launch", "repro.models",
@@ -83,8 +89,12 @@ ALLOWED = {
 # docstring); expressed as an allowed *prefix* rather than per-file pairs.
 ALLOWED_PREFIXES = {
     "kernels": ("repro.core.cost_model",),
-    # the fault harness may import the taxonomy (and its own package)
-    "robust": ("repro.errors", "repro.robust"),
+    # the telemetry package may import itself (relative imports resolve to
+    # repro.obs.*) and nothing else from the package
+    "obs": ("repro.obs",),
+    # the fault harness may import the taxonomy, the telemetry registry it
+    # publishes seam counters to, and its own package
+    "robust": ("repro.errors", "repro.obs", "repro.robust"),
 }
 
 # the tuner persistence hook may only be *called* from these layers — the
