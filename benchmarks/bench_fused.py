@@ -5,14 +5,21 @@ merge) against running the two engine paths as separate dispatches and
 summing their (M, N) contributions — the pre-fusion executor shape.  Also
 reports the prepare() host time so preprocessing regressions show up next
 to the execution wins they pay for.
+
+A second panel runs the DLMC-style pruned-DNN matrices through the
+structured-sparsity fast lane (auto-detected N:M packed payloads) against
+the same plan pinned to the general lane (``structure_hint="general"``).
 """
+import dataclasses
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import spmm
-from .common import BENCH_DATASETS, emit, load_dataset, time_fn
+from .common import (
+    BENCH_DATASETS, STRUCTURED_DATASETS, emit, load_dataset, time_fn,
+)
 
 N = 128
 
@@ -42,4 +49,24 @@ def run():
             f"two_dispatch_us={split_us:.1f};"
             f"fusion_speedup={split_us / max(fused_us, 1e-9):.2f}x;"
             f"prepare_us={best_prep * 1e6:.1f}"))
+
+    # structured fast lane vs the same plan pinned general (bn matched to
+    # the operand width so neither lane pays column padding)
+    cfg = spmm.SpmmConfig(impl="xla", bn=N)
+    for name in STRUCTURED_DATASETS:
+        rows, cols, vals, shape = load_dataset(name, max_dim=4096)
+        b = jnp.asarray(rng.randn(shape[1], N).astype(np.float32))
+        plan_s = spmm.prepare(rows, cols, vals, shape, cfg)
+        plan_g = spmm.prepare(
+            rows, cols, vals, shape,
+            dataclasses.replace(cfg, structure_hint="general"))
+        struct_us = time_fn(lambda: spmm.execute(plan_s, b))
+        general_us = time_fn(lambda: spmm.execute(plan_g, b))
+        stats = plan_s.stats_dict
+        out.append(emit(
+            f"structured_lane/{name}", struct_us,
+            f"general_us={general_us:.1f};"
+            f"speedup={general_us / max(struct_us, 1e-9):.2f}x;"
+            f"format={plan_s.matrix_format};"
+            f"padding_waste={stats['padding_waste']:.3f}"))
     return out

@@ -50,9 +50,14 @@ def main(argv=None) -> int:
         m, k = shape
         nnz = int(rows.shape[0])
         cm = tuner.resolve_cost_model("spmm", m, k, nnz, config)
+        # the tile-shape decision rides the same record: asking for it here
+        # puts it under the --expect-warm gate (a warm process answers from
+        # the table with zero microbenchmarks)
+        ts = cm.tile_shape(m, k, int(config.bn), nnz)
         resolved[name] = {
             "shape_class": tuner.shape_class("spmm", m, k, nnz, config),
             "source": getattr(cm, "source", "analytic"),
+            "tile_shape": list(ts) if ts is not None else None,
         }
 
     counters = tuner.get_tuner().counters()

@@ -23,6 +23,11 @@ BENCH_DATASETS = [
     "mouse_gene", "reddit",
 ]
 
+# pruned-DNN panel for the structured-sparsity fast lane: magnitude-pruned
+# N:M weights (auto-detected, ride the packed lane) + the unstructured
+# control at the same density (stays on the general lane)
+STRUCTURED_DATASETS = ["dlmc-nm-1-32", "dlmc-nm-2-32", "dlmc-unstr"]
+
 
 def load_dataset(name: str, max_dim: int = 4096):
     spec = graphs.PAPER_DATASETS[name]

@@ -177,9 +177,87 @@ class EngineCostModel:
         """Occupancy above which the core densifies (None: kernel default)."""
         return None
 
+    def select_matrix_format(
+        self, *, nm_pattern: Optional[tuple], tile_zero_fraction: float,
+        num_steps: int, bm: int, bk: int, row_cap: int,
+        hint=None,
+    ) -> str:
+        return select_matrix_format(
+            nm_pattern=nm_pattern, tile_zero_fraction=tile_zero_fraction,
+            num_steps=num_steps, bm=bm, bk=bk, row_cap=row_cap, hint=hint,
+        )
+
+    def tile_shape(self, m: int, k: int, n: int, nnz: int) -> Optional[tuple]:
+        """Autotuned ``(bm, bk)`` for this problem, or None to keep the
+        config's.  The analytic base never overrides — only the measured
+        table (core.tuner.TunedCostModel) answers, demote-only validated
+        against the exact plan shape and VMEM budget."""
+        return None
+
 
 def default_cost_model(n_cols: int = 256) -> EngineCostModel:
     return EngineCostModel.analytic_tpu(n_cols=n_cols)
+
+
+# --- structured matrix-path payload format -----------------------------------
+# The matrix engine pays for every byte of the A payload it streams; the
+# structured encodings (core.formats) trade the padded (T, bm, bk) stream for
+# packed values + metadata.  Selection is priced on modeled payload bytes
+# with a conservative hysteresis so the general path keeps every workload
+# that does not *clearly* win — bit-exact parity on existing panels is part
+# of the contract.
+STRUCTURED_BYTES_HYSTERESIS = 0.7   # packed bytes must be <= 70% of general
+
+
+def matrix_payload_bytes(
+    fmt: str, num_steps: int, bm: int, bk: int,
+    *, nm_pattern: Optional[tuple] = None, row_cap: int = 0,
+) -> int:
+    """Modeled HBM bytes of the matrix-path A payload under ``fmt``."""
+    if fmt == "nm":
+        n_pat, m_pat = nm_pattern
+        gk = bk // m_pat
+        # packed fp32 values (n per group) + int32 position codes (1/group)
+        return num_steps * bm * gk * (n_pat + 1) * 4
+    if fmt == "bitmap":
+        words = (bk + 31) // 32
+        return num_steps * bm * (words + row_cap) * 4
+    return num_steps * bm * bk * 4
+
+
+def select_matrix_format(
+    *, nm_pattern: Optional[tuple], tile_zero_fraction: float,
+    num_steps: int, bm: int, bk: int, row_cap: int,
+    hint=None,
+) -> str:
+    """Pick the matrix-path payload format: general | nm | bitmap.
+
+    Explicit hints (``("nm", n, m)`` / ``"bitmap"``) override pricing; the
+    soft ``"nm"`` hint takes any detected pattern.  Unhinted selection
+    promotes only a *detected* N:M pattern with a substantial modeled-bytes
+    saving — never the bitmap payload: unstructured graph panels routinely
+    exceed any waste threshold (measured 0.88-0.99 on the bench panel), so
+    auto-bitmap would move existing workloads off the bit-exact general
+    path.  Bitmap is opt-in (hint), floored on not growing the payload.
+    """
+    if isinstance(hint, tuple) and hint and hint[0] == "nm":
+        return "nm"
+    general = matrix_payload_bytes("general", num_steps, bm, bk)
+    if hint == "bitmap":
+        bitmap_bytes = matrix_payload_bytes(
+            "bitmap", num_steps, bm, bk, row_cap=row_cap
+        )
+        # honor the hint unless packing would *grow* the payload
+        if bitmap_bytes <= general:
+            return "bitmap"
+        return "general"
+    if nm_pattern is not None:
+        nm_bytes = matrix_payload_bytes(
+            "nm", num_steps, bm, bk, nm_pattern=nm_pattern
+        )
+        if hint == "nm" or nm_bytes <= STRUCTURED_BYTES_HYSTERESIS * general:
+            return "nm"
+    return "general"
 
 
 # --- vector-path (fringe) VMEM dispatch tiers ------------------------------

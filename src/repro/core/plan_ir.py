@@ -42,7 +42,9 @@ from .cost_model import select_fringe_tier
 # layouts within one process, and (b) the persistent plan registry
 # (dynamic/registry.py) can refuse plans serialized under an older layout
 # instead of misinterpreting their arrays.
-PLAN_FORMAT_VERSION = 1
+# v2: structured-sparsity payload leaves (N:M + bitmap) and the trailing
+# (matrix_format, format_params) signature fields.
+PLAN_FORMAT_VERSION = 2
 
 PATH_CORE = 0
 PATH_FRINGE = 1
@@ -52,6 +54,13 @@ PATH_FRINGE = 1
 # signature must update these (and bump PLAN_FORMAT_VERSION).
 SIG_IMPL = 5
 SIG_FRINGE_TIER = 14
+SIG_MATRIX_FORMAT = 18
+SIG_FORMAT_PARAMS = 19
+
+# matrix-path payload encodings (core.formats pack/unpack pairs); the
+# signature-carried format keeps structured and general plans from ever
+# aliasing one cached executor
+MATRIX_FORMATS = ("general", "nm", "bitmap")
 
 
 def sig_impl(sig: Tuple) -> Optional[str]:
@@ -75,6 +84,29 @@ def xla_fallback_sig(sig: Tuple) -> Tuple:
         raise ValueError(f"not a plan-style signature: {sig!r}")
     demoted = list(sig)
     demoted[SIG_IMPL] = "xla"
+    return tuple(demoted)
+
+
+def sig_matrix_format(sig: Tuple) -> Optional[str]:
+    """The matrix-path payload format of a plan-style signature; None for
+    non-plan sigs (sharded wrappers, delta sidecars)."""
+    if sig_impl(sig) is not None and len(sig) > SIG_MATRIX_FORMAT:
+        return sig[SIG_MATRIX_FORMAT]
+    return None
+
+
+def general_format_sig(sig: Tuple) -> Tuple:
+    """The same plan signature demoted to the general (flat tile) payload.
+
+    Structured plans keep their general leaves alongside the packed ones,
+    so consumers that only understand the flat stream (the delta-merge
+    executors, SDDMM) demote the format field rather than the whole impl.
+    """
+    if sig_matrix_format(sig) in (None, "general"):
+        return sig
+    demoted = list(sig)
+    demoted[SIG_MATRIX_FORMAT] = "general"
+    demoted[SIG_FORMAT_PARAMS] = (0, 0)
     return tuple(demoted)
 
 
@@ -163,6 +195,14 @@ class SpmmConfig:
     # NOT execution-only: tuned models can change plan *structure* (split,
     # tiers), so autotune stays part of the registry fingerprint.
     autotune: Union[bool, str] = False
+    # structured-sparsity hint for the matrix-path payload format:
+    #   None          — detect at prepare time, cost model decides
+    #   "general"     — force the flat tile stream (skip detection)
+    #   "nm"          — use the detected N:M packing; general if none detected
+    #   ("nm", n, m)  — assert this exact N:M pattern; PlanBuildError if the
+    #                   core stream does not satisfy it
+    #   "bitmap"      — force the bitmap-compressed payload
+    structure_hint: Optional[Any] = None
     # host-side telemetry (repro.obs): per-dispatch roofline profiling and
     # per-request tracing.  Never part of signature() — toggling it must
     # not retrace, re-dispatch, or change any numeric output.
@@ -278,6 +318,15 @@ class NeutronPlan:
     fringe_kb_rows: jax.Array   # (num_chunks*chunk,) int32
     fringe_kb_cols: jax.Array   # (num_chunks*chunk,) int32
     fringe_kb_vals: jax.Array   # (num_chunks*chunk,)
+    # structured matrix-path payloads (core.formats pack/unpack pairs).
+    # Alternative *encodings* of flat_values — the general stream is always
+    # built too, so format demotion (dynamic updates, SDDMM, sharding) never
+    # needs a re-prepare.  (1, 1, 1) zero dummies unless the plan's
+    # matrix_format selects them.
+    nm_values: jax.Array        # (T, bm, n*gk) f32 slot-major packed values
+    nm_codes: jax.Array         # (T, bm, gk) int32, 8-bit positions per slot
+    bitmap_words: jax.Array     # (T, bm, ceil(bk/32)) int32 occupancy bits
+    bitmap_values: jax.Array    # (T, bm, row_cap) f32 packed row values
 
     shape: Tuple[int, int]
     config: SpmmConfig
@@ -286,6 +335,11 @@ class NeutronPlan:
     # budget (cost_model.select_fringe_tier): "resident" | "ksharded" | "xla"
     fringe_tier: str = "resident"
     fringe_bk: int = 0           # k-block size of the ksharded tier (0 else)
+    # matrix-path payload format chosen at prepare time
+    # (cost_model.select_matrix_format): "general" | "nm" | "bitmap"
+    matrix_format: str = "general"
+    # (n, m) for "nm"; (num_words, row_cap) for "bitmap"; (0, 0) general
+    format_params: Tuple[int, int] = (0, 0)
     # host-side COO->slot inverse maps for dynamic value updates.  Not a
     # pytree leaf and not aux data (numpy payloads are unhashable): a plan
     # round-tripped through tree operations comes back with maps=None and
@@ -300,10 +354,13 @@ class NeutronPlan:
             self.gather_src_matrix, self.gather_src_vector,
             self.fringe_kb_chunk, self.fringe_kb_rows,
             self.fringe_kb_cols, self.fringe_kb_vals,
+            self.nm_values, self.nm_codes,
+            self.bitmap_words, self.bitmap_values,
         )
         return leaves, (
             self.shape, self.config, self.stats,
             self.fringe_tier, self.fringe_bk,
+            self.matrix_format, self.format_params,
         )
 
     @classmethod
@@ -345,6 +402,7 @@ class NeutronPlan:
             self.fringe_tier, self.fringe_bk,
             int(self.fringe_kb_chunk.shape[0]),
             int(self.fringe_kb_rows.shape[0]),
+            self.matrix_format, tuple(self.format_params),
         )
 
 
@@ -393,12 +451,13 @@ class ShardedPlan:
 
 
 # --- executor-body leaf ordering -------------------------------------------
-# Every executor flavor takes the same 13 plan leaves (then optionally the 8
+# Every executor flavor takes the same 17 plan leaves (then optionally the 8
 # delta-sidecar leaves, then b); the pipeline builds PartitionSpecs from the
-# per-leaf ranks below.
+# per-leaf ranks below.  The four trailing leaves are the structured
+# matrix-path payloads — (1, 1, 1) dummies on general-format plans.
 
-N_PLAN_LEAVES = 13   # executor-body plan args (everything before b)
-LEAF_RANKS = (1, 1, 3, 1, 1, 1, 1, 1, 1, 1, 1, 1, 1)
+N_PLAN_LEAVES = 17   # executor-body plan args (everything before b)
+LEAF_RANKS = (1, 1, 3, 1, 1, 1, 1, 1, 1, 1, 1, 1, 1, 3, 3, 3, 3)
 
 # positions of the value-carrying leaves in plan_leaves order — the slots
 # dynamic value updates scatter into (dynamic/delta.py patches the sharded
@@ -420,6 +479,8 @@ def plan_leaves(plan: NeutronPlan) -> Tuple[jax.Array, ...]:
         plan.col_perm, plan.gather_src_matrix, plan.gather_src_vector,
         plan.fringe_kb_chunk, plan.fringe_kb_rows,
         plan.fringe_kb_cols, plan.fringe_kb_vals,
+        plan.nm_values, plan.nm_codes,
+        plan.bitmap_words, plan.bitmap_values,
     )
 
 
@@ -719,6 +780,9 @@ def stack_shard_leaves(
             gm, gv,  # already (m_loc_max,) — prepared at the padded shape
             pad_to(kbc, nch_max), pad_to(kbr, nnzkb_max),
             pad_to(kbcol, nnzkb_max), pad_to(kbv, nnzkb_max, 0.0),
+            # structured payloads: sharded plans always prepare general
+            # format, so these are the uniform (1, 1, 1) dummies
+            *leaves[13:],
         )
         for i, arr in enumerate(padded):
             stacked[i].append(arr)

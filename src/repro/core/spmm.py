@@ -36,6 +36,7 @@ from typing import Any, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from ..errors import PlanBuildError
 from ..kernels import ops
 from . import formats, partition, plan_ir, reorder, reuse
 from .coordinator import (
@@ -101,6 +102,97 @@ def prepare_call_count() -> int:
     return int(_PREPARES.total())
 
 
+# structured-payload leaf dummies: every plan carries the four structured
+# leaves; non-selected formats get (1, 1, 1) zero arrays (inert and cheap,
+# the same idiom as the k-bucketed fringe stream)
+_DUMMY_F32 = np.zeros((1, 1, 1), np.float32)
+_DUMMY_I32 = np.zeros((1, 1, 1), np.int32)
+
+
+def _structured_payload(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    shape: Tuple[int, int],
+    config: SpmmConfig,
+    cm: EngineCostModel,
+    flat_values: np.ndarray,
+    has_core: bool,
+    tile_density: float,
+):
+    """Choose and build the structured matrix-path payload for prepare().
+
+    Returns ``(matrix_format, format_params, (nm_values, nm_codes),
+    (bitmap_words, bitmap_values))``.  The general flat stream is always
+    kept alongside — structured payloads are alternative *encodings*, so
+    format demotion never needs a re-prepare.
+    """
+    hint = config.structure_hint
+    general = (
+        "general", (0, 0), (_DUMMY_F32, _DUMMY_I32), (_DUMMY_I32, _DUMMY_F32)
+    )
+    if hint == "general" or not has_core:
+        return general
+    explicit_nm = (
+        isinstance(hint, tuple) and len(hint) == 3 and hint[0] == "nm"
+    )
+    if config.reorder_cols:
+        # the column permutation moves nonzeros across m-groups, so
+        # group-local structure no longer matches the original pattern
+        if explicit_nm or hint in ("nm", "bitmap"):
+            raise PlanBuildError(
+                "structure_hint is incompatible with reorder_cols=True: "
+                "the column permutation destroys group-local structure"
+            )
+        return general
+    nm_pat = None
+    if explicit_nm:
+        nm_pat = (int(hint[1]), int(hint[2]))
+        if nm_pat[1] <= 0 or config.bk % nm_pat[1]:
+            raise PlanBuildError(
+                f"structure_hint {hint!r} needs m dividing bk={config.bk}"
+            )
+    elif hint in (None, "nm"):
+        nm_pat = formats.detect_nm_pattern(rows, cols, shape)
+        # tiles chunk columns at bk boundaries; groups must not straddle
+        if nm_pat is not None and config.bk % nm_pat[1]:
+            nm_pat = None
+    t_steps, bm, bk = flat_values.shape
+    # bitmap row capacity the packer would choose (max per-row count,
+    # rounded up), priced before committing to the pack
+    per_row_max = int(np.count_nonzero(flat_values, axis=2).max())
+    row_cap_est = max(8, ((per_row_max + 7) // 8) * 8)
+    fmt = cm.select_matrix_format(
+        nm_pattern=nm_pat,
+        tile_zero_fraction=1.0 - float(tile_density),
+        num_steps=int(t_steps), bm=int(bm), bk=int(bk),
+        row_cap=row_cap_est, hint=hint,
+    )
+    if fmt == "nm" and nm_pat is not None:
+        n_pat, m_pat = nm_pat
+        try:
+            nm_values, nm_codes = formats.pack_nm_tiles(
+                flat_values, n_pat, m_pat
+            )
+        except ValueError as e:
+            if explicit_nm:
+                raise PlanBuildError(
+                    f"core tile stream violates the hinted {n_pat}:{m_pat} "
+                    f"pattern: {e}"
+                ) from e
+            return general
+        return (
+            "nm", (n_pat, m_pat), (nm_values, nm_codes),
+            (_DUMMY_I32, _DUMMY_F32),
+        )
+    if fmt == "bitmap":
+        words, packed, row_cap = formats.pack_bitmap_tiles(flat_values)
+        return (
+            "bitmap", (int(words.shape[2]), int(row_cap)),
+            (_DUMMY_F32, _DUMMY_I32), (words, packed),
+        )
+    return general
+
+
 def prepare(
     rows: np.ndarray,
     cols: np.ndarray,
@@ -108,6 +200,8 @@ def prepare(
     shape: Tuple[int, int],
     config: SpmmConfig = SpmmConfig(),
     cost_model: Optional[EngineCostModel] = None,
+    *,
+    _tune_tile_shape: bool = True,
 ) -> NeutronPlan:
     """Host-side preprocessing (one-time; amortized across epochs)."""
     m, k = shape
@@ -119,6 +213,14 @@ def prepare(
     cm = cost_model if cost_model is not None else resolve_cost_model(
         "spmm", int(m), int(k), int(rows.shape[0]), config
     )
+    # tuned (bm, bk) applies before partitioning — the tile shape drives
+    # window costs, the core/fringe split, and every static plan shape.
+    # prepare_sharded resolves it once at the global shape and passes
+    # _tune_tile_shape=False so per-shard sub-prepares stay mesh-uniform.
+    if _tune_tile_shape and config.autotune:
+        ts = cm.tile_shape(int(m), int(k), config.bn, int(rows.shape[0]))
+        if ts is not None:
+            config = dataclasses.replace(config, bm=int(ts[0]), bk=int(ts[1]))
     t0 = time.perf_counter()
 
     # 1) heterogeneous workload partitioning (§5.2)
@@ -211,6 +313,17 @@ def prepare(
         flat_values = np.zeros((1, config.bm, config.bk), np.float32)
         core_lin = np.zeros(0, np.int64)
 
+    # 3b) structured matrix-path payload (structured-sparsity fast lane):
+    # detect N:M structure on the deduped pattern (or honor an explicit
+    # structure_hint) and re-encode the flat tile stream as a packed
+    # payload when the cost model prices it cheaper than the padding waste
+    matrix_format, format_params, nm_payload, bitmap_payload = (
+        _structured_payload(
+            rows, cols, shape, config, cm, flat_values,
+            has_core=bool(part.core_nnz), tile_density=float(tile_density),
+        )
+    )
+
     # map packed core rows -> original ids
     core_row_map = np.full(nw * config.bm, -1, np.int64)
     if n_core:
@@ -297,6 +410,12 @@ def prepare(
         ("k_pad", k_pad),
         ("fringe_tier", fringe_tier),
         ("fringe_bk", int(fringe_bk)),
+        ("matrix_format", matrix_format),
+        ("format_params", tuple(format_params)),
+        # zero fraction of the *active* tiles — the padding waste the
+        # structured formats remove (0 when there is no core path)
+        ("padding_waste",
+         float(1.0 - tile_density) if part.core_nnz else 0.0),
     )
     return NeutronPlan(
         step_window=jnp.asarray(step_window),
@@ -314,11 +433,17 @@ def prepare(
         fringe_kb_rows=jnp.asarray(kb_rows),
         fringe_kb_cols=jnp.asarray(kb_cols),
         fringe_kb_vals=jnp.asarray(kb_vals),
+        nm_values=jnp.asarray(nm_payload[0]),
+        nm_codes=jnp.asarray(nm_payload[1]),
+        bitmap_words=jnp.asarray(bitmap_payload[0]),
+        bitmap_values=jnp.asarray(bitmap_payload[1]),
         shape=tuple(shape),
         config=config,
         stats=stats,
         fringe_tier=fringe_tier,
         fringe_bk=int(fringe_bk),
+        matrix_format=matrix_format,
+        format_params=tuple(format_params),
         update_maps=update_maps,
     )
 
@@ -365,6 +490,19 @@ def prepare_sharded(
     cm = cost_model if cost_model is not None else resolve_cost_model(
         "spmm", int(m), int(k), int(rows.shape[0]), config
     )
+    # tuned (bm, bk) resolves once here, at the global shape, so window
+    # balancing, the per-shard sub-prepares (tuning suppressed), and the
+    # mesh-uniform signature all agree on one tile shape
+    if config.autotune:
+        ts = cm.tile_shape(int(m), int(k), config.bn, int(rows.shape[0]))
+        if ts is not None:
+            config = dataclasses.replace(config, bm=int(ts[0]), bk=int(ts[1]))
+    # per-shard prepares always build the general payload: structured
+    # leaves would need mesh-uniform packed shapes across shards with
+    # different patterns, so the fast lane stays single-device for now.
+    # Only the sub-prepares see the override — the ShardedPlan keeps the
+    # caller's config, so registry fingerprints keyed on it still match.
+    shard_config = dataclasses.replace(config, structure_hint="general")
 
     wc = window_costs_from_coo(rows, m, config.bm, k, cm, alpha=config.alpha)
     decision = select_shard_axis(
@@ -384,7 +522,8 @@ def prepare_sharded(
     )
 
     if shard_axis == "rhs":
-        plan = prepare(rows, cols, vals, shape, config, cm)
+        plan = prepare(rows, cols, vals, shape, shard_config, cm,
+                       _tune_tile_shape=False)
         um = plan.update_maps
         smaps = ShardedUpdateMaps(
             shape=tuple(shape), rows=um.rows, cols=um.cols, vals=um.vals,
@@ -437,7 +576,7 @@ def prepare_sharded(
     # problem over locally-relabeled rows.  The per-shard fringe dispatch
     # tier is forced off (budget 0) because the mesh-uniform tier is chosen
     # below from the *largest* shard and re-bucketed once for all shards.
-    sub_cfg = dataclasses.replace(config, fringe_vmem_budget=0)
+    sub_cfg = dataclasses.replace(shard_config, fringe_vmem_budget=0)
     row_window = rows // config.bm if rows.size else rows
     plans: List[NeutronPlan] = []
     shard_idx: List[np.ndarray] = []  # global nnz ids per shard
@@ -451,7 +590,8 @@ def prepare_sharded(
         )
         shard_idx.append(np.flatnonzero(mask))
         plans.append(prepare(
-            local_rows, cols[mask], vals[mask], (m_loc_max, k), sub_cfg, cm
+            local_rows, cols[mask], vals[mask], (m_loc_max, k), sub_cfg, cm,
+            _tune_tile_shape=False,
         ))
 
     # --- mesh-uniform static structure: pad every leaf to the max ---------
@@ -495,6 +635,7 @@ def prepare_sharded(
         (m_loc_max, k), cfg.bm, cfg.bk, cfg.bn, cfg.impl, cfg.reorder_cols,
         cfg.fringe_chunk, nw_kernel, t_max, nnzf_max, nfr_max,
         has_core, has_fringe, u_tier, int(u_bk), nch_max, nnzkb_max,
+        "general", (0, 0),
     )
 
     # COO->slot maps: shard-local sub-plan maps (padding is prefix-

@@ -47,8 +47,10 @@ from .cost_model import (
     DELTA_MAX_FRACTION,
     DELTA_MAX_SLOWDOWN,
     FRINGE_VMEM_BUDGET,
+    MXU_DIM,
     ROWS_IMBALANCE_THRESHOLD,
     SUBLANES,
+    VMEM_BYTES,
     EngineCostModel,
     default_cost_model,
     fringe_resident_bytes,
@@ -269,6 +271,26 @@ class TunedCostModel(EngineCostModel):
     def densify_occupancy(self) -> Optional[float]:
         v = self.decisions.get("densify_occupancy")
         return float(v) if v is not None else None
+
+    def tile_shape(self, m: int, k: int, n: int, nnz: int) -> Optional[tuple]:
+        # demote-only: the measured (bm, bk) is re-validated against the
+        # exact plan shape before adoption — MXU/sublane alignment, no tile
+        # taller/wider than the padded operand, and the fp32 tile set
+        # (A tile + B block + accumulator panel) within the double-buffered
+        # VMEM claim.  Anything invalid keeps the config's shape.
+        choice = self.decisions.get("tile_shape")
+        if not choice:
+            return None
+        bm, bk = int(choice[0]), int(choice[1])
+        if bm <= 0 or bk <= 0 or bm % MXU_DIM or bk % SUBLANES:
+            return None
+        if bm > max(MXU_DIM, -(-int(m) // MXU_DIM) * MXU_DIM):
+            return None
+        if bk > max(SUBLANES, -(-int(k) // SUBLANES) * SUBLANES):
+            return None
+        if (bm * bk + bk * int(n) + bm * int(n)) * 4 > VMEM_BYTES // 2:
+            return None
+        return (bm, bk)
 
 
 # --- the tuner ---------------------------------------------------------------
@@ -501,7 +523,47 @@ class Tuner:
         else:
             self._measure_fringe(
                 rec, jrows, jcols, jvals, b, m_rep, k_rep, bn, config)
+            self._measure_tile_shape(rec, rng, m, k, nnz, bn, config)
         return key, rec
+
+    def _measure_tile_shape(self, rec, rng, m, k, nnz, bn, config) -> None:
+        """Sweep matrix-path ``(bm, bk)`` tile-shape candidates.
+
+        Each candidate is timed as a short stacked tile-GEMM stream (the
+        matrix path's inner shape) and priced per *expected active tile*
+        at this shape class's density: larger tiles amortize per-step
+        overhead but activate more padding on sparse problems.  The
+        config's own shape is the baseline; a candidate must beat it past
+        the hysteresis before a ``tile_shape`` decision is recorded
+        (re-validated demote-only at plan-build time by
+        ``TunedCostModel.tile_shape``).
+        """
+        density = float(np.clip(nnz / max(int(m) * int(k), 1), 1e-8, 1.0))
+        base = (int(config.bm), int(config.bk))
+        cands = {base}
+        for bm in (128, 256):
+            for bk in (32, 64, 128, 256):
+                cands.add((bm, bk))
+        t_tiles = 4
+        bk_max = max(bk for _, bk in cands)
+        b_wide = jnp.asarray(
+            rng.standard_normal((bk_max, bn)).astype(np.float32))
+        costs = {}
+        for bm, bk in sorted(cands):
+            a = jnp.asarray(
+                rng.standard_normal((t_tiles, bm, bk)).astype(np.float32))
+            b_blk = b_wide[:bk]
+            fn = jax.jit(lambda a=a, b_blk=b_blk: jnp.einsum(
+                "tmk,kn->tmn", a, b_blk,
+                preferred_element_type=jnp.float32))
+            t_tile = self._timed(f"tile:{bm}x{bk}", fn, rec) / t_tiles
+            # expected active tiles under random placement at this density
+            tiles = (-(-int(m) // bm)) * (-(-int(k) // bk))
+            p_active = 1.0 - (1.0 - density) ** (bm * bk)
+            costs[(bm, bk)] = t_tile * tiles * max(p_active, 1e-12)
+        best = min(costs, key=costs.get)
+        if best != base and costs[best] < MEASURED_HYSTERESIS * costs[base]:
+            rec["decisions"]["tile_shape"] = [int(best[0]), int(best[1])]
 
     def _measure_fringe(
         self, rec, jrows, jcols, jvals, b, m_rep, k_rep, bn, config

@@ -9,6 +9,10 @@ configurable scale so every benchmark table has a corresponding workload:
 - ``rmat``: RMAT kronecker-style clustering (community block structure)
 - ``banded``: diagonal-band FEM-style matrices (F1/Fault_639-like, high
   empty-tile fraction at 128-granularity)
+- ``nm_pruned`` / ``unstructured_pruned``: DLMC-style pruned-DNN weight
+  matrices — magnitude pruning of a seeded Gaussian weight matrix, either
+  per m-wide group (an exact N:M pattern, the structured fast lane's
+  target) or globally at the same density (its unstructured control)
 - ``PAPER_DATASETS``: scaled-down stand-ins for the paper's Table 2 rows.
 - ``mutate``: a seeded mutation-stream generator (edge inserts/deletes +
   weight updates) driving the dynamic-sparsity subsystem's serving tests
@@ -29,8 +33,10 @@ class GraphSpec:
     k: int
     avg_degree: float
     kind: str = "power_law"  # power_law | rmat | banded | uniform
+                             # | nm_pruned | unstructured_pruned
     skew: float = 1.1        # pareto exponent (lower = more skew)
     seed: int = 0
+    nm: Tuple[int, int] = (0, 0)  # (n, m) pattern for kind="nm_pruned"
 
 
 def _dedupe(rows: np.ndarray, cols: np.ndarray, shape) -> Tuple[np.ndarray, np.ndarray]:
@@ -74,6 +80,26 @@ def generate(spec: GraphSpec) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         rows = np.repeat(np.arange(m), band)
         offs = rng.randint(-band, band + 1, rows.size)
         cols = np.clip((rows * k) // m + offs, 0, k - 1)
+    elif spec.kind == "nm_pruned":
+        # DLMC-style structured pruning: keep the n largest-magnitude
+        # weights of every m-wide group of each row of a dense Gaussian
+        # weight matrix — an exact N:M pattern by construction
+        n_pat, m_pat = spec.nm
+        assert 0 < n_pat <= m_pat, spec.nm
+        gk = k // m_pat  # a non-multiple tail stays unpruned-empty
+        w = np.abs(rng.randn(m, gk, m_pat))
+        top = np.argsort(w, axis=2)[:, :, m_pat - n_pat:]
+        rows = np.repeat(np.arange(m), gk * n_pat)
+        base = np.broadcast_to(
+            np.arange(gk)[None, :, None] * m_pat, top.shape)
+        cols = (base + top).reshape(-1)
+    elif spec.kind == "unstructured_pruned":
+        # the unstructured control: same magnitude pruning, same density,
+        # no group constraint
+        w = np.abs(rng.randn(m, k)).ravel()
+        keep = np.argpartition(-w, min(target_nnz, w.size - 1))[:target_nnz]
+        rows = keep // k
+        cols = keep % k
     else:  # uniform
         rows = rng.randint(0, m, target_nnz)
         cols = rng.randint(0, k, target_nnz)
@@ -97,6 +123,15 @@ PAPER_DATASETS: Dict[str, GraphSpec] = {
     "reddit":      GraphSpec("reddit", 16384, 16384, 120.0, "power_law", 1.05, 10),
     "amazon":      GraphSpec("amazon", 32768, 32768, 12.0, "power_law", 1.2, 11),
     "mycielskian": GraphSpec("mycielskian", 8192, 8192, 380.0, "rmat", 1.0, 12),
+    # DLMC-style pruned-DNN weights (transformer/ResNet layer shapes at the
+    # 94-97% sparsities the structured fast lane targets) + an unstructured
+    # control at the same density
+    "dlmc-nm-1-32": GraphSpec("dlmc-nm-1-32", 4096, 4096, 128.0,
+                              "nm_pruned", 1.0, 13, nm=(1, 32)),
+    "dlmc-nm-2-32": GraphSpec("dlmc-nm-2-32", 4096, 4096, 256.0,
+                              "nm_pruned", 1.0, 14, nm=(2, 32)),
+    "dlmc-unstr":   GraphSpec("dlmc-unstr", 4096, 4096, 128.0,
+                              "unstructured_pruned", 1.0, 15),
 }
 
 

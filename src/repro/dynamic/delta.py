@@ -143,6 +143,12 @@ def update_values(plan: PlanLike, indices, new_values) -> PlanLike:
     (or ``prepare_sharded``).  Returns a plan of the same type whose
     signature — and therefore cached executor — is unchanged, and whose
     arrays are bit-identical to re-preparing with the updated values.
+
+    One exception: a structured-format plan (``matrix_format`` "nm" or
+    "bitmap") whose *core* values are touched demotes to the general
+    payload — a value scatter would stale the packed stream, and the
+    general leaves are always kept current.  The demotion changes the
+    signature once; later updates ride the general fast path unchanged.
     """
     if isinstance(plan, spmm.ShardedPlan):
         return _update_values_sharded(plan, indices, new_values)
@@ -176,6 +182,16 @@ def update_values(plan: PlanLike, indices, new_values) -> PlanLike:
             jnp.asarray(sums)
         )
         replacements["flat_values"] = flat.reshape(plan.flat_values.shape)
+        if plan.matrix_format != "general":
+            # core scatter stales the packed payload; demote to the (always
+            # current) general leaves instead of re-packing per update
+            replacements.update(
+                matrix_format="general", format_params=(0, 0),
+                nm_values=jnp.zeros((1, 1, 1), jnp.float32),
+                nm_codes=jnp.zeros((1, 1, 1), jnp.int32),
+                bitmap_words=jnp.zeros((1, 1, 1), jnp.int32),
+                bitmap_values=jnp.zeros((1, 1, 1), jnp.float32),
+            )
 
     return dataclasses.replace(
         plan, update_maps=dataclasses.replace(maps, vals=cur), **replacements

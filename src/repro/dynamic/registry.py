@@ -56,6 +56,7 @@ _LEAF_NAMES = (
     "fringe_rows", "fringe_cols", "fringe_vals", "fringe_row_ids",
     "col_perm", "gather_src_matrix", "gather_src_vector",
     "fringe_kb_chunk", "fringe_kb_rows", "fringe_kb_cols", "fringe_kb_vals",
+    "nm_values", "nm_codes", "bitmap_words", "bitmap_values",
 )
 _MAPS_NAMES = (
     "rows", "cols", "vals", "path", "core_lin", "fringe_pos", "kb_pos",
@@ -156,6 +157,8 @@ class PlanRegistry:
             "stats": [list(kv) for kv in plan.stats],
             "fringe_tier": plan.fringe_tier,
             "fringe_bk": plan.fringe_bk,
+            "matrix_format": plan.matrix_format,
+            "format_params": list(plan.format_params),
             "signature": repr(plan.signature()),
             "coo_hash": coo_fingerprint(
                 rows, cols, vals, plan.shape, plan.config
@@ -346,6 +349,8 @@ class PlanRegistry:
                 *leaves, shape=shape, config=cfg, stats=stats,
                 fringe_tier=meta["fringe_tier"],
                 fringe_bk=int(meta["fringe_bk"]),
+                matrix_format=meta.get("matrix_format", "general"),
+                format_params=tuple(meta.get("format_params", (0, 0))),
                 update_maps=maps,
             )
         except (KeyError, TypeError, ValueError) as e:

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import plan_ir, tuner
-from ..core.cost_model import HBM_BW, PEAK_FLOPS_BF16
+from ..core.cost_model import HBM_BW, PEAK_FLOPS_BF16, matrix_payload_bytes
 from ..core.plan_ir import (
     NeutronPlan, ShardedPlan, SpmmConfig, build_sddmm_maps, gather_rows,
     permute_pad_b, plan_leaves, sddmm_body_leaves, validate_rhs,
@@ -104,7 +104,7 @@ def _maybe_profiled(fn, args, *, kind, sig, tier, prof):
     PROFILER.record(
         op=prof["op"], tier=str(tier), sig_key=_sig_key(sig), kind=kind,
         measured_us=measured_us, traced=traced, batch=prof.get("batch"),
-        terms=prof["terms"], peaks=_PEAKS,
+        terms=prof["terms"], peaks=_PEAKS, attrs=prof.get("attrs"),
     )
     return out
 
@@ -187,10 +187,21 @@ def _spmm_prof(plan, b: jax.Array):
     fringe_nnz = int(stats.get("fringe_nnz", 0))
     num_steps = int(stats.get("num_steps", 0))
     num_windows = int(stats.get("num_windows", 0))
+    mfmt = str(stats.get("matrix_format", "general"))
+    fparams = tuple(stats.get("format_params", (0, 0)))
     if num_steps:
         mat_flops = 2.0 * num_steps * config.bm * config.bk * n
-        mat_bytes = (num_steps * (config.bm * config.bk + config.bk * n)
-                     + num_windows * config.bm * n) * 4.0
+        # the A payload models at the format the plan actually streams —
+        # packed bytes for nm/bitmap, the padded dense tiles for general —
+        # so roofline rows show the padding-waste reduction directly
+        a_bytes = matrix_payload_bytes(
+            mfmt, num_steps, config.bm, config.bk,
+            nm_pattern=fparams if mfmt == "nm" else None,
+            row_cap=int(fparams[1]) if mfmt == "bitmap" else 0,
+        )
+        mat_bytes = (a_bytes
+                     + (num_steps * config.bk * n
+                        + num_windows * config.bm * n) * 4.0)
     else:
         core_nnz = max(_plan_nnz(plan) - fringe_nnz, 0)
         mat_flops = 2.0 * core_nnz * n
@@ -202,6 +213,10 @@ def _spmm_prof(plan, b: jax.Array):
                        "bytes": mat_bytes * scale},
             "fringe": {"flops": 2.0 * fringe_nnz * n * scale,
                        "bytes": fringe_nnz * (12.0 + 4.0 * n) * scale},
+        },
+        "attrs": {
+            "padding_waste": float(stats.get("padding_waste", 0.0)),
+            "matrix_format": mfmt,
         },
     }
 
@@ -271,8 +286,12 @@ def execute_with_delta(plan: NeutronPlan, delta, b: jax.Array) -> jax.Array:
     _apply_cache_capacity(plan.config)
     batch = int(b.shape[0]) if b.ndim == 3 else None
     docc = _tuned_densify(plan)
+    # dynamic dispatch rides the general payload: the structured fast lane
+    # serves static plans, and value churn (the reason a delta exists)
+    # would stale a packed payload — same demotion update_values applies
+    sig = plan_ir.general_format_sig(plan.signature())
     return _guarded_call(
-        plan.signature(), plan.config,
+        sig, plan.config,
         lambda s: build_executor(s, batch=batch, delta_sig=delta.sig,
                                  densify_occupancy=docc),
         (*plan_leaves(plan), *delta.leaves, b),

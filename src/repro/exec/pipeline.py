@@ -65,12 +65,14 @@ def _fused_body(sig: Tuple, densify_occupancy: Optional[float] = None):
     """
     (_version, shape, bm, bk, bn, impl, reorder_cols, fringe_chunk,
      num_windows, _num_steps, _nnz_f, n_fringe_rows, has_core, has_fringe,
-     fringe_tier, fringe_bk, _n_chunks, _nnz_kb) = sig
+     fringe_tier, fringe_bk, _n_chunks, _nnz_kb,
+     matrix_format, format_params) = sig
     m, k = shape
 
     def _run(step_window, step_col, flat_values, fringe_rows, fringe_cols,
              fringe_vals, col_perm, gsrc_m, gsrc_v,
-             kb_chunk, kb_rows, kb_cols, kb_vals, b):
+             kb_chunk, kb_rows, kb_cols, kb_vals,
+             nm_values, nm_codes, bitmap_words, bitmap_values, b):
         record_fused_trace(sig)
         if impl != "xla":  # pallas tiers lower here, at trace time
             HARNESS.fire("pallas_lowering", context=sig)
@@ -79,12 +81,33 @@ def _fused_body(sig: Tuple, densify_occupancy: Optional[float] = None):
 
         c = None
         if has_core:
-            packed_m = ops.block_stream_spmm(
-                step_window, step_col, flat_values, bp,
-                num_windows=num_windows, bm=bm, bk=bk, bn=bn, impl=impl,
-                assume_unique=True,  # prepare() emits unique pairs
-                densify_occupancy=densify_occupancy,
-            )[:, :n]
+            # structured fast lane: the signature-carried format selects
+            # which payload the matrix stage consumes (the general flat
+            # stream always rides along, so format demotion reuses these
+            # same leaves).  Same degrade-to-XLA health gating: an impl
+            # demotion via xla_fallback_sig keeps the format and routes it
+            # to the structured XLA reference form.
+            if matrix_format == "nm":
+                n_pat, m_pat = format_params
+                packed_m = ops.nm_stream_spmm(
+                    step_window, step_col, nm_values, nm_codes, bp,
+                    num_windows=num_windows, bm=bm, bk=bk, bn=bn,
+                    n_pat=n_pat, m_pat=m_pat, impl=impl,
+                )[:, :n]
+            elif matrix_format == "bitmap":
+                _n_words, row_cap = format_params
+                packed_m = ops.bitmap_stream_spmm(
+                    step_window, step_col, bitmap_words, bitmap_values, bp,
+                    num_windows=num_windows, bm=bm, bk=bk, bn=bn,
+                    row_cap=row_cap, impl=impl,
+                )[:, :n]
+            else:
+                packed_m = ops.block_stream_spmm(
+                    step_window, step_col, flat_values, bp,
+                    num_windows=num_windows, bm=bm, bk=bk, bn=bn, impl=impl,
+                    assume_unique=True,  # prepare() emits unique pairs
+                    densify_occupancy=densify_occupancy,
+                )[:, :n]
             c = gather_rows(packed_m, gsrc_m)
         if has_fringe:
             packed_v = ops.fringe_spmm(
@@ -116,7 +139,8 @@ def _sddmm_body(sig: Tuple):
     """
     (_version, shape, bm, bk, _bn, impl, reorder_cols, fringe_chunk,
      _num_windows, _num_steps, _nnz_f, _n_fringe_rows, has_core, has_fringe,
-     _fringe_tier, _fringe_bk, _n_chunks, _nnz_kb) = untag_sig(sig)
+     _fringe_tier, _fringe_bk, _n_chunks, _nnz_kb,
+     _matrix_format, _format_params) = untag_sig(sig)
     _m, k = shape
     # nnz / nnz_f key the cache (shapes come from the arrays at trace time);
     # the budget must live in the sig so equal-structure plans with

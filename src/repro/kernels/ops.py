@@ -26,6 +26,7 @@ from . import ref
 from .dense_tile_spmm import dense_tile_spmm
 from .gather_spmm import gather_spmm, gather_spmm_ksharded
 from .sddmm import dense_tile_sddmm, gather_sddmm
+from .structured_spmm import bitmap_tile_spmm, nm_tile_spmm
 
 Impl = Literal["pallas", "pallas_interpret", "xla"]
 FringeTier = Literal["auto", "resident", "ksharded", "xla"]
@@ -126,6 +127,97 @@ def block_stream_spmm(
     return dense_tile_spmm(
         step_window, step_col, flat_values, b,
         num_windows=num_windows, bm=bm, bk=bk, bn=bn,
+        interpret=(impl == "pallas_interpret"),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_windows", "bm", "bk", "bn", "n_pat", "m_pat",
+                     "impl"),
+)
+def nm_stream_spmm(
+    step_window: jax.Array,
+    step_col: jax.Array,
+    nm_values: jax.Array,
+    nm_codes: jax.Array,
+    b: jax.Array,
+    *,
+    num_windows: int,
+    bm: int,
+    bk: int,
+    bn: int = 256,
+    n_pat: int,
+    m_pat: int,
+    impl: Impl = "xla",
+) -> jax.Array:
+    """Matrix-engine path over the N:M-packed tile stream; returns packed
+    (num_windows*bm, N) fp32.
+
+    The pallas kernel re-expands each packed tile in VMEM and feeds the
+    MXU the same static dense GEMM as the general stream (payload bytes
+    drop to ~(n+1)/m of the dense tile); the xla impl skips the expansion
+    entirely and contracts packed values against gathered B rows — n/m of
+    the dense-tile FLOPs.
+    """
+    if b.ndim != 2:
+        raise ValueError(
+            f"nm_stream_spmm expects a rank-2 (K, N) operand, got shape "
+            f"{tuple(b.shape)}; batched RHS panels go through the executor "
+            "pipeline (repro.exec), which vmaps the fused body per path"
+        )
+    if impl == "xla":
+        return ref.ref_nm_stream_spmm(
+            step_window, step_col, nm_values, nm_codes, b,
+            num_windows, n_pat, m_pat, bk,
+        )
+    return nm_tile_spmm(
+        step_window, step_col, nm_values, nm_codes, b,
+        num_windows=num_windows, bm=bm, bk=bk, bn=bn,
+        n_pat=n_pat, m_pat=m_pat,
+        interpret=(impl == "pallas_interpret"),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_windows", "bm", "bk", "bn", "row_cap", "impl"),
+)
+def bitmap_stream_spmm(
+    step_window: jax.Array,
+    step_col: jax.Array,
+    bitmap_words: jax.Array,
+    bitmap_values: jax.Array,
+    b: jax.Array,
+    *,
+    num_windows: int,
+    bm: int,
+    bk: int,
+    bn: int = 256,
+    row_cap: int,
+    impl: Impl = "xla",
+) -> jax.Array:
+    """Matrix-engine path over the bitmap-packed tile stream; returns
+    packed (num_windows*bm, N) fp32.
+
+    The pallas kernel expands each tile from its occupancy bitmap in VMEM
+    (payload bytes drop to ~(row_cap + bk/32)/bk of the dense tile); the
+    xla impl expands at trace time and runs the general streaming einsum.
+    """
+    if b.ndim != 2:
+        raise ValueError(
+            f"bitmap_stream_spmm expects a rank-2 (K, N) operand, got shape "
+            f"{tuple(b.shape)}; batched RHS panels go through the executor "
+            "pipeline (repro.exec), which vmaps the fused body per path"
+        )
+    if impl == "xla":
+        return ref.ref_bitmap_stream_spmm(
+            step_window, step_col, bitmap_words, bitmap_values, b,
+            num_windows, bk,
+        )
+    return bitmap_tile_spmm(
+        step_window, step_col, bitmap_words, bitmap_values, b,
+        num_windows=num_windows, bm=bm, bk=bk, bn=bn, row_cap=row_cap,
         interpret=(impl == "pallas_interpret"),
     )
 

@@ -215,6 +215,113 @@ def ref_gather_sddmm(
     return out.reshape(-1)[:nnz]
 
 
+def ref_nm_stream_spmm(
+    step_window: jax.Array,  # (T,) int32
+    step_col: jax.Array,     # (T,) int32
+    nm_values: jax.Array,    # (T, bm, n*gk) fp32 slot-major packed values
+    nm_codes: jax.Array,     # (T, bm, gk) int32, 8-bit positions per slot
+    b: jax.Array,            # (K, N) — K a multiple of bk
+    num_windows: int,
+    n_pat: int,
+    m_pat: int,
+    bk: int,
+    tile_chunk: int = 8,
+) -> jax.Array:
+    """Oracle for the N:M-packed tile stream — FLOP-light gather form.
+
+    Instead of re-expanding to dense (bm, bk) tiles and paying the full
+    tile GEMM, each packed value contracts directly against its own B row:
+    decode slot positions into global B rows, gather, and batched
+    multiply-sum over the q = n*gk packed slots — n/m of the dense-tile
+    FLOPs.  ``tile_chunk`` bounds the materialized (tc, bm, q, N) gather
+    per scan step, mirroring ref_gather_spmm's chunking.  Returns packed
+    (num_windows*bm, N) fp32.
+    """
+    t, bm, _ = nm_values.shape
+    n = b.shape[1]
+    gk = bk // m_pat
+    q = n_pat * gk
+    bf = b.astype(jnp.float32)
+    # slot-major local columns: value [t, m, j*gk + g] sits at in-tile
+    # column g*m_pat + ((codes[t, m, g] >> 8j) & 0xFF)
+    shifts = 8 * jnp.arange(n_pat, dtype=jnp.int32)[:, None]    # (n, 1)
+    pos = (nm_codes[:, :, None, :] >> shifts) & 0xFF            # (T, bm, n, gk)
+    base = jnp.arange(gk, dtype=jnp.int32) * m_pat              # (gk,)
+    cols_local = (pos + base).reshape(t, bm, q)
+    bcols = step_col[:, None, None] * bk + cols_local           # (T, bm, q)
+    vals = nm_values.astype(jnp.float32)
+
+    tc = max(1, min(tile_chunk, t))
+    t_pad = ((t + tc - 1) // tc) * tc
+    sw = step_window
+    if t_pad != t:  # pad tiles carry zero values into window 0 (inert)
+        pad = t_pad - t
+        sw = jnp.concatenate([sw, jnp.zeros(pad, sw.dtype)])
+        bcols = jnp.concatenate(
+            [bcols, jnp.zeros((pad, bm, q), bcols.dtype)]
+        )
+        vals = jnp.concatenate([vals, jnp.zeros((pad, bm, q), vals.dtype)])
+    n_chunks = t_pad // tc
+    xs = (
+        sw.reshape(n_chunks, tc),
+        bcols.reshape(n_chunks, tc, bm, q),
+        vals.reshape(n_chunks, tc, bm, q),
+    )
+
+    def body(out, x):
+        w, bc, v = x
+        gathered = bf[bc]                                  # (tc, bm, q, N)
+        contrib = jnp.einsum(
+            "tmq,tmqn->tmn", v, gathered,
+            preferred_element_type=jnp.float32,
+        )
+        return out.at[w].add(contrib), None
+
+    init = jnp.zeros((num_windows, bm, n), jnp.float32)
+    out, _ = jax.lax.scan(body, init, xs)
+    return out.reshape(num_windows * bm, n)
+
+
+def expand_bitmap_tiles(
+    bitmap_words: jax.Array,   # (T, bm, ceil(bk/32)) int32 occupancy bits
+    bitmap_values: jax.Array,  # (T, bm, row_cap) fp32 packed row values
+    bk: int,
+) -> jax.Array:
+    """Re-expand a bitmap payload to the dense (T, bm, bk) fp32 stream.
+
+    Device-side analogue of core.formats.unpack_bitmap_tiles: rank each
+    set bit with a row-wise exclusive cumsum and gather its packed value.
+    The arithmetic right shift is sign-safe for bit 31 — only bit 0 of the
+    shifted word is read.
+    """
+    row_cap = bitmap_values.shape[2]
+    cols = jnp.arange(bk, dtype=jnp.int32)
+    words = bitmap_words[:, :, cols // 32]                 # (T, bm, bk)
+    bits = (words >> (cols % 32)) & 1
+    rank = jnp.cumsum(bits, axis=-1) - bits                # exclusive prefix
+    gathered = jnp.take_along_axis(
+        bitmap_values, jnp.clip(rank, 0, row_cap - 1), axis=-1
+    )
+    return jnp.where(bits == 1, gathered, 0.0)
+
+
+def ref_bitmap_stream_spmm(
+    step_window: jax.Array,    # (T,) int32
+    step_col: jax.Array,       # (T,) int32
+    bitmap_words: jax.Array,   # (T, bm, ceil(bk/32)) int32
+    bitmap_values: jax.Array,  # (T, bm, row_cap) fp32
+    b: jax.Array,              # (K, N) — K a multiple of bk
+    num_windows: int,
+    bk: int,
+) -> jax.Array:
+    """Oracle for the bitmap-packed tile stream: expand, then the general
+    streaming einsum.  Returns packed (num_windows*bm, N) fp32."""
+    flat_values = expand_bitmap_tiles(bitmap_words, bitmap_values, bk)
+    return ref_block_stream_spmm(
+        step_window, step_col, flat_values, b, num_windows
+    )
+
+
 def ref_gather_spmm_kblocked(
     chunk_kb: jax.Array,  # (num_chunks,) int32, chunk -> k-block id
     rows: jax.Array,  # (num_chunks*chunk,) int32, k-bucketed packed row ids

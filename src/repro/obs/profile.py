@@ -40,6 +40,12 @@ _DISPATCH_US = REGISTRY.histogram(
     "synchronized per-dispatch wall time (us), telemetry-enabled only",
     labelnames=("op", "tier"),
 )
+_PADDING_WASTE = REGISTRY.gauge(
+    "obs_padding_waste",
+    "zero fraction of the matrix path's streamed active tiles "
+    "(last profiled dispatch; structured formats cut the bytes it wastes)",
+    labelnames=("op", "tier"),
+)
 
 
 class DispatchRecord:
@@ -102,6 +108,9 @@ class DispatchProfiler:
             self._ring.append(rec)
         _DISPATCHES.inc(op=rec.op, tier=rec.tier)
         _DISPATCH_US.observe(rec.measured_us, op=rec.op, tier=rec.tier)
+        if "padding_waste" in rec.attrs:
+            _PADDING_WASTE.set(
+                float(rec.attrs["padding_waste"]), op=rec.op, tier=rec.tier)
         return rec
 
     def records(self) -> List[DispatchRecord]:

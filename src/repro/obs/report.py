@@ -68,9 +68,17 @@ def roofline_attribution(
                 "paths": {p: {"flops": 0.0, "bytes": 0.0, "bound_us": 0.0}
                           for p in PATHS},
                 "peaks": dict(rec.peaks),
+                "matrix_format": None,
+                "_waste_sum": 0.0,
+                "_waste_n": 0,
             }
         row["calls"] += 1
         row["measured_us"] += rec.measured_us
+        if "matrix_format" in rec.attrs:
+            row["matrix_format"] = rec.attrs["matrix_format"]
+        if "padding_waste" in rec.attrs:
+            row["_waste_sum"] += float(rec.attrs["padding_waste"])
+            row["_waste_n"] += 1
         for p in PATHS:
             terms = rec.terms.get(p)
             if terms is None:
@@ -101,6 +109,12 @@ def roofline_attribution(
             total[p]["bytes"] += acc["bytes"]
         row["mean_us"] = measured / row["calls"] if row["calls"] else 0.0
         row["utilization"] = bound_total / measured if measured > 0 else 0.0
+        # padding waste of the matrix path's streamed tiles (from the plan
+        # stats, via the dispatch attrs): structured payloads model fewer
+        # bytes for the same waste, which shows up as a higher utilization
+        waste_n = row.pop("_waste_n")
+        waste_sum = row.pop("_waste_sum")
+        row["padding_waste"] = waste_sum / waste_n if waste_n else None
         total_measured += measured
         out_rows.append(row)
 
@@ -126,15 +140,20 @@ def format_report(attr: Dict[str, Any]) -> str:
         f"(measured {attr['measured_us_total']:.1f} us, "
         f"utilization {100.0 * attr['utilization']:.1f}%)",
         f"{'op':<10} {'tier':<10} {'sig':<12} {'calls':>6} "
-        f"{'mean_us':>10} {'matrix%':>8} {'fringe%':>8} {'util%':>7}",
+        f"{'mean_us':>10} {'matrix%':>8} {'fringe%':>8} {'util%':>7} "
+        f"{'fmt':<8} {'waste%':>7}",
     ]
     for row in attr["rows"]:
+        waste = row.get("padding_waste")
         lines.append(
             f"{row['op']:<10} {row['tier']:<10} {row['sig']:<12} "
             f"{row['calls']:>6} {row['mean_us']:>10.1f} "
             f"{100.0 * row['paths']['matrix']['share']:>7.1f}% "
             f"{100.0 * row['paths']['fringe']['share']:>7.1f}% "
-            f"{100.0 * row['utilization']:>6.1f}%"
+            f"{100.0 * row['utilization']:>6.1f}% "
+            f"{row.get('matrix_format') or '-':<8} "
+            + (f"{100.0 * waste:>6.1f}%" if waste is not None
+               else f"{'-':>7}")
         )
     for path in ("matrix", "fringe"):
         t = attr[f"{path}_path"]
@@ -170,6 +189,15 @@ def roofline_prometheus(attr: Dict[str, Any]) -> str:
         base = {"op": row["op"], "tier": row["tier"], "sig": row["sig"]}
         lines.append(format_sample("repro_roofline_utilization", base,
                                    row["utilization"]))
+    waste_rows = [r for r in attr["rows"]
+                  if r.get("padding_waste") is not None]
+    if waste_rows:
+        lines.append("# TYPE repro_roofline_padding_waste gauge")
+        for row in waste_rows:
+            base = {"op": row["op"], "tier": row["tier"], "sig": row["sig"],
+                    "format": row.get("matrix_format") or "general"}
+            lines.append(format_sample("repro_roofline_padding_waste", base,
+                                       row["padding_waste"]))
     for metric, field in (("repro_roofline_modeled_flops", "flops"),
                           ("repro_roofline_modeled_bytes", "bytes"),
                           ("repro_roofline_bound_us", "bound_us"),

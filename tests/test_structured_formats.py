@@ -1,0 +1,384 @@
+"""Structured-sparsity fast lane: detection, packed round-trips, no-alias.
+
+Property tests round-trip the N:M and bitmap tile payloads against the
+flat stream they encode; detection tests pin the promote/reject rules
+(tightest description wins, near-N:M rejected, duplicate COO entries
+count once).  The end-to-end tests prove the acceptance invariants:
+structured and general plans never alias one cached executor, the
+existing general panel is bit-identical under auto selection, dynamic
+core updates demote the packed payload instead of staling it, and the
+tuner's tile-shape table is demote-only validated.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.core import formats, plan_ir, spmm, tuner
+from repro.core.cost_model import EngineCostModel
+from repro.dynamic import delta
+from repro.errors import PlanBuildError
+from conftest import make_sparse
+
+
+def nm_coo(rng, m, k, n_pat, m_pat):
+    """Exact N:M COO: n_pat nonzeros in every m_pat-wide group of every row."""
+    gk = k // m_pat
+    w = rng.rand(m, gk, m_pat)
+    top = np.argsort(w, axis=2)[:, :, :n_pat]
+    rows = np.repeat(np.arange(m), gk * n_pat)
+    base = np.broadcast_to(np.arange(gk)[None, :, None] * m_pat, top.shape)
+    cols = (base + top).reshape(-1)
+    vals = rng.randn(rows.size).astype(np.float32)
+    # exact zeros would vanish from the nonzero structure
+    vals = np.where(np.abs(vals) < 1e-3, np.float32(1.0), vals)
+    return rows.astype(np.int64), cols.astype(np.int64), vals.astype(np.float32)
+
+
+def coo_dense(rows, cols, vals, shape):
+    d = np.zeros(shape, np.float32)
+    np.add.at(d, (rows, cols), vals)
+    return d
+
+
+def _nm_problem(rng, m=256, k=256, n=128, n_pat=1, m_pat=32):
+    rows, cols, vals = nm_coo(rng, m, k, n_pat, m_pat)
+    b = rng.randn(k, n).astype(np.float32)
+    return rows, cols, vals, (m, k), b
+
+
+# ---------------------------------------------------------------------------
+# payload round-trips (property-based)
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1),
+       st.sampled_from([(1, 4), (2, 8), (4, 16), (1, 32)]),
+       st.integers(1, 3), st.sampled_from([8, 16]))
+def test_nm_pack_round_trip(seed, pat, t, bm):
+    """pack -> unpack is the identity on any stream satisfying the pattern."""
+    n_pat, m_pat = pat
+    rng = np.random.RandomState(seed)
+    gk = 2
+    g = rng.randn(t, bm, gk, m_pat).astype(np.float32)
+    order = np.argsort(rng.rand(t, bm, gk, m_pat), axis=-1)
+    keep = order < rng.randint(0, n_pat + 1, (t, bm, gk, 1))
+    g = np.where(keep & (np.abs(g) > 1e-3), g, 0.0).astype(np.float32)
+    flat = g.reshape(t, bm, gk * m_pat)
+    nm_values, nm_codes = formats.pack_nm_tiles(flat, n_pat, m_pat)
+    assert nm_values.shape == (t, bm, n_pat * gk)
+    assert nm_codes.shape == (t, bm, gk)
+    out = formats.unpack_nm_tiles(nm_values, nm_codes, n_pat, m_pat)
+    np.testing.assert_array_equal(out, flat)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(0.0, 0.5), st.integers(1, 3))
+def test_bitmap_pack_round_trip(seed, density, t):
+    """Bitmap pack -> unpack is the identity on arbitrary tile streams
+    (bk=72 exercises a partial trailing 32-bit word)."""
+    rng = np.random.RandomState(seed)
+    bm, bk = 8, 72
+    flat = ((rng.rand(t, bm, bk) < density)
+            * rng.randn(t, bm, bk)).astype(np.float32)
+    words, packed, row_cap = formats.pack_bitmap_tiles(flat)
+    assert row_cap % 8 == 0 and row_cap >= 8
+    assert words.shape == (t, bm, 3)
+    out = formats.unpack_bitmap_tiles(words, packed, bk)
+    np.testing.assert_array_equal(out, flat)
+
+
+def test_bitmap_empty_tiles_round_trip():
+    flat = np.zeros((2, 8, 64), np.float32)
+    words, packed, row_cap = formats.pack_bitmap_tiles(flat)
+    assert row_cap == 8
+    assert not np.asarray(words).any()
+    np.testing.assert_array_equal(
+        formats.unpack_bitmap_tiles(words, packed, 64), flat)
+
+
+def test_pack_nm_rejects_violating_stream():
+    flat = np.zeros((1, 8, 32), np.float32)
+    flat[0, 0, :3] = 1.0  # 3 nonzeros in the first 4-wide group
+    with pytest.raises(ValueError, match="violates"):
+        formats.pack_nm_tiles(flat, 2, 4)
+    with pytest.raises(ValueError, match="multiple"):
+        formats.pack_nm_tiles(np.zeros((1, 8, 30), np.float32), 1, 4)
+    with pytest.raises(ValueError, match="packable range"):
+        formats.pack_nm_tiles(np.zeros((1, 8, 32), np.float32), 5, 16)
+
+
+# ---------------------------------------------------------------------------
+# structure detection
+# ---------------------------------------------------------------------------
+def test_detect_exact_nm(rng):
+    rows, cols, _ = nm_coo(rng, 64, 128, 2, 32)
+    assert formats.detect_nm_pattern(rows, cols, (64, 128)) == (2, 32)
+
+
+def test_detect_prefers_tightest_description(rng):
+    """A 1:16 matrix is also an exact 2:32; the 32-wide description packs
+    tighter ((n+1)/m = 3/32 vs 2/16), so it wins."""
+    rows, cols, _ = nm_coo(rng, 32, 128, 1, 16)
+    assert formats.detect_nm_pattern(rows, cols, (32, 128)) == (2, 32)
+
+
+def test_detect_rejects_near_nm(rng):
+    """One overfull group breaks every candidate: it inflates n past the
+    packable bound at wide m and craters group fill at narrow m."""
+    rows, cols, _ = nm_coo(rng, 64, 128, 1, 32)
+    rows = np.concatenate([rows, np.zeros(6, np.int64)])
+    cols = np.concatenate([cols, np.arange(32, 38, dtype=np.int64)])
+    assert formats.detect_nm_pattern(rows, cols, (64, 128)) is None
+
+
+def test_detect_duplicates_count_once(rng):
+    rows, cols, _ = nm_coo(rng, 32, 64, 1, 16)
+    r2, c2 = np.concatenate([rows, rows]), np.concatenate([cols, cols])
+    assert (formats.detect_nm_pattern(r2, c2, (32, 64))
+            == formats.detect_nm_pattern(rows, cols, (32, 64)))
+
+
+def test_detect_empty_matrix():
+    e = np.zeros(0, np.int64)
+    assert formats.detect_nm_pattern(e, e, (16, 64)) is None
+    assert formats.detect_block_diagonal(e, e, (256, 256)) is None
+
+
+def test_detect_block_diagonal(rng):
+    m = 256
+    rows = np.arange(m, dtype=np.int64)
+    cols = (rows // 64) * 64 + rng.randint(0, 64, m)
+    # largest candidate wins: a 64-block diagonal is also a 128-block one
+    assert formats.detect_block_diagonal(rows, cols, (m, m)) == 128
+    cols2 = cols.copy()
+    cols2[0] = 200  # one off-diagonal nonzero breaks every candidate
+    assert formats.detect_block_diagonal(rows, cols2, (m, m)) is None
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: fast lane correctness + no-alias
+# ---------------------------------------------------------------------------
+def test_auto_nm_fast_lane_matches_dense(rng):
+    rows, cols, vals, shape, b = _nm_problem(rng)
+    plan = spmm.prepare(rows, cols, vals, shape,
+                        spmm.SpmmConfig(impl="xla", bn=128))
+    assert plan.matrix_format == "nm"
+    assert plan.format_params == (1, 32)
+    out = np.asarray(spmm.execute(plan, jnp.asarray(b)))
+    ref = coo_dense(rows, cols, vals, shape) @ b
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_bitmap_hint_matches_dense(rng):
+    a, rows, cols, vals = make_sparse(rng, 256, 256, density=0.15)
+    b = rng.randn(256, 128).astype(np.float32)
+    plan = spmm.prepare(
+        rows, cols, vals, a.shape,
+        spmm.SpmmConfig(impl="xla", bn=128, structure_hint="bitmap"))
+    assert plan.matrix_format == "bitmap"
+    out = np.asarray(spmm.execute(plan, jnp.asarray(b)))
+    np.testing.assert_allclose(out, a @ b, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("hint,fmt", [(None, "nm"), ("bitmap", "bitmap")])
+def test_structured_kernels_match_oracle_interpret(rng, hint, fmt):
+    """The pallas tile kernels (interpret mode) agree with the dense oracle
+    through the full prepare/execute pipeline."""
+    rows, cols, vals, shape, b = _nm_problem(rng, m=128, k=128)
+    plan = spmm.prepare(
+        rows, cols, vals, shape,
+        spmm.SpmmConfig(impl="pallas_interpret", bn=128,
+                        structure_hint=hint))
+    assert plan.matrix_format == fmt
+    out = np.asarray(spmm.execute(plan, jnp.asarray(b)))
+    ref = coo_dense(rows, cols, vals, shape) @ b
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_structured_and_general_never_alias(rng):
+    """Structured and general plans for the same matrix carry distinct
+    signatures and hit distinct cached executors."""
+    # unique dims: no other test shares this signature, so the trace-count
+    # deltas below are deterministic under any test ordering
+    rows, cols, vals, shape, b = _nm_problem(rng, m=320, k=192)
+    cfg = spmm.SpmmConfig(impl="xla", bn=128)
+    plan_s = spmm.prepare(rows, cols, vals, shape, cfg)
+    plan_g = spmm.prepare(
+        rows, cols, vals, shape,
+        dataclasses.replace(cfg, structure_hint="general"))
+    assert plan_s.matrix_format == "nm"
+    assert plan_g.matrix_format == "general"
+    sig_s, sig_g = plan_s.signature(), plan_g.signature()
+    assert sig_s != sig_g
+    assert plan_ir.sig_matrix_format(sig_s) == "nm"
+    assert plan_ir.general_format_sig(sig_s) == sig_g
+
+    bj = jnp.asarray(b)
+    before = spmm.fused_trace_count()
+    out_s = spmm.execute(plan_s, bj)
+    assert spmm.fused_trace_count() == before + 1
+    out_g = spmm.execute(plan_g, bj)
+    assert spmm.fused_trace_count() == before + 2
+    # both executors are now cached: re-execution does not retrace
+    spmm.execute(plan_s, bj)
+    spmm.execute(plan_g, bj)
+    assert spmm.fused_trace_count() == before + 2
+    np.testing.assert_allclose(np.asarray(out_s), np.asarray(out_g),
+                               rtol=1e-4, atol=1e-4)
+
+
+BENCH_PANEL = ["cora", "wiki-RfA", "ogbn-arxiv", "pattern1", "human_gene1",
+               "F1", "mouse_gene", "reddit"]
+
+
+def test_bench_panel_stays_general_bit_identical():
+    """Auto format selection leaves every existing panel entry on the
+    general path: same signature (same cached executor) and bit-identical
+    output as an explicit structure_hint="general" plan."""
+    from repro.data import graphs
+
+    rng = np.random.RandomState(3)
+    cfg = spmm.SpmmConfig(impl="xla")
+    for name in BENCH_PANEL:
+        spec = graphs.PAPER_DATASETS[name]
+        spec = dataclasses.replace(spec, m=min(spec.m, 256),
+                                   k=min(spec.k, 256))
+        rows, cols, vals = graphs.generate(spec)
+        b = jnp.asarray(rng.randn(spec.k, 64).astype(np.float32))
+        plan_a = spmm.prepare(rows, cols, vals, (spec.m, spec.k), cfg)
+        plan_g = spmm.prepare(
+            rows, cols, vals, (spec.m, spec.k),
+            dataclasses.replace(cfg, structure_hint="general"))
+        assert plan_a.matrix_format == "general", name
+        assert plan_a.signature() == plan_g.signature(), name
+        np.testing.assert_array_equal(
+            np.asarray(spmm.execute(plan_a, b)),
+            np.asarray(spmm.execute(plan_g, b)), err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# signature helpers + dynamic demotion
+# ---------------------------------------------------------------------------
+def test_xla_fallback_sig_keeps_format(rng):
+    rows, cols, vals, shape, _ = _nm_problem(rng)
+    sig = spmm.prepare(rows, cols, vals, shape,
+                       spmm.SpmmConfig(impl="xla", bn=128)).signature()
+    fb = plan_ir.xla_fallback_sig(sig)
+    assert plan_ir.sig_impl(fb) == "xla"
+    # health degradation swaps the impl only: the format survives
+    assert plan_ir.sig_matrix_format(fb) == "nm"
+    assert fb[plan_ir.SIG_FORMAT_PARAMS] == sig[plan_ir.SIG_FORMAT_PARAMS]
+
+    g = plan_ir.general_format_sig(sig)
+    assert plan_ir.sig_matrix_format(g) == "general"
+    assert g[plan_ir.SIG_FORMAT_PARAMS] == (0, 0)
+    assert plan_ir.general_format_sig(g) == g  # idempotent
+
+
+def test_update_values_demotes_structured_core(rng):
+    """Core value updates on a packed plan demote it to the general payload
+    (the packed stream would go stale); results track the new values."""
+    rows, cols, vals, shape, b = _nm_problem(rng)
+    cfg = spmm.SpmmConfig(impl="xla", bn=128)
+    plan = spmm.prepare(rows, cols, vals, shape, cfg)
+    assert plan.matrix_format == "nm"
+
+    idx = np.arange(vals.size)
+    newv = (vals * 2.0).astype(np.float32)
+    plan2 = delta.update_values(plan, idx, newv)
+    assert plan2.matrix_format == "general"
+    assert plan2.format_params == (0, 0)
+    assert plan2.signature() == plan_ir.general_format_sig(plan.signature())
+    out = np.asarray(spmm.execute(plan2, jnp.asarray(b)))
+    ref = coo_dense(rows, cols, newv, shape) @ b
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+    # the demotion happens once: later updates keep the general signature
+    plan3 = delta.update_values(plan2, idx[:1], newv[:1] + 1.0)
+    assert plan3.signature() == plan2.signature()
+
+
+def test_registry_round_trip_keeps_structured_payload(rng, tmp_path):
+    """A packed plan persists and restores with its payload, format, and
+    signature intact (no silent demotion through the leaf serialization)."""
+    from repro.dynamic import DynamicPlan
+    from repro.dynamic.registry import PlanRegistry
+
+    rows, cols, vals, shape, b = _nm_problem(rng)
+    plan = spmm.prepare(rows, cols, vals, shape,
+                        spmm.SpmmConfig(impl="xla", bn=128))
+    assert plan.matrix_format == "nm"
+    reg = PlanRegistry(str(tmp_path))
+    reg.save("g", DynamicPlan(plan))
+    warm = reg.load("g").plan
+    assert warm.matrix_format == "nm"
+    assert warm.signature() == plan.signature()
+    np.testing.assert_array_equal(np.asarray(warm.nm_values),
+                                  np.asarray(plan.nm_values))
+    np.testing.assert_array_equal(np.asarray(warm.nm_codes),
+                                  np.asarray(plan.nm_codes))
+    np.testing.assert_allclose(
+        np.asarray(spmm.execute(warm, jnp.asarray(b))),
+        np.asarray(spmm.execute(plan, jnp.asarray(b))), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# hint validation + reorder interaction
+# ---------------------------------------------------------------------------
+def test_explicit_nm_hint_violation_raises(rng):
+    a, rows, cols, vals = make_sparse(rng, 256, 256, density=0.2)
+    cfg = spmm.SpmmConfig(impl="xla", structure_hint=("nm", 1, 32))
+    with pytest.raises(PlanBuildError, match="violates"):
+        spmm.prepare(rows, cols, vals, a.shape, cfg)
+
+
+def test_nm_hint_must_divide_bk(rng):
+    a, rows, cols, vals = make_sparse(rng, 256, 256, density=0.2)
+    cfg = spmm.SpmmConfig(impl="xla", structure_hint=("nm", 1, 5))
+    with pytest.raises(PlanBuildError, match="dividing"):
+        spmm.prepare(rows, cols, vals, a.shape, cfg)
+
+
+def test_structured_hint_incompatible_with_reorder_cols(rng):
+    rows, cols, vals, shape, _ = _nm_problem(rng)
+    cfg = spmm.SpmmConfig(impl="xla", bn=128, reorder_cols=True,
+                          structure_hint="nm")
+    with pytest.raises(PlanBuildError, match="reorder_cols"):
+        spmm.prepare(rows, cols, vals, shape, cfg)
+    # unhinted detection under reorder_cols silently stays general: the
+    # column permutation destroys group-local structure
+    plan = spmm.prepare(rows, cols, vals, shape,
+                        spmm.SpmmConfig(impl="xla", bn=128,
+                                        reorder_cols=True))
+    assert plan.matrix_format == "general"
+
+
+# ---------------------------------------------------------------------------
+# tuner: tile-shape table is demote-only validated
+# ---------------------------------------------------------------------------
+def test_tuned_tile_shape_demote_only():
+    rates = dict(p_matrix=1e9, p_vector=1e8)
+
+    ok = tuner.TunedCostModel(decisions={"tile_shape": [128, 64]}, **rates)
+    assert ok.tile_shape(1000, 1000, 256, 5000) == (128, 64)
+    # the analytic base never overrides the config's tile shape
+    assert EngineCostModel(**rates).tile_shape(1000, 1000, 256, 5000) is None
+    assert tuner.TunedCostModel(decisions={}, **rates).tile_shape(
+        1000, 1000, 256, 5000) is None
+
+    def shape_for(decision, m=1000, k=1000, n=256, nnz=5000):
+        cm = tuner.TunedCostModel(
+            decisions={"tile_shape": decision}, **rates)
+        return cm.tile_shape(m, k, n, nnz)
+
+    # misaligned choices are rejected, never adopted
+    assert shape_for([100, 64]) is None   # bm not MXU-aligned
+    assert shape_for([128, 60]) is None   # bk not sublane-aligned
+    assert shape_for([0, 64]) is None
+    # tiles larger than the padded operand are rejected
+    assert shape_for([128, 256], k=64) is None
+    assert shape_for([256, 64], m=64) is None
+    # a working set past the VMEM budget is rejected
+    assert shape_for([256, 256], m=4096, k=4096, n=100_000) is None
